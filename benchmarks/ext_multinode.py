@@ -1,0 +1,49 @@
+"""BEYOND-PAPER: gang-scheduled (multi-node) distributed-DL jobs.
+
+The paper's conclusion: "It is also worth modifying our algorithm so
+that it can handle the multi-node jobs in distributed DL." Here 15% of
+jobs are gangs of 2 or 4 nodes (per-node demand, all-or-nothing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.paper_tables import OUT_DIR, _scale
+from repro.configs.cluster import SimConfig, WorkloadSpec
+from repro.core import metrics, simulator, workload
+
+
+def multinode_table() -> dict:
+    sc = _scale()
+    wl = WorkloadSpec(n_jobs=sc["n_jobs"], multi_node_frac=0.15)
+    cfg = SimConfig(workload=wl, s=4.0, max_preemptions=1)
+    jobsets = [workload.generate(cfg, seed=1000 * i)
+               for i in range(sc["n_workloads"])]
+    out = {}
+    for pol in ("fifo", "lrtp", "rand", "fitgpp"):
+        results = [simulator.simulate(
+            dataclasses.replace(cfg, policy=pol), js) for js in jobsets]
+        p = metrics.pooled_tables(metrics.merge_results(results))
+        gang_te = np.concatenate(
+            [r.slowdown[(js.n_nodes > 1) & js.is_te]
+             for r, js in zip(results, jobsets)])
+        p["gang_TE_p95"] = float(np.percentile(gang_te, 95))
+        out[pol] = p
+    return out
+
+
+def run_all() -> List[tuple]:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    t0 = time.time()
+    res = multinode_table()
+    with open(os.path.join(OUT_DIR, "ext_multinode.json"), "w") as f:
+        json.dump(res, f, indent=1, default=float)
+    return [("ext_multinode", (time.time() - t0) * 1e6,
+             f"gangTE_p95_fifo={res['fifo']['gang_TE_p95']:.1f};"
+             f"fitgpp={res['fitgpp']['gang_TE_p95']:.2f}")]

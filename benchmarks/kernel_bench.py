@@ -1,0 +1,113 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp oracle.
+
+On this CPU container the numbers time the *oracle* (XLA-compiled) and
+the *interpret-mode* kernel (Python semantics — NOT representative of
+TPU perf); the benchmark's role here is a regression harness for shapes
+and a smoke check that the kernels dispatch. On a TPU host the same
+entry points time the real Mosaic kernels.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_flash_attention() -> List[tuple]:
+    rows = []
+    B, S, H, KV, hd = 1, 512, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    oracle = jax.jit(lambda q, k, v: kref.flash_attention_ref(q, k, v))
+    us_ref = _time(oracle, q, k, v)
+    us_ker = _time(lambda q, k, v: ops.flash_attention(q, k, v), q, k, v)
+    rows.append(("flash_attention_oracle_512", us_ref, f"S={S}"))
+    rows.append(("flash_attention_kernel_512", us_ker, "interpret-mode"))
+    return rows
+
+
+def bench_lru_scan() -> List[tuple]:
+    B, L, R = 2, 1024, 512
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, L, R)))
+    b = jax.random.normal(ks[1], (B, L, R))
+    oracle = jax.jit(lambda a, b: kref.lru_scan_ref(a, b))
+    return [("lru_scan_oracle_1k", _time(oracle, a, b), f"L={L};R={R}"),
+            ("lru_scan_kernel_1k", _time(
+                lambda a, b: ops.lru_scan(a, b), a, b), "interpret-mode")]
+
+
+def bench_fitgpp_score() -> List[tuple]:
+    J = 4096
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    demand = jax.random.uniform(ks[0], (J, 3), minval=1.0, maxval=8.0)
+    free = jax.random.uniform(ks[1], (J, 3), minval=0.0, maxval=8.0)
+    gp = jax.random.uniform(ks[2], (J,), maxval=20.0)
+    run = jax.random.bernoulli(ks[3], 0.8, (J,))
+    under = jnp.ones((J,), bool)
+    te = jnp.array([4.0, 16.0, 4.0])
+    cap = jnp.array([32.0, 256.0, 8.0])
+
+    def oracle(demand, free, gp, run, under):
+        return kref.fitgpp_score_ref(demand, gp, free, te, run, under,
+                                     cap, 4.0)
+
+    j_oracle = jax.jit(oracle)
+    return [
+        ("fitgpp_score_oracle_4k", _time(j_oracle, demand, free, gp, run,
+                                         under), f"J={J}"),
+        ("fitgpp_score_kernel_4k", _time(
+            lambda d, f, g, r, u: ops.fitgpp_select(d, f, g, r, u, te, cap),
+            demand, free, gp, run, under), "interpret-mode"),
+    ]
+
+
+def bench_ssd_chunk() -> List[tuple]:
+    B, L, H, P, N = 1, 512, 2, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    xdt = jax.random.normal(ks[0], (B, L, H, P)) * 0.3
+    loga = -jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    Bm = jax.random.normal(ks[2], (B, L, H, N)) * 0.3
+    Cm = jax.random.normal(ks[3], (B, L, H, N)) * 0.3
+
+    def oracle(xdt, loga, Bm, Cm):
+        Q = 256
+        outs = [kref.ssd_chunk_ref(xdt[:, c * Q:(c + 1) * Q],
+                                   loga[:, c * Q:(c + 1) * Q],
+                                   Bm[:, c * Q:(c + 1) * Q],
+                                   Cm[:, c * Q:(c + 1) * Q])
+                for c in range(L // Q)]
+        import jax.numpy as jnp
+        return jnp.concatenate(outs, axis=1)
+
+    j_oracle = jax.jit(oracle)
+    return [("ssd_chunk_oracle_512", _time(j_oracle, xdt, loga, Bm, Cm),
+             f"L={L};N={N}"),
+            ("ssd_chunk_kernel_512", _time(
+                lambda *a: ops.ssd_chunk(*a), xdt, loga, Bm, Cm),
+             "interpret-mode")]
+
+
+def run_all() -> List[tuple]:
+    rows = []
+    rows += bench_flash_attention()
+    rows += bench_lru_scan()
+    rows += bench_fitgpp_score()
+    rows += bench_ssd_chunk()
+    return rows

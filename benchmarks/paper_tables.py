@@ -1,0 +1,191 @@
+"""Paper-table benchmarks: one function per table/figure of the paper.
+
+Scale: REPRO_BENCH_SCALE=small (default; 2^12 jobs × 2 workloads — CI
+friendly) or full (paper scale: 2^16 jobs × 8 workloads, RAND averaged
+over 4 repeats). All results land in experiments/repro/*.json and are
+summarized by EXPERIMENTS.md §Repro.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.cluster import SimConfig, WorkloadSpec
+from repro.core import metrics, simulator, workload
+
+OUT_DIR = "experiments/repro"
+POLICIES = ("fifo", "lrtp", "rand", "fitgpp")
+
+
+def _scale():
+    full = os.environ.get("REPRO_BENCH_SCALE", "small") == "full"
+    return {
+        "n_jobs": 2 ** 16 if full else 2 ** 12,
+        "n_workloads": 8 if full else 2,
+        "rand_repeats": 4 if full else 1,
+    }
+
+
+def _run_policy(cfg: SimConfig, jobs_list, policy: str, repeats: int = 1):
+    results = []
+    for rep in range(repeats):
+        for jobs in jobs_list:
+            c = dataclasses.replace(cfg, policy=policy, seed=cfg.seed + rep)
+            results.append(simulator.simulate(c, jobs))
+    return metrics.pooled_tables(metrics.merge_results(results))
+
+
+def _gen_workloads(cfg: SimConfig, n: int, trace: bool = False):
+    gen = workload.generate_trace_proxy if trace else workload.generate
+    return [gen(cfg, seed=cfg.seed + 1000 * i) for i in range(n)]
+
+
+def table1_slowdowns() -> Dict:
+    """Table 1 (+ Tables 2/3 from the same runs): synthetic workloads."""
+    sc = _scale()
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"]),
+                    s=4.0, max_preemptions=1)
+    jobs = _gen_workloads(cfg, sc["n_workloads"])
+    out = {}
+    for pol in POLICIES:
+        reps = sc["rand_repeats"] if pol == "rand" else 1
+        out[pol] = _run_policy(cfg, jobs, pol, reps)
+    return out
+
+
+def table4_preemption_counts() -> Dict:
+    """Table 4: P = infinity preemption-count distribution."""
+    sc = _scale()
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"]),
+                    s=4.0, max_preemptions=10 ** 9)
+    jobs = _gen_workloads(cfg, sc["n_workloads"])
+    return {pol: _run_policy(cfg, jobs, pol)
+            for pol in ("lrtp", "rand", "fitgpp")}
+
+
+def table5_trace() -> Dict:
+    """Table 5: heavy-tailed trace PROXY (real PFN trace is private)."""
+    sc = _scale()
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"], load=1.3),
+                    s=4.0, max_preemptions=1)
+    jobs = _gen_workloads(cfg, sc["n_workloads"], trace=True)
+    return {pol: _run_policy(cfg, jobs, pol) for pol in POLICIES}
+
+
+def fig4_s_sensitivity() -> Dict:
+    """Fig. 4: slowdowns vs s (GP relative weight)."""
+    sc = _scale()
+    out = {}
+    for s in (0.0, 1.0, 2.0, 4.0, 8.0):
+        cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"]),
+                        s=s, max_preemptions=1)
+        jobs = _gen_workloads(cfg, sc["n_workloads"])
+        out[str(s)] = _run_policy(cfg, jobs, "fitgpp")
+    return out
+
+
+def fig5_p_sensitivity() -> Dict:
+    """Fig. 5: slowdowns vs P (max preemptions per job)."""
+    sc = _scale()
+    out = {}
+    for P in (1, 2, 4, 16, 10 ** 9):
+        cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"]),
+                        s=4.0, max_preemptions=P)
+        jobs = _gen_workloads(cfg, sc["n_workloads"])
+        out[str(P)] = _run_policy(cfg, jobs, "fitgpp")
+    return out
+
+
+def fig6_te_proportion() -> Dict:
+    """Fig. 6: 95th-pct slowdowns vs TE fraction of the workload."""
+    sc = _scale()
+    out = {}
+    for frac in (0.1, 0.3, 0.5, 0.7):
+        wl = WorkloadSpec(n_jobs=sc["n_jobs"], te_fraction=frac)
+        cfg = SimConfig(workload=wl, s=4.0, max_preemptions=1)
+        jobs = _gen_workloads(cfg, sc["n_workloads"])
+        out[str(frac)] = {pol: _run_policy(cfg, jobs, pol)
+                          for pol in POLICIES}
+    return out
+
+
+def fig7_gp_scale() -> Dict:
+    """Fig. 7: 95th-pct slowdowns vs GP length scale, s in {4, 8}."""
+    sc = _scale()
+    out = {}
+    for scale in (1.0, 2.0, 4.0, 8.0):
+        row = {}
+        wl = WorkloadSpec(n_jobs=sc["n_jobs"], gp_scale=scale)
+        for pol in POLICIES:
+            cfg = SimConfig(workload=wl, s=4.0, max_preemptions=1)
+            jobs = _gen_workloads(cfg, sc["n_workloads"])
+            row[pol] = _run_policy(cfg, jobs, pol)
+        for s in (8.0,):
+            cfg = SimConfig(workload=wl, s=s, max_preemptions=1)
+            jobs = _gen_workloads(cfg, sc["n_workloads"])
+            row[f"fitgpp_s{s:g}"] = _run_policy(cfg, jobs, "fitgpp")
+        out[str(scale)] = row
+    return out
+
+
+ALL = {
+    "table1_slowdowns": table1_slowdowns,
+    "table4_preemption_counts": table4_preemption_counts,
+    "table5_trace": table5_trace,
+    "fig4_s_sensitivity": fig4_s_sensitivity,
+    "fig5_p_sensitivity": fig5_p_sensitivity,
+    "fig6_te_proportion": fig6_te_proportion,
+    "fig7_gp_scale": fig7_gp_scale,
+}
+
+
+def run_all(names=None) -> List[tuple]:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    rows = []
+    for name, fn in ALL.items():
+        if names and name not in names:
+            continue
+        t0 = time.time()
+        res = fn()
+        dt = time.time() - t0
+        with open(os.path.join(OUT_DIR, name + ".json"), "w") as f:
+            json.dump(res, f, indent=1, default=float)
+        derived = _headline(name, res)
+        rows.append((name, dt * 1e6, derived))
+    return rows
+
+
+def _headline(name: str, res: Dict) -> str:
+    try:
+        if name == "table1_slowdowns":
+            drop = 1 - res["fitgpp"]["TE"]["p95"] / res["fifo"]["TE"]["p95"]
+            be = res["fitgpp"]["BE"]["p50"] / res["fifo"]["BE"]["p50"] - 1
+            return f"TE_p95_drop={drop * 100:.1f}%;BE_p50_delta={be * 100:+.1f}%"
+        if name == "table4_preemption_counts":
+            r = res["lrtp"]["preempted_frac"] / \
+                max(res["fitgpp"]["preempted_frac"], 1e-9)
+            return f"lrtp_over_fitgpp_preemptions={r:.1f}x"
+        if name == "table5_trace":
+            be = res["fitgpp"]["BE"]["p50"] / res["fifo"]["BE"]["p50"] - 1
+            return f"trace_BE_p50_delta={be * 100:+.1f}%"
+        if name == "fig4_s_sensitivity":
+            iv0 = res["0.0"]["intervals"]["p50"]
+            iv4 = res["4.0"]["intervals"]["p50"]
+            return f"interval_p50_s0={iv0:.1f};s4={iv4:.1f}"
+        if name == "fig5_p_sensitivity":
+            vals = [res[k]["TE"]["p95"] for k in res]
+            return f"TE_p95_range={max(vals) - min(vals):.3f}"
+        if name == "fig6_te_proportion":
+            return ";".join(f"te{k}={res[k]['fitgpp']['TE']['p95']:.2f}"
+                            for k in res)
+        if name == "fig7_gp_scale":
+            return ";".join(f"gp{k}={res[k]['fitgpp']['TE']['p95']:.2f}"
+                            for k in res)
+    except Exception as e:                                # noqa: BLE001
+        return f"err:{e!r}"
+    return ""

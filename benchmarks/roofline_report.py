@@ -1,0 +1,66 @@
+"""Summarize dry-run artifacts into the §Roofline / §Dry-run tables.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline_report \
+            [--dir experiments/dryrun] [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dir_: str, mesh: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_seconds(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    return f"{x * 1e3:7.2f}ms"
+
+
+def report(rows: List[Dict]) -> str:
+    lines = []
+    hdr = (f"{'arch':20s} {'shape':12s} | {'compute':>9s} {'memory':>9s} "
+           f"{'collect':>9s} | {'dominant':10s} {'useful':>6s} "
+           f"{'peakGB':>7s} {'coll GB/dev':>11s}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for r in rows:
+        roof = r.get("roofline", {})
+        mem = r.get("memory", {})
+        coll = r.get("collectives", {})
+        lines.append(
+            f"{r['arch']:20s} {r['shape']:12s} | "
+            f"{fmt_seconds(roof.get('compute_s', 0))} "
+            f"{fmt_seconds(roof.get('memory_s', 0))} "
+            f"{fmt_seconds(roof.get('collective_s', 0))} | "
+            f"{roof.get('dominant', '-'):10s} "
+            f"{roof.get('useful_ratio', 0):6.2f} "
+            f"{mem.get('peak_gb', 0):7.1f} "
+            f"{coll.get('total', 0) / 1e9:11.2f}")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args(argv)
+    rows = load(args.dir, args.mesh)
+    if not rows:
+        print(f"no artifacts under {args.dir} for mesh={args.mesh}; "
+              "run `python -m repro.launch.dryrun` first")
+        return
+    print(report(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark entry point. One benchmark per paper table/figure plus
+kernel and simulator-engine microbenches.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout). Scale with
+REPRO_BENCH_SCALE=full for paper-scale workloads (2^16 jobs × 8
+workloads); default is a reduced CI-friendly scale.
+
+Roofline terms come from the dry-run artifacts
+(``python -m repro.launch.dryrun``), summarized by
+``python -m benchmarks.roofline_report``.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark-group filter "
+                         "(paper,kernels,sim)")
+    args = ap.parse_args(argv)
+    groups = args.only.split(",") if args.only else ["paper", "kernels",
+                                                     "sim"]
+    rows = []
+    if "paper" in groups:
+        from benchmarks import paper_tables
+        rows += paper_tables.run_all()
+    if "kernels" in groups:
+        from benchmarks import kernel_bench
+        rows += kernel_bench.run_all()
+    if "sim" in groups:
+        from benchmarks import sim_engine_bench
+        rows += sim_engine_bench.run_all()
+    if "ext" in groups or "paper" in groups:
+        from benchmarks import ext_backfill, ext_multinode
+        rows += ext_backfill.run_all()
+        rows += ext_multinode.run_all()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

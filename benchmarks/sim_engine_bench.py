@@ -1,0 +1,40 @@
+"""Simulator-engine benchmarks: reference (numpy) vs JAX engine, plus the
+vmapped sweep throughput that the mesh distribution relies on."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List
+
+import jax
+
+from repro.configs.cluster import SimConfig, WorkloadSpec
+from repro.core import sim_jax, simulator, sweep, workload
+
+
+def run_all() -> List[tuple]:
+    rows = []
+    n = 2048
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=n), policy="fitgpp")
+    jobs = workload.generate(cfg)
+
+    t0 = time.perf_counter()
+    simulator.simulate(cfg, jobs)
+    rows.append(("sim_reference_2k", (time.perf_counter() - t0) * 1e6,
+                 "numpy heaps"))
+
+    jj = sim_jax.jobs_from_jobset(jobs)
+    st = sim_jax.run_jit(cfg, jj, 0)           # compile
+    st.t.block_until_ready()
+    t0 = time.perf_counter()
+    st = sim_jax.run_jit(cfg, jj, 0)
+    st.t.block_until_ready()
+    rows.append(("sim_jax_2k", (time.perf_counter() - t0) * 1e6,
+                 "lax.while_loop"))
+
+    t0 = time.perf_counter()
+    out = sweep.sensitivity_grid(cfg, 512, s_vals=[0.0, 2.0, 4.0, 8.0],
+                                 seeds=[0, 1])
+    rows.append(("sim_sweep_8trials", (time.perf_counter() - t0) * 1e6,
+                 "vmap(8 sims)"))
+    return rows

@@ -1,0 +1,49 @@
+"""Reproduce the paper's Table 1 / 2 / 3 (reduced scale by default).
+
+Run:  PYTHONPATH=src python examples/cluster_simulation.py [--jobs 8192]
+      add --full for paper scale (2^16 jobs, slow).
+"""
+import argparse
+import dataclasses
+
+from repro.configs.cluster import SimConfig, WorkloadSpec
+from repro.core import metrics, simulator, workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=4096)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--workloads", type=int, default=2)
+    args = ap.parse_args()
+    n = 2 ** 16 if args.full else args.jobs
+
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=n), s=4.0,
+                    max_preemptions=1)
+    jobsets = [workload.generate(cfg, seed=1000 * i)
+               for i in range(args.workloads)]
+
+    rows, pooled = {}, {}
+    for pol in ("fifo", "lrtp", "rand", "fitgpp"):
+        results = [simulator.simulate(
+            dataclasses.replace(cfg, policy=pol), js) for js in jobsets]
+        p = metrics.pooled_tables(metrics.merge_results(results))
+        rows[pol] = {"TE": p["TE"], "BE": p["BE"]}
+        pooled[pol] = p
+
+    print(metrics.format_table(rows, f"Table 1 — slowdown percentiles "
+                                     f"({n} jobs x {args.workloads})"))
+    print("\nTable 2 — preemption->reschedule intervals [min]")
+    for pol in ("lrtp", "rand", "fitgpp"):
+        iv = pooled[pol]["intervals"]
+        print(f"  {pol:8s} p50={iv['p50']:.1f} p75={iv['p75']:.1f} "
+              f"p95={iv['p95']:.1f} p99={iv['p99']:.1f}")
+    print("\nTable 3 — proportion of preempted jobs (P=1)")
+    for pol in ("lrtp", "rand", "fitgpp"):
+        print(f"  {pol:8s} {pooled[pol]['preempted_frac'] * 100:6.2f}%")
+    print("\npaper claims: FitGpp cuts TE p95 by 96.6% vs FIFO, halves the")
+    print("re-scheduling intervals, and preempts ~15x fewer jobs than LRTP.")
+
+
+if __name__ == "__main__":
+    main()

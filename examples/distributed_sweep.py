@@ -1,0 +1,41 @@
+"""Fig. 4 sensitivity sweep on the JAX simulation engine.
+
+Every (s, seed) trial is an independent pure-JAX simulation
+(lax.while_loop), so the sweep vmaps and — on a real mesh — shards over
+the ``data`` axis (core/sweep.py). On this CPU container it runs on the
+1-device local mesh; on a pod the same code spreads 256 trials across
+256 chips.
+
+Run:  PYTHONPATH=src python examples/distributed_sweep.py
+"""
+import numpy as np
+
+from repro.configs.cluster import SimConfig, WorkloadSpec
+from repro.core import sweep
+from repro.launch.mesh import make_local_mesh
+
+
+def main():
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=1024, gp_scale=2.0),
+                    policy="fitgpp", max_preemptions=1)
+    s_vals = [0.0, 1.0, 2.0, 4.0, 8.0]
+    seeds = [0, 1]
+    mesh = make_local_mesh()
+    out = sweep.sensitivity_grid(cfg, 1024, s_vals, seeds, mesh=mesh)
+
+    print("Fig. 4 — FitGpp sensitivity to s (GP weight), gp_scale=2.0")
+    print(f"{'s':>5s} | {'TE p95':>8s} {'TE p99':>8s} | {'BE p50':>8s} "
+          f"| {'interval p50':>12s}")
+    for i, s in enumerate(s_vals):
+        te95 = np.nanmean(out["te_slowdown"][i, :, 1])
+        te99 = np.nanmean(out["te_slowdown"][i, :, 2])
+        be50 = np.nanmean(out["be_slowdown"][i, :, 0])
+        iv50 = np.nanmean(out["intervals"][i, :, 0])
+        print(f"{s:5.1f} | {te95:8.2f} {te99:8.2f} | {be50:8.2f} "
+              f"| {iv50:12.1f}")
+    print("\npaper Fig. 4: TE slowdown falls with s and saturates by "
+          "s in [4, 8]; BE slowdown is s-independent.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Measure one (arch x shape): roofline terms + top collectives."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, "src")
+from repro.launch.dryrun import lower_one
+from repro.launch.mesh import make_production_mesh
+
+arch, shape = sys.argv[1], sys.argv[2]
+mesh = make_production_mesh(multi_pod=False)
+res = lower_one(arch, shape, mesh)
+r = res["roofline"]; m = res["memory"]; c = res["collectives"]
+print(f"{arch} x {shape}:")
+print(f"  terms: compute={r['compute_s']*1e3:.2f}ms memory={r['memory_s']*1e3:.2f}ms "
+      f"collective={r['collective_s']*1e3:.2f}ms dominant={r['dominant']}")
+print(f"  peak={m['peak_gb']:.1f}GB temp={m['temp_gb']:.1f}GB coll_total={c['total']/1e9:.2f}GB/dev")
+print(f"  hlo_flops_raw={res['cost_analysis']['flops']:.3e}")
+for d in res["top_collectives"]:
+    print(f"   {d['gb']:8.3f}GB x{d['mult']:5.0f} {d['kind']:15s} {d['op'][:110]}")

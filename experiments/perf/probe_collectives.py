@@ -1,0 +1,92 @@
+"""List top collectives (bytes x loop multiplicity) for one dry-run pair."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, sys
+sys.path.insert(0, "src")
+import jax
+from repro import models, trainer
+from repro.configs import INPUT_SHAPES
+from repro.launch.dryrun import variant_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rf
+from repro.optim import AdamWConfig
+from repro.sharding import plans
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+cfg = variant_config(arch, shape_name)
+shape = INPUT_SHAPES[shape_name]
+mesh = make_production_mesh(multi_pod=False)
+plan = plans.arch_plan(cfg, shape, mesh)
+ocfg = AdamWConfig(moment_dtype=plan.opt_dtype)
+
+if shape.kind == "train":
+    state_abs = trainer.abstract_train_state(cfg, ocfg)
+    batch_abs = models.input_specs(cfg, shape.global_batch, shape.seq_len, "train")
+    state_sh = plans.train_state_sharding(cfg, plan, mesh, state_abs)
+    batch_sh = plans.batch_sharding(batch_abs, plan, mesh)
+    fn = trainer.make_train_step(cfg, ocfg, plan.microbatches)
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                           donate_argnums=(0,)).lower(state_abs, batch_abs).compile()
+else:
+    params_abs = models.abstract_params(cfg)
+    cache_abs = models.init_decode_cache(cfg, shape.global_batch, shape.seq_len, abstract=True)
+    tok_abs = models.input_specs(cfg, shape.global_batch, shape.seq_len, "decode")
+    p_sh = plans.param_sharding(cfg, plan, mesh)
+    c_sh = plans.cache_sharding(cfg, plan, mesh, cache_abs)
+    t_sh = plans.batch_sharding(tok_abs, plan, mesh)
+    def decode_fn(params, cache, batch):
+        return models.serve_step(cfg, params, cache, batch["tokens"])
+    with mesh:
+        compiled = jax.jit(decode_fn, in_shardings=(p_sh, c_sh, t_sh),
+                           donate_argnums=(1,)).lower(params_abs, cache_abs, tok_abs).compile()
+
+txt = compiled.as_text()
+# reuse the roofline parser internals but keep per-op detail
+import collections
+comps = {}
+current = None
+for line in txt.splitlines():
+    m = rf._COMP_RE.match(line.strip()) if "{" in line and "->" in line else None
+    if m and not line.strip().startswith("ROOT"):
+        current = m.group(1); comps[current] = []
+    elif current is not None:
+        comps[current].append(line)
+    if line.strip() == "}": current = None
+entry = None
+for name in comps:
+    if "main" in name or name.startswith("jit_"): entry = entry or name
+if entry is None: entry = next(iter(comps))
+mult = {n: 0.0 for n in comps}; mult[entry] = 1.0
+edges = []
+for name, lines in comps.items():
+    for line in lines:
+        wm = rf._WHILE_RE.search(line)
+        if wm:
+            trip = 1
+            tm = rf._TRIP_RE.search(line)
+            if tm: trip = int(tm.group(1))
+            edges.append((name, wm.group(2), float(trip)))
+            edges.append((name, wm.group(1), float(trip)+1)); continue
+        cm = rf._CALL_RE.search(line)
+        if cm: edges.append((name, cm.group(1), 1.0))
+for _ in range(32):
+    new = {n: 0.0 for n in comps}; new[entry] = 1.0
+    for p, c, f in edges:
+        if p in mult and c in new: new[c] += mult[p]*f
+    if all(abs(new[k]-mult[k])<1e-9 for k in mult): break
+    mult = new
+rows = []
+for name, lines in comps.items():
+    m = mult.get(name, 1.0)
+    for line in lines:
+        for kind, factor in rf._COLLECTIVE_FACTOR.items():
+            if re.search(rf"=\s+\S+\s+{kind}(-start)?\(", line):
+                b = rf._shape_bytes(line.split("=",1)[1].split("(",1)[0])
+                rows.append((b*factor*m, kind, m, line.strip()[:180]))
+                break
+rows.sort(reverse=True)
+total = sum(r[0] for r in rows)
+print(f"TOTAL collective bytes/dev: {total/1e9:.2f} GB  ({len(rows)} ops)")
+for b, kind, m, line in rows[:15]:
+    print(f"{b/1e9:8.3f} GB  x{m:5.0f}  {kind:18s} {line[:140]}")

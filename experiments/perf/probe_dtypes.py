@@ -1,0 +1,30 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, sys
+sys.path.insert(0, "src")
+import jax
+from repro import models, trainer
+from repro.configs import INPUT_SHAPES
+from repro.launch.dryrun import variant_config
+from repro.launch.mesh import make_production_mesh
+from repro.optim import AdamWConfig
+from repro.sharding import plans, constraints
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+cfg = variant_config(arch, shape_name)
+shape = INPUT_SHAPES[shape_name]
+mesh = make_production_mesh(multi_pod=False)
+plan = plans.arch_plan(cfg, shape, mesh)
+constraints.set_strategy(plan.strategy)
+ocfg = AdamWConfig(moment_dtype=plan.opt_dtype)
+state_abs = trainer.abstract_train_state(cfg, ocfg)
+batch_abs = models.input_specs(cfg, shape.global_batch, shape.seq_len, "train")
+state_sh = plans.train_state_sharding(cfg, plan, mesh, state_abs)
+batch_sh = plans.batch_sharding(batch_abs, plan, mesh)
+fn = trainer.make_train_step(cfg, ocfg, plan.microbatches)
+with mesh:
+    low = jax.jit(fn, in_shardings=(state_sh, batch_sh), donate_argnums=(0,)).lower(state_abs, batch_abs)
+txt = low.as_text()  # stablehlo
+from collections import Counter
+types = Counter(re.findall(r"stablehlo\.dot_general.*?->\s*tensor<[\dx]*(\w+)>", txt))
+print("stablehlo dot_general result dtypes:", dict(types))

@@ -1,0 +1,5 @@
+from repro.checkpoint.ckpt import (estimate_grace_period, load_pytree,
+                                   save_pytree, state_bytes)
+
+__all__ = ["save_pytree", "load_pytree", "state_bytes",
+           "estimate_grace_period"]

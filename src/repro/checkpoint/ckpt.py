@@ -1,0 +1,87 @@
+"""Checkpointing: pytree save/restore + grace-period estimation.
+
+This is the substrate behind checkpoint-based preemption (the paper's
+grace period, §2): suspending a training job = flushing
+(params, opt_state, step, data cursor) to storage; the GP a job should
+request is ``state_bytes / storage_bandwidth`` plus serialization slack.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+_SEP = "§"
+
+
+def _flatten_with_paths(tree: Pytree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_pytree(tree: Pytree, path: str) -> int:
+    """Write a pytree to ``path`` (.npz). Returns bytes written."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays, _ = _flatten_with_paths(tree)
+    # bfloat16 has no numpy dtype serialization — view as uint16 + marker
+    packed = {}
+    meta = {}
+    for k, v in arrays.items():
+        if v.dtype == jax.numpy.bfloat16:
+            packed[k] = v.view(np.uint16)
+            meta[k] = "bfloat16"
+        else:
+            packed[k] = v
+    np.savez(path, __meta__=json.dumps(meta), **packed)
+    return os.path.getsize(path)
+
+
+def load_pytree(template: Pytree, path: str) -> Pytree:
+    """Restore a pytree saved by save_pytree; ``template`` fixes shape."""
+    with np.load(path, allow_pickle=False) as data:
+        meta = json.loads(str(data["__meta__"]))
+        arrays = {}
+        for k in data.files:
+            if k == "__meta__":
+                continue
+            v = data[k]
+            if meta.get(k) == "bfloat16":
+                v = v.view(jax.numpy.bfloat16)
+            arrays[k] = v
+    flat, treedef = _flatten_with_paths(template)
+    missing = set(flat) - set(arrays)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_tpl, tdef = jax.tree_util.tree_flatten(template)
+    flat_paths, _ = jax.tree_util.tree_flatten_with_path(template)
+    keys = [_SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in flat_paths]
+    leaves = [jax.numpy.asarray(arrays[k]) for k in keys]
+    return jax.tree_util.tree_unflatten(tdef, leaves)
+
+
+def state_bytes(tree: Pytree) -> int:
+    return int(sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree)))
+
+
+def estimate_grace_period(tree: Pytree, storage_bw_bytes_per_s: float = 2e9,
+                          slack: float = 1.5) -> float:
+    """Suggested grace period [minutes] for a job with this train state.
+
+    The paper motivates long GPs by serialization + writeback of large
+    states; we estimate GP = slack * bytes / bandwidth, floor
+    one scheduler tick when nonzero.
+    """
+    b = state_bytes(tree)
+    seconds = slack * b / storage_bw_bytes_per_s
+    return max(math.ceil(seconds / 60.0), 1) if b else 0

@@ -1,0 +1,62 @@
+"""Config registry: ``--arch <id>`` resolution for all assigned archs."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    EncoderConfig,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    ParallelismPlan,
+    RecurrentConfig,
+    SSMConfig,
+    VLMConfig,
+)
+
+# arch id -> module name
+_ARCH_MODULES: Dict[str, str] = {
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "internvl2-2b": "internvl2_2b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "command-r-35b": "command_r_35b",
+    "whisper-large-v3": "whisper_large_v3",
+    "stablelm-12b": "stablelm_12b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "mistral-large-123b": "mistral_large_123b",
+}
+
+# (arch, shape) pairs that are skipped by design; see DESIGN.md §6.
+SHAPE_SKIPS = {
+    ("whisper-large-v3", "long_500k"):
+        "enc-dec ASR; decoder capped at 448 tokens — 524k-token decode "
+        "context is meaningless for the family",
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_ARCH_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {list_archs()}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    """Full published config for ``--arch <id>``."""
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests."""
+    return _module(arch).smoke_config()
+
+
+def shape_is_supported(arch: str, shape: str) -> bool:
+    return (arch, shape) not in SHAPE_SKIPS

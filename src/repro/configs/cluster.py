@@ -1,0 +1,117 @@
+"""Cluster + workload configuration for the FitGpp simulation (paper §4).
+
+The node shape and the exec-time / GP distributions are from the paper.
+The per-class resource-demand distributions are NOT published (paper
+Fig. 2 plots a private trace); the values below are our documented
+choices for a DL cluster and are treated as sensitivity knobs — the
+reproduction targets the paper's *relative* claims (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class NodeSpec:
+    """One node: capacities for (CPU cores, RAM GB, GPUs). Paper §4.1."""
+    cpu: float = 32.0
+    ram: float = 256.0
+    gpu: float = 8.0
+
+    def as_tuple(self) -> Tuple[float, float, float]:
+        return (self.cpu, self.ram, self.gpu)
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    n_nodes: int = 84                 # paper §4.1
+    node: NodeSpec = field(default_factory=NodeSpec)
+
+
+@dataclass(frozen=True)
+class TruncNormal:
+    """Normal(mean, std) truncated to [lo, hi]; sampled by resampling."""
+    mean: float
+    std: float
+    lo: float
+    hi: float
+
+
+@dataclass(frozen=True)
+class ClassDists:
+    """Per-class (TE or BE) job distributions."""
+    exec_min: TruncNormal             # execution time [minutes]
+    cpu: TruncNormal
+    ram: TruncNormal
+    gpu: TruncNormal
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Synthetic workload per paper §4.2.
+
+    Exec-time means/truncations are the paper's (TE 5'/30', BE 30'/24h).
+    Stds are unpublished; we use mean-sized stds. Resource demands are
+    our documented choices (TE jobs small, BE jobs larger — consistent
+    with the paper's narrative that large-demand victims cause
+    head-of-line blocking).
+    """
+    n_jobs: int = 2 ** 16
+    te_fraction: float = 0.30         # paper: ~30% of jobs are TE
+    load: float = 2.0                 # FIFO-normalized cluster load
+    # Calibrated so the FIFO baseline and the preemptive-policy relative
+    # numbers land in the paper's regime (see EXPERIMENTS.md §Repro):
+    # TE jobs are short (paper: mean 5', trunc 30') but NOT resource-small
+    # (debugging a distributed job needs the same GPUs); BE demands are
+    # wide (median 2 GPUs, tail to whole-node).
+    te: ClassDists = field(default_factory=lambda: ClassDists(
+        exec_min=TruncNormal(5.0, 5.0, 1.0, 30.0),
+        cpu=TruncNormal(4.0, 4.0, 1.0, 32.0),
+        ram=TruncNormal(16.0, 16.0, 1.0, 256.0),
+        gpu=TruncNormal(5.0, 2.5, 0.0, 8.0),
+    ))
+    be: ClassDists = field(default_factory=lambda: ClassDists(
+        exec_min=TruncNormal(30.0, 30.0, 3.0, 1440.0),
+        cpu=TruncNormal(8.0, 6.0, 1.0, 32.0),
+        ram=TruncNormal(48.0, 48.0, 1.0, 256.0),
+        gpu=TruncNormal(3.0, 2.5, 0.0, 8.0),
+    ))
+    # GPU requests snap to the allocation granularity DL users actually
+    # ask for; this is what packs nodes tightly enough that TE arrivals
+    # need preemption at all (see EXPERIMENTS.md §Repro).
+    gpu_quanta: Tuple[float, ...] = (0.0, 1.0, 2.0, 4.0, 8.0)
+    # GP ~ N(3, 3) truncated [0, 20] minutes (paper: mean 3, trunc 20).
+    gp_min: TruncNormal = field(
+        default_factory=lambda: TruncNormal(3.0, 3.0, 0.0, 20.0))
+    gp_scale: float = 1.0             # Fig. 7 sweeps {1, 2, 4, 8}
+    # BEYOND-PAPER (paper future work: "multi-node jobs in distributed
+    # DL"): fraction of jobs that are gangs, widths drawn from
+    # multi_node_widths. 0.0 = the paper's single-task model.
+    multi_node_frac: float = 0.0
+    multi_node_widths: Tuple[int, ...] = (2, 4)
+
+    def scaled_gp(self) -> TruncNormal:
+        s = self.gp_scale
+        g = self.gp_min
+        return TruncNormal(g.mean * s, g.std * s, g.lo, g.hi * s)
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    cluster: ClusterSpec = field(default_factory=ClusterSpec)
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
+    policy: str = "fitgpp"            # fifo | lrtp | rand | fitgpp
+    s: float = 4.0                    # Eq. 3 GP weight
+    max_preemptions: int = 1          # P (paper uses 1; Fig. 5 sweeps)
+    seed: int = 0
+    tick_minutes: float = 1.0
+    # BEYOND-PAPER (the paper's "non-FIFO settings" future work): allow
+    # queued BE jobs behind a blocked head to start when they fit
+    # (first-fit backfill, bounded scan depth). FIFO arrival order is
+    # still the primary key; this only relaxes head-of-line blocking.
+    backfill: bool = False
+    backfill_depth: int = 64
+
+
+PAPER_SIM = SimConfig()

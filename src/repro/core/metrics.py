@@ -1,0 +1,79 @@
+"""Slowdown-rate metrics and paper-table summarization."""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+from repro.core.types import SimResult
+
+
+def percentiles(x: np.ndarray, ps=(50, 95, 99)) -> Dict[str, float]:
+    if len(x) == 0:
+        return {f"p{p}": float("nan") for p in ps}
+    return {f"p{p}": float(np.percentile(x, p)) for p in ps}
+
+
+def slowdown_table(res: SimResult) -> Dict[str, Dict[str, float]]:
+    """Table 1 / Table 5 row: slowdown percentiles for TE and BE."""
+    sd = res.slowdown
+    return {
+        "TE": percentiles(sd[res.is_te]),
+        "BE": percentiles(sd[~res.is_te]),
+    }
+
+
+def resched_table(res: SimResult) -> Dict[str, float]:
+    """Table 2 row: re-scheduling interval percentiles [min]."""
+    iv = res.resched_intervals
+    return percentiles(iv, ps=(50, 75, 95, 99))
+
+
+def merge_results(results: Iterable[SimResult]) -> Dict[str, np.ndarray]:
+    """Pool per-job stats across workloads (paper pools 8 workloads)."""
+    sd, te, pc, iv = [], [], [], []
+    for r in results:
+        sd.append(r.slowdown)
+        te.append(r.is_te)
+        pc.append(r.preempt_count)
+        iv.append(r.resched_intervals)
+    return {
+        "slowdown": np.concatenate(sd),
+        "is_te": np.concatenate(te),
+        "preempt_count": np.concatenate(pc),
+        "intervals": np.concatenate(iv) if iv else np.asarray([]),
+    }
+
+
+def pooled_tables(pool: Dict[str, np.ndarray]) -> Dict:
+    sd, te = pool["slowdown"], pool["is_te"]
+    pc = pool["preempt_count"][~te]
+    n_be = max(len(pc), 1)
+    return {
+        "TE": percentiles(sd[te]),
+        "BE": percentiles(sd[~te]),
+        "intervals": percentiles(pool["intervals"], ps=(50, 75, 95, 99)),
+        "preempted_frac": float((pc > 0).mean()) if len(pc) else 0.0,
+        "preempt_counts": {
+            "1": float((pc == 1).sum()) / n_be,
+            "2": float((pc == 2).sum()) / n_be,
+            ">=3": float((pc >= 3).sum()) / n_be,
+        },
+    }
+
+
+def format_table(rows: Dict[str, Dict], title: str = "") -> str:
+    """rows: policy -> {'TE': {p50..}, 'BE': {...}} -> aligned text."""
+    lines = []
+    if title:
+        lines.append(title)
+    hdr = f"{'policy':12s} | {'TE p50':>8s} {'p95':>8s} {'p99':>8s} | " \
+          f"{'BE p50':>8s} {'p95':>8s} {'p99':>8s}"
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for name, r in rows.items():
+        te, be = r["TE"], r["BE"]
+        lines.append(
+            f"{name:12s} | {te['p50']:8.2f} {te['p95']:8.2f} {te['p99']:8.2f}"
+            f" | {be['p50']:8.2f} {be['p95']:8.2f} {be['p99']:8.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,158 @@
+"""Preemption policies: FitGpp (the paper, Eq. 1-4), LRTP, RAND, FIFO.
+
+A policy answers ONE question: given an incoming TE job that does not
+fit anywhere, which running BE job(s) should be signalled to vacate?
+
+All policies here operate on plain numpy views of the simulator state so
+the reference simulator stays transparent; ``core/sim_jax.py`` mirrors
+the same equations in jnp (and ``kernels/fitgpp_score.py`` is the
+TPU-kernel version of the FitGpp score + masked argmin).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+
+def size_eq1(demand: np.ndarray, node_cap: np.ndarray) -> np.ndarray:
+    """Eq. 1: scale-invariant demand size, ||D / capacity||_2.
+
+    demand (..., 3); node_cap (3,).
+    """
+    return np.sqrt(np.sum((demand / node_cap) ** 2, axis=-1))
+
+
+def fitgpp_scores(demand: np.ndarray, gp: np.ndarray, node_cap: np.ndarray,
+                  s: float) -> np.ndarray:
+    """Eq. 3 over the set of running BE jobs.
+
+    Normalizers are max over ALL running BE jobs (the paper's J), not
+    just the eligible subset.
+    """
+    sz = size_eq1(demand, node_cap)
+    max_sz = max(sz.max(initial=0.0), 1e-12)
+    max_gp = max(gp.max(initial=0), 1e-12)
+    return sz / max_sz + s * (gp / max_gp)
+
+
+def eligible_eq2(te_demand: np.ndarray, demand: np.ndarray,
+                 node_free: np.ndarray) -> np.ndarray:
+    """Eq. 2: D_TE <= D_j + N_free(node_j), element-wise, per job.
+
+    demand (m, 3) of running BE jobs; node_free (m, 3) free vector of the
+    node each candidate runs on.
+    """
+    return np.all(te_demand[None, :] <= demand + node_free, axis=1)
+
+
+@dataclass
+class Selection:
+    """Victims to signal. Empty = policy could not free enough."""
+    victims: List[int]
+
+
+class Policy:
+    name = "base"
+    preemptive = True
+
+    def select(self, rng, te_demand, cand_ids, cand_demand, cand_node_free,
+               cand_gp, cand_remaining, under_cap, all_run_demand,
+               all_run_gp, node_cap, free_by_node, cand_node) -> List[int]:
+        """Return victim job indices (into the global job array).
+
+        cand_* arrays cover ALL currently running BE jobs; ``under_cap``
+        marks those with PreemptionCount < P. ``all_run_*`` equal cand_*
+        (kept explicit: Eq. 3 normalizes over all running BE jobs).
+        """
+        raise NotImplementedError
+
+
+class FifoPolicy(Policy):
+    name = "fifo"
+    preemptive = False
+
+    def select(self, *a, **k) -> List[int]:
+        return []
+
+
+class FitGppPolicy(Policy):
+    """The paper's algorithm (Eq. 1-4)."""
+    name = "fitgpp"
+
+    def __init__(self, s: float = 4.0):
+        self.s = s
+
+    def select(self, rng, te_demand, cand_ids, cand_demand, cand_node_free,
+               cand_gp, cand_remaining, under_cap, all_run_demand,
+               all_run_gp, node_cap, free_by_node, cand_node) -> List[int]:
+        if len(cand_ids) == 0:
+            return []
+        scores = fitgpp_scores(all_run_demand, all_run_gp, node_cap, self.s)
+        elig = eligible_eq2(te_demand, cand_demand, cand_node_free)
+        mask = elig & under_cap
+        if mask.any():
+            # Eq. 4: argmin score among eligible, under the P cap.
+            masked = np.where(mask, scores, np.inf)
+            return [int(cand_ids[int(np.argmin(masked))])]
+        # Fallback (paper): preempt a random running BE job; the simulator
+        # re-invokes the policy if that did not make enough room.
+        pick = int(rng.integers(len(cand_ids)))
+        return [int(cand_ids[pick])]
+
+
+class LrtpPolicy(Policy):
+    """Big-C's policy: Longest Remaining Time Preemption (oracle runtime).
+
+    Keeps preempting, longest-remaining first, until some node could fit
+    the TE job (free + signalled victims' demand on that node).
+    """
+    name = "lrtp"
+
+    def select(self, rng, te_demand, cand_ids, cand_demand, cand_node_free,
+               cand_gp, cand_remaining, under_cap, all_run_demand,
+               all_run_gp, node_cap, free_by_node, cand_node) -> List[int]:
+        return _preempt_until_fits(
+            order=np.argsort(-cand_remaining, kind="stable"),
+            te_demand=te_demand, cand_ids=cand_ids, cand_demand=cand_demand,
+            cand_node=cand_node, under_cap=under_cap,
+            free_by_node=free_by_node, rng=rng)
+
+
+class RandPolicy(Policy):
+    name = "rand"
+
+    def select(self, rng, te_demand, cand_ids, cand_demand, cand_node_free,
+               cand_gp, cand_remaining, under_cap, all_run_demand,
+               all_run_gp, node_cap, free_by_node, cand_node) -> List[int]:
+        return _preempt_until_fits(
+            order=rng.permutation(len(cand_ids)),
+            te_demand=te_demand, cand_ids=cand_ids, cand_demand=cand_demand,
+            cand_node=cand_node, under_cap=under_cap,
+            free_by_node=free_by_node, rng=rng)
+
+
+def _preempt_until_fits(order, te_demand, cand_ids, cand_demand, cand_node,
+                        under_cap, free_by_node, rng) -> List[int]:
+    """Walk candidates in ``order`` (P-capped first), accumulating pending
+    frees per node, until the TE job fits on some node."""
+    pending = free_by_node.copy()
+    victims: List[int] = []
+    # candidates under the cap first; over-cap ones as a last resort
+    ordered = [i for i in order if under_cap[i]] + \
+              [i for i in order if not under_cap[i]]
+    for i in ordered:
+        node = int(cand_node[i])
+        pending[node] += cand_demand[i]
+        victims.append(int(cand_ids[i]))
+        if np.all(te_demand <= pending[node]):
+            return victims
+    return victims   # even preempting everyone wasn't enough
+
+
+def make_policy(name: str, s: float = 4.0) -> Policy:
+    if name == "fitgpp":
+        return FitGppPolicy(s)
+    return {"fifo": FifoPolicy, "rand": RandPolicy,
+            "lrtp": LrtpPolicy}[name]()

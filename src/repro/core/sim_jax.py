@@ -1,0 +1,457 @@
+"""The FitGpp scheduler as a pure-JAX module.
+
+Fixed-capacity struct-of-arrays state, ``lax.while_loop`` tick loop,
+bounded inner while-loops for the schedule-until-blocked phases, and
+vectorized Eq. 1-4 victim selection (masked argmin). ``jit``-able and
+``vmap``-able over trials, which is what lets the sensitivity sweeps
+(Figs. 4-7) distribute over the production mesh with ``shard_map``
+(see core/sweep.py).
+
+Parity: semantics mirror ``core/simulator.py`` tick-for-tick for the
+deterministic policies (fifo / lrtp / fitgpp-without-fallback); the
+random fallback and RAND use a jax PRNG and are excluded from exact
+parity (property-tested statistically instead).
+
+The per-event FitGpp scoring (Eq. 3) at large J is the hot loop this
+module exposes to the ``fitgpp_score`` Pallas kernel; here it is plain
+jnp so the engine runs anywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.cluster import SimConfig
+from repro.core.types import JobSet
+
+NOT_ARRIVED, QUEUED, RUNNING, GRACE, DONE = 0, 1, 2, 3, 4
+_INF = jnp.inf
+_EPS = 1e-9
+
+
+class Jobs(NamedTuple):
+    """Static workload arrays (device-resident)."""
+    submit: jax.Array        # (N,) i32
+    exec_total: jax.Array    # (N,) i32
+    demand: jax.Array        # (N, 3) f32
+    is_te: jax.Array         # (N,) bool
+    gp: jax.Array            # (N,) i32
+
+
+class State(NamedTuple):
+    t: jax.Array
+    state: jax.Array         # (N,) i32
+    remaining: jax.Array     # (N,) i32
+    node: jax.Array          # (N,) i32
+    preempt_count: jax.Array
+    grace_left: jax.Array
+    queue_key: jax.Array     # (N,) f32, +inf when not queued
+    top_key: jax.Array       # () f32
+    finish: jax.Array
+    te_pending: jax.Array
+    victim_of: jax.Array
+    free: jax.Array          # (nodes, 3) f32
+    pending_free: jax.Array
+    last_signal: jax.Array   # (N,) i32 metrics
+    last_vacate: jax.Array
+    last_resume: jax.Array
+    awaiting_resume: jax.Array   # (N,) bool
+    n_done: jax.Array
+    rng: jax.Array
+
+
+def jobs_from_jobset(js: JobSet) -> Jobs:
+    if js.n_nodes is not None and (np.asarray(js.n_nodes) != 1).any():
+        raise NotImplementedError(
+            "the JAX engine models single-node jobs; gang scheduling "
+            "(multi-node, paper future work) lives in core/simulator.py")
+    return Jobs(
+        submit=jnp.asarray(js.submit, jnp.int32),
+        exec_total=jnp.asarray(js.exec_total, jnp.int32),
+        demand=jnp.asarray(js.demand, jnp.float32),
+        is_te=jnp.asarray(js.is_te, bool),
+        gp=jnp.asarray(js.gp, jnp.int32),
+    )
+
+
+def init_state(jobs: Jobs, n_nodes: int, node_cap, seed) -> State:
+    N = jobs.submit.shape[0]
+    cap = jnp.asarray(node_cap, jnp.float32)
+    return State(
+        t=jnp.zeros((), jnp.int32),
+        state=jnp.zeros((N,), jnp.int32),
+        remaining=jobs.exec_total.astype(jnp.int32),
+        node=jnp.full((N,), -1, jnp.int32),
+        preempt_count=jnp.zeros((N,), jnp.int32),
+        grace_left=jnp.zeros((N,), jnp.int32),
+        queue_key=jnp.full((N,), _INF, jnp.float32),
+        top_key=jnp.asarray(-1.0, jnp.float32),
+        finish=jnp.full((N,), -1, jnp.int32),
+        te_pending=jnp.zeros((N,), jnp.int32),
+        victim_of=jnp.full((N,), -1, jnp.int32),
+        free=jnp.tile(cap[None, :], (n_nodes, 1)),
+        pending_free=jnp.zeros((n_nodes, 3), jnp.float32),
+        last_signal=jnp.full((N,), -1, jnp.int32),
+        last_vacate=jnp.full((N,), -1, jnp.int32),
+        last_resume=jnp.full((N,), -1, jnp.int32),
+        awaiting_resume=jnp.zeros((N,), bool),
+        n_done=jnp.zeros((), jnp.int32),
+        rng=seed if (isinstance(seed, jax.Array)
+                     and jnp.issubdtype(seed.dtype, jax.dtypes.prng_key))
+        else jax.random.key(seed),
+    )
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def _first_fit(free: jax.Array, d: jax.Array) -> jax.Array:
+    fits = jnp.all(free >= d[None, :] - _EPS, axis=1)
+    return jnp.where(fits.any(), jnp.argmax(fits), -1).astype(jnp.int32)
+
+
+def _onehot(N: int, j: jax.Array) -> jax.Array:
+    return jnp.arange(N) == j
+
+
+def _place(st: State, jobs: Jobs, j: jax.Array, node: jax.Array) -> State:
+    """Start job j on node (both scalars; assumes it fits)."""
+    N = jobs.submit.shape[0]
+    oh = _onehot(N, j)
+    resumed = st.awaiting_resume[j]
+    return st._replace(
+        state=jnp.where(oh, RUNNING, st.state),
+        node=jnp.where(oh, node, st.node),
+        queue_key=jnp.where(oh, _INF, st.queue_key),
+        free=st.free.at[node].add(-jobs.demand[j]),
+        last_resume=jnp.where(oh & resumed, st.t, st.last_resume),
+        awaiting_resume=st.awaiting_resume & ~oh,
+    )
+
+
+def _signal_one(st: State, jobs: Jobs, v: jax.Array, te: jax.Array) -> State:
+    """Signal preemption of running BE job v for TE job te (scalars)."""
+    N = jobs.submit.shape[0]
+    oh = _onehot(N, v)
+    gp0 = jobs.gp[v] == 0
+    node = st.node[v]
+    d = jobs.demand[v]
+    te_oh = _onehot(N, te)
+    st = st._replace(
+        preempt_count=st.preempt_count + oh.astype(jnp.int32),
+        last_signal=jnp.where(oh, st.t, st.last_signal),
+        awaiting_resume=st.awaiting_resume | oh,
+    )
+    # GP == 0: vacate inline (same tick), matching the reference.
+    vac = st._replace(
+        state=jnp.where(oh, QUEUED, st.state),
+        node=jnp.where(oh, -1, st.node),
+        queue_key=jnp.where(oh, st.top_key, st.queue_key),
+        top_key=st.top_key - 1.0,
+        free=st.free.at[node].add(d),
+        last_vacate=jnp.where(oh, st.t, st.last_vacate),
+    )
+    # GP > 0: enter grace; resources become "pending".
+    grc = st._replace(
+        state=jnp.where(oh, GRACE, st.state),
+        grace_left=jnp.where(oh, jobs.gp[v], st.grace_left),
+        victim_of=jnp.where(oh, te, st.victim_of),
+        te_pending=st.te_pending + te_oh.astype(jnp.int32),
+        pending_free=st.pending_free.at[node].add(d),
+    )
+    return jax.tree.map(lambda a, b: jnp.where(gp0, a, b), vac, grc)
+
+
+# ---------------------------------------------------------------------------
+# victim selection (Eq. 1-4 and baselines)
+# ---------------------------------------------------------------------------
+
+def size_eq1(demand: jax.Array, node_cap: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.sum((demand / node_cap) ** 2, axis=-1))
+
+
+def fitgpp_select(st: State, jobs: Jobs, te: jax.Array, node_cap, s,
+                  P) -> Tuple[State, jax.Array]:
+    """-> (state with advanced rng, victim index).
+
+    With REPRO_SIM_KERNEL=1 the Eq. 1-4 score + masked argmin runs on
+    the Pallas ``fitgpp_score`` kernel (parity-tested vs this jnp path).
+    Note: the kernel path requires a static ``s`` (it becomes part of
+    the kernel), so it is off for vmapped s-sweeps.
+    """
+    import os
+    cand = (st.state == RUNNING) & ~jobs.is_te
+    safe_node = jnp.maximum(st.node, 0)
+    node_free = st.free[safe_node]                      # (N, 3)
+    under = st.preempt_count < P
+    if os.environ.get("REPRO_SIM_KERNEL") == "1" and isinstance(s, float):
+        from repro.kernels import ops as kops
+        _, main = kops.fitgpp_select(
+            jobs.demand, node_free, jobs.gp.astype(jnp.float32),
+            cand, under, jobs.demand[te], node_cap, s=s)
+        mask_any = main >= 0
+        rng, sub = jax.random.split(st.rng)
+        p = cand.astype(jnp.float32)
+        p = p / jnp.maximum(p.sum(), 1.0)
+        rnd = jax.random.choice(sub, jobs.submit.shape[0],
+                                p=p).astype(jnp.int32)
+        return st._replace(rng=rng), jnp.where(mask_any, main, rnd)
+    sz = size_eq1(jobs.demand, node_cap)
+    max_sz = jnp.maximum(jnp.max(jnp.where(cand, sz, 0.0)), 1e-12)
+    max_gp = jnp.maximum(jnp.max(jnp.where(cand, jobs.gp, 0)), 1e-12)
+    score = sz / max_sz + s * (jobs.gp / max_gp)
+
+    elig = jnp.all(jobs.demand[te][None, :] <= jobs.demand + node_free
+                   + _EPS, axis=1)
+    mask = cand & elig & under
+    main = jnp.argmin(jnp.where(mask, score, _INF)).astype(jnp.int32)
+
+    rng, sub = jax.random.split(st.rng)
+    p = cand.astype(jnp.float32)
+    p = p / jnp.maximum(p.sum(), 1.0)
+    rnd = jax.random.choice(sub, jobs.submit.shape[0], p=p).astype(jnp.int32)
+    victim = jnp.where(mask.any(), main, rnd)
+    return st._replace(rng=rng), victim
+
+
+def _until_fits_select(st: State, jobs: Jobs, te: jax.Array, rank_val,
+                       P) -> State:
+    """LRTP/RAND: keep signalling victims (best ``rank_val`` first,
+    under-P-cap first) until the TE fits on the last victim's node,
+    counting that node's free + signalled demand."""
+    N = jobs.submit.shape[0]
+    te_d = jobs.demand[te]
+    n_nodes = st.free.shape[0]
+
+    def cond(carry):
+        st, taken, own_pending, satisfied = carry
+        cand = (st.state == RUNNING) & ~jobs.is_te & ~taken
+        return (~satisfied) & cand.any()
+
+    def body(carry):
+        st, taken, own_pending, _ = carry
+        cand = (st.state == RUNNING) & ~jobs.is_te & ~taken
+        under = st.preempt_count < P
+        # under-cap candidates first, then by rank_val descending
+        # (two-level pick, NOT an additive offset — a +1e12 offset in f32
+        # would swallow rank_val and break the ordering)
+        m1 = cand & under
+        pick_from = jnp.where(m1.any(), m1, cand)
+        v = jnp.argmax(jnp.where(pick_from, rank_val, -_INF)).astype(jnp.int32)
+        node = st.node[v]
+        gp0 = jobs.gp[v] == 0
+        st = _signal_one(st, jobs, v, te)
+        # Count only THIS selection's signalled demand as incoming supply
+        # (other TEs' in-flight grace periods are already spoken for) —
+        # mirrors policies._preempt_until_fits. GP=0 victims vacate
+        # inline, so their demand lands in st.free directly.
+        own_pending = own_pending.at[node].add(
+            jobs.demand[v] * (~gp0).astype(jnp.float32))
+        avail = st.free[node] + own_pending[node]
+        satisfied = jnp.all(te_d <= avail + _EPS)
+        return st, taken | _onehot(N, v), own_pending, satisfied
+
+    st, _, _, _ = jax.lax.while_loop(
+        cond, body, (st, jnp.zeros((N,), bool),
+                     jnp.zeros((n_nodes, 3), jnp.float32),
+                     jnp.asarray(False)))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# one tick
+# ---------------------------------------------------------------------------
+
+def _scatter_free(free, node, demand, mask):
+    safe = jnp.where(mask, node, 0)
+    w = demand * mask[:, None].astype(demand.dtype)
+    return free.at[safe].add(w)
+
+
+def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
+              s=None, P=None):
+    """``s`` and ``P`` may be traced scalars (for vmapped sweeps);
+    they default to the static values in ``cfg``."""
+    node_cap = jnp.asarray(cfg.cluster.node.as_tuple(), jnp.float32)
+    N = jobs.submit.shape[0]
+    preemptive = cfg.policy != "fifo"
+    policy = cfg.policy
+    P = cfg.max_preemptions if P is None else P
+    s = cfg.s if s is None else s
+
+    def trigger_preemption(st: State, te: jax.Array) -> State:
+        if policy == "fitgpp":
+            st, v = fitgpp_select(st, jobs, te, node_cap, s, P)
+            return _signal_one(st, jobs, v, te)
+        if policy == "lrtp":
+            return _until_fits_select(st, jobs, te,
+                                      st.remaining.astype(jnp.float32), P)
+        if policy == "rand":
+            rng, sub = jax.random.split(st.rng)
+            st = st._replace(rng=rng)
+            return _until_fits_select(
+                st, jobs, te, jax.random.uniform(sub, (N,)), P)
+        return st
+
+    def te_lane(st: State) -> State:
+        def cond(carry):
+            st, processed = carry
+            q = (st.state == QUEUED) & jobs.is_te & ~processed
+            return q.any()
+
+        def body(carry):
+            st, processed = carry
+            q = (st.state == QUEUED) & jobs.is_te & ~processed
+            j = jnp.argmin(jnp.where(q, st.queue_key, _INF)).astype(jnp.int32)
+            node = _first_fit(st.free, jobs.demand[j])
+
+            def place(st):
+                return st if False else _place(st, jobs, j, node)
+
+            def blocked(st):
+                promised = st.free + st.pending_free
+                fits_pending = jnp.all(
+                    promised >= jobs.demand[j][None, :] - _EPS, axis=1).any()
+                has_cand = ((st.state == RUNNING) & ~jobs.is_te).any()
+                do = (st.te_pending[j] == 0) & ~fits_pending & has_cand
+                st = jax.lax.cond(do,
+                                  lambda s_: trigger_preemption(s_, j),
+                                  lambda s_: s_, st)
+                # GP=0 victims vacate inline: place the TE NOW, before
+                # the BE pass can reclaim the freed node (mirrors the
+                # reference).
+                node2 = _first_fit(st.free, jobs.demand[j])
+                return jax.lax.cond(do & (node2 >= 0),
+                                    lambda s_: _place(s_, jobs, j, node2),
+                                    lambda s_: s_, st)
+
+            st = jax.lax.cond(node >= 0, place, blocked, st)
+            return st, processed | _onehot(N, j)
+
+        st, _ = jax.lax.while_loop(cond, body,
+                                   (st, jnp.zeros((N,), bool)))
+        return st
+
+    def be_queue(st: State) -> State:
+        def head_mask(st):
+            q = st.state == QUEUED
+            if preemptive:
+                q = q & ~jobs.is_te
+            return q
+
+        def cond(carry):
+            st, blocked = carry
+            return (~blocked) & head_mask(st).any()
+
+        def body(carry):
+            st, _ = carry
+            q = head_mask(st)
+            j = jnp.argmin(jnp.where(q, st.queue_key, _INF)).astype(jnp.int32)
+            node = _first_fit(st.free, jobs.demand[j])
+            st = jax.lax.cond(node >= 0,
+                              lambda s_: _place(s_, jobs, j, node),
+                              lambda s_: s_, st)
+            return st, node < 0
+
+        st, _ = jax.lax.while_loop(cond, body, (st, jnp.asarray(False)))
+        return st
+
+    def tick(st: State) -> State:
+        t = st.t
+        # arrivals (queue key = submit-order index; jobs pre-sorted)
+        arrive = (jobs.submit <= t) & (st.state == NOT_ARRIVED)
+        st = st._replace(
+            state=jnp.where(arrive, QUEUED, st.state),
+            queue_key=jnp.where(arrive, jnp.arange(N, dtype=jnp.float32),
+                                st.queue_key),
+        )
+        # vacates (grace expired), processed in job-index order
+        vac = (st.state == GRACE) & (st.grace_left <= 0)
+        rank = jnp.cumsum(vac) - 1
+        n_vac = jnp.sum(vac)
+        te_dec = jnp.zeros((N,), jnp.int32).at[
+            jnp.where(vac, st.victim_of, N)].add(1, mode="drop")
+        st = st._replace(
+            queue_key=jnp.where(vac, st.top_key - rank.astype(jnp.float32),
+                                st.queue_key),
+            top_key=st.top_key - n_vac.astype(jnp.float32),
+            free=_scatter_free(st.free, st.node, jobs.demand, vac),
+            pending_free=_scatter_free(st.pending_free, st.node,
+                                       -jobs.demand, vac),
+            last_vacate=jnp.where(vac, t, st.last_vacate),
+            te_pending=st.te_pending - te_dec,
+            victim_of=jnp.where(vac, -1, st.victim_of),
+            node=jnp.where(vac, -1, st.node),
+            state=jnp.where(vac, QUEUED, st.state),
+        )
+        # schedule
+        if preemptive:
+            st = te_lane(st)
+        st = be_queue(st)
+        # run one minute
+        running = st.state == RUNNING
+        remaining = st.remaining - running.astype(jnp.int32)
+        fin = running & (remaining <= 0)
+        st = st._replace(
+            remaining=remaining,
+            free=_scatter_free(st.free, st.node, jobs.demand, fin),
+            node=jnp.where(fin, -1, st.node),
+            state=jnp.where(fin, DONE, st.state),
+            finish=jnp.where(fin, t + 1, st.finish),
+            n_done=st.n_done + jnp.sum(fin),
+            grace_left=st.grace_left - (st.state == GRACE).astype(jnp.int32),
+            t=t + 1,
+        )
+        return st
+
+    return tick
+
+
+def run(cfg: SimConfig, jobs: Jobs, seed=0,
+        max_ticks: int = 1 << 22, s=None, P=None) -> State:
+    """Run the full simulation; returns the final state."""
+    n_nodes = cfg.cluster.n_nodes
+    node_cap = cfg.cluster.node.as_tuple()
+    tick = make_tick(cfg, jobs, n_nodes, s=s, P=P)
+    st = init_state(jobs, n_nodes, node_cap, seed)
+    N = jobs.submit.shape[0]
+
+    def cond(st):
+        return (st.n_done < N) & (st.t < max_ticks)
+
+    return jax.lax.while_loop(cond, tick, st)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def run_jit(cfg: SimConfig, jobs: Jobs, seed: int = 0) -> State:
+    return run(cfg, jobs, seed)
+
+
+def slowdown(jobs: Jobs, st: State) -> jax.Array:
+    waiting = st.finish - jobs.submit - jobs.exec_total
+    return 1.0 + waiting / jobs.exec_total
+
+
+def result_summary(jobs: Jobs, st: State) -> dict:
+    """Percentile summary mirroring metrics.pooled_tables (jnp)."""
+    sd = slowdown(jobs, st)
+    te = jobs.is_te
+    out = {}
+    for name, m in (("TE", te), ("BE", ~te)):
+        vals = jnp.where(m, sd, jnp.nan)
+        out[name] = {f"p{p}": jnp.nanpercentile(vals, p)
+                     for p in (50, 95, 99)}
+    pre = jnp.where(~te, (st.preempt_count > 0).astype(jnp.float32), jnp.nan)
+    out["preempted_frac"] = jnp.nanmean(pre)
+    iv = jnp.where(st.last_resume >= 0,
+                   (st.last_resume - st.last_signal).astype(jnp.float32),
+                   jnp.nan)
+    out["intervals"] = {f"p{p}": jnp.nanpercentile(iv, p)
+                        for p in (50, 75, 95, 99)}
+    return out

@@ -1,0 +1,400 @@
+"""Reference discrete-time cluster simulator (paper §4.1 semantics).
+
+Faithful, transparent implementation used to reproduce Tables 1-5 and
+Figures 3-7, and as the parity oracle for the JAX engine.
+
+Mechanics (choices documented in DESIGN.md §3):
+  * 1-minute ticks; allocation decided every tick.
+  * Strict FIFO for the BE queue (no backfill -> head-of-line blocking).
+  * TE jobs: under preemptive policies they live in a TE-priority FIFO
+    served before the BE queue; under vanilla FIFO they share the queue.
+  * Preemption: victims get a grace period (GP); resources free when the
+    GP expires (GP=0 vacates the same tick); the victim re-enters the
+    TOP of the BE queue with its remaining execution time intact.
+  * A TE that triggered preemption re-triggers victim selection only
+    after all victims it signalled have vacated (defensive; rare).
+
+Data structures: the job queues are lazy-deletion heaps and the running/
+grace sets are Python sets — running jobs are bounded by cluster
+capacity (<~1k), so every tick is O(active), not O(n_jobs).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Set
+
+import numpy as np
+
+from repro.configs.cluster import SimConfig
+from repro.core import policies as pol
+from repro.core.types import (DONE, GRACE, NOT_ARRIVED, QUEUED, RUNNING,
+                              JobSet, PreemptionEvent, SimResult)
+
+
+class Simulator:
+    def __init__(self, cfg: SimConfig, jobs: JobSet,
+                 admission_target: float = 0.0):
+        """``admission_target`` > 0 switches to closed-loop admission:
+        ``jobs.submit`` is ignored and the next job (in index order) is
+        admitted whenever the backlog load (cluster-normalized demand of
+        all admitted, unfinished jobs) is below the target. Used once,
+        under FIFO, to realize the paper's "load kept at 2.0 if scheduled
+        by FIFO" arrival process; the recorded admit times then serve as
+        open-loop submit times for every policy."""
+        self.cfg = cfg
+        self.jobs = jobs
+        self.admission_target = admission_target
+        self.admit_time = np.full(jobs.n, -1, np.int64)
+        self._load = 0.0
+        self.policy = pol.make_policy(cfg.policy, cfg.s)
+        self.node_cap = np.asarray(cfg.cluster.node.as_tuple(), np.float64)
+        self.n_nodes = cfg.cluster.n_nodes
+        self.rng = np.random.default_rng(cfg.seed + 104729)
+
+        n = jobs.n
+        self.state = np.full(n, NOT_ARRIVED, np.int8)
+        self.remaining = jobs.exec_total.astype(np.int64).copy()
+        self.node = np.full(n, -1, np.int64)
+        self.preempt_count = np.zeros(n, np.int64)
+        self.grace_left = np.zeros(n, np.int64)
+        self.queue_key = np.full(n, np.inf)      # lower = closer to head
+        self.top_key = -1.0                       # next "top of queue" key
+        self.finish = np.full(n, -1, np.int64)
+        self.vacated_at = np.full(n, -1, np.int64)
+        self.te_pending = np.zeros(n, np.int64)  # victims still in grace
+        self.victim_of = np.full(n, -1, np.int64)
+        self.free = np.tile(self.node_cap, (self.n_nodes, 1))
+        self.events: List[PreemptionEvent] = []
+        self.open_events: Dict[int, PreemptionEvent] = {}
+
+        self.te_heap: List = []      # (key, job)
+        self.be_heap: List = []
+        # resources already promised by in-flight grace periods, per node
+        self.pending_free = np.zeros((self.n_nodes, 3))
+        self.running: Set[int] = set()
+        self.running_be: Set[int] = set()
+        self.grace: Set[int] = set()
+        self.n_done = 0
+
+        self.job_nodes: Dict[int, np.ndarray] = {}   # gang placements
+        order = np.argsort(jobs.submit, kind="stable")
+        self.arrival_order = order
+        self._next_arrival = 0
+        cluster_cap = self.node_cap * self.n_nodes
+        self.frac = (jobs.demand / cluster_cap[None, :]).mean(axis=1) \
+            * jobs.n_nodes
+
+    # -- queue helpers -------------------------------------------------------
+
+    def _push(self, j: int, key: float) -> None:
+        self.queue_key[j] = key
+        use_te_lane = self.policy.preemptive and self.jobs.is_te[j]
+        heapq.heappush(self.te_heap if use_te_lane else self.be_heap,
+                       (key, j))
+
+    def _pop_valid(self, heap) -> int:
+        """-> head job index or -1. Skips stale (lazy-deleted) entries."""
+        while heap:
+            key, j = heap[0]
+            if self.state[j] == QUEUED and self.queue_key[j] == key:
+                return j
+            heapq.heappop(heap)
+        return -1
+
+    # -- resource helpers ----------------------------------------------------
+
+    def _first_fit(self, demand: np.ndarray, k: int = 1) -> int:
+        """First node fitting ``demand`` (k=1), or -1. For gangs (k>1)
+        use _gang_fit."""
+        fits = np.all(self.free >= demand[None, :] - 1e-9, axis=1)
+        idx = np.flatnonzero(fits)
+        if k > 1:
+            return -1 if len(idx) < k else int(idx[0])
+        return int(idx[0]) if len(idx) else -1
+
+    def _gang_fit(self, demand: np.ndarray, k: int):
+        """First k nodes that each fit ``demand`` (gang: all-or-nothing)."""
+        fits = np.all(self.free >= demand[None, :] - 1e-9, axis=1)
+        idx = np.flatnonzero(fits)
+        return idx[:k] if len(idx) >= k else None
+
+    def _fits_job(self, j: int):
+        """-> node array for job j (len n_nodes[j]) or None."""
+        k = int(self.jobs.n_nodes[j])
+        if k == 1:
+            n = self._first_fit(self.jobs.demand[j])
+            return None if n < 0 else np.asarray([n])
+        return self._gang_fit(self.jobs.demand[j], k)
+
+    def _start(self, j: int, nodes, t: int) -> None:
+        nodes = np.atleast_1d(np.asarray(nodes))
+        self.state[j] = RUNNING
+        self.node[j] = int(nodes[0])
+        self.job_nodes[j] = nodes
+        self.free[nodes] -= self.jobs.demand[j]
+        self.queue_key[j] = np.inf
+        self.running.add(j)
+        if not self.jobs.is_te[j]:
+            self.running_be.add(j)
+        if self.vacated_at[j] >= 0:
+            ev = self.open_events.pop(j, None)
+            if ev is not None:
+                ev.resume_time = t
+            self.vacated_at[j] = -1
+
+    def _signal_preemption(self, j: int, te: int, t: int) -> None:
+        """Move a running BE job into its grace period."""
+        assert self.state[j] == RUNNING and not self.jobs.is_te[j]
+        self.state[j] = GRACE
+        self.grace_left[j] = self.jobs.gp[j]
+        self.preempt_count[j] += 1
+        self.victim_of[j] = te
+        self.te_pending[te] += 1
+        self.running.discard(j)
+        self.running_be.discard(j)
+        self.pending_free[self.job_nodes[j]] += self.jobs.demand[j]
+        ev = PreemptionEvent(job=j, te_job=te, signal_time=t)
+        self.events.append(ev)
+        self.open_events[j] = ev
+        if self.grace_left[j] <= 0:          # GP=0: vacate immediately
+            self._vacate(j, t)
+        else:
+            self.grace.add(j)
+
+    def _vacate(self, j: int, t: int) -> None:
+        nodes = self.job_nodes.pop(j)
+        self.free[nodes] += self.jobs.demand[j]
+        self.pending_free[nodes] -= self.jobs.demand[j]
+        self.node[j] = -1
+        self.state[j] = QUEUED
+        self.grace.discard(j)
+        self._push(j, self.top_key)
+        self.top_key -= 1.0
+        self.vacated_at[j] = t
+        if j in self.open_events:
+            self.open_events[j].vacate_time = t
+        te = int(self.victim_of[j])
+        if te >= 0:
+            self.te_pending[te] -= 1
+            self.victim_of[j] = -1
+
+    # -- victim selection ------------------------------------------------------
+
+    def _cand_best_node(self, j: int, te_demand: np.ndarray) -> int:
+        """Node of job j with the most slack for ``te_demand`` (Eq. 2 is
+        evaluated against the victim's best node; single-node jobs keep
+        their only node, preserving the paper's exact semantics)."""
+        nodes = self.job_nodes[j]
+        if len(nodes) == 1:
+            return int(nodes[0])
+        slack = np.min(self.free[nodes] + self.jobs.demand[j][None, :]
+                       - te_demand[None, :], axis=1)
+        return int(nodes[int(np.argmax(slack))])
+
+    def _gang_preempt(self, te: int, t: int) -> None:
+        """Multi-node TE (paper future work): Eq. 2/4 generalized —
+        prefer the min-score SINGLE victim whose eviction alone yields
+        >= k satisfying nodes (the paper's minimize-preemption-count
+        strategy); otherwise signal victims in policy order until the
+        gang fits (counting this selection's pending frees)."""
+        k = int(self.jobs.n_nodes[te])
+        d = self.jobs.demand[te]
+
+        def n_fit(free):
+            return int(np.all(free >= d[None, :] - 1e-9, axis=1).sum())
+
+        cand = sorted(self.running_be)
+        ranked = self._policy_rank(cand)
+        if self.policy.name == "fitgpp":
+            under = [j for j in ranked
+                     if self.preempt_count[j] < self.cfg.max_preemptions]
+            for j in (under or ranked):          # Eq. 4: min score first
+                trial = self.free.copy()
+                trial[self.job_nodes[j]] += self.jobs.demand[j]
+                if n_fit(trial) >= k:
+                    self._signal_preemption(j, te, t)
+                    return
+        pending = self.free.copy()
+        victims = []
+        for j in ranked:
+            if n_fit(pending) >= k:
+                break
+            pending[self.job_nodes[j]] += self.jobs.demand[j]
+            victims.append(j)
+        if n_fit(pending) >= k:
+            for v in victims:
+                self._signal_preemption(v, te, t)
+
+    def _policy_rank(self, cand):
+        """Candidates in the policy's preemption order (under-cap first)."""
+        if not cand:
+            return []
+        cand = np.asarray(cand)
+        under = self.preempt_count[cand] < self.cfg.max_preemptions
+        if self.policy.name == "lrtp":
+            key = -self.remaining[cand].astype(float)
+        elif self.policy.name == "rand":
+            key = self.rng.random(len(cand))
+        else:   # fitgpp: Eq. 3 score (normalized over running BE)
+            key = pol.fitgpp_scores(
+                self.jobs.demand[cand] * self.jobs.n_nodes[cand][:, None],
+                self.jobs.gp[cand], self.node_cap, self.cfg.s)
+        order = np.lexsort((key, ~under))
+        return [int(cand[i]) for i in order]
+
+    def _try_preempt_for(self, te: int, t: int) -> None:
+        if self.jobs.n_nodes[te] > 1:
+            self._gang_preempt(te, t)
+            return
+        cand = np.sort(np.fromiter(self.running_be, np.int64,
+                                   count=len(self.running_be)))
+        if len(cand) == 0:
+            return
+        cand_node = np.asarray([self._cand_best_node(int(j),
+                                                     self.jobs.demand[te])
+                                for j in cand])
+        victims = self.policy.select(
+            rng=self.rng,
+            te_demand=self.jobs.demand[te],
+            cand_ids=cand,
+            cand_demand=self.jobs.demand[cand],
+            cand_node_free=self.free[cand_node],
+            cand_gp=self.jobs.gp[cand],
+            cand_remaining=self.remaining[cand],
+            under_cap=self.preempt_count[cand] < self.cfg.max_preemptions,
+            all_run_demand=self.jobs.demand[cand],
+            all_run_gp=self.jobs.gp[cand],
+            node_cap=self.node_cap,
+            free_by_node=self.free,
+            cand_node=cand_node,
+        )
+        for v in victims:
+            self._signal_preemption(v, te, t)
+
+    # -- one tick ---------------------------------------------------------------
+
+    def _schedule(self, t: int) -> None:
+        # 1) TE priority lane (preemptive policies only)
+        if self.policy.preemptive:
+            blocked: List[int] = []
+            while True:
+                j = self._pop_valid(self.te_heap)
+                if j < 0:
+                    break
+                nodes = self._fits_job(j)
+                if nodes is not None:
+                    heapq.heappop(self.te_heap)
+                    self._start(j, nodes, t)
+                else:
+                    heapq.heappop(self.te_heap)
+                    # Preempt only if the TE would not fit even counting
+                    # resources already promised by in-flight grace
+                    # periods ("the resource is insufficient", §2) — an
+                    # imminent vacate is incoming supply, not a shortage.
+                    promised = self.free + self.pending_free
+                    fits_pending = (np.all(
+                        promised >= self.jobs.demand[j][None, :] - 1e-9,
+                        axis=1)).sum() >= int(self.jobs.n_nodes[j])
+                    if self.te_pending[j] == 0 and not fits_pending:
+                        self._try_preempt_for(j, t)
+                        # GP=0 victims vacate inline: place the TE NOW,
+                        # before the BE pass can reclaim the freed node.
+                        nodes = self._fits_job(j)
+                        if nodes is not None:
+                            self._start(j, nodes, t)
+                            continue
+                    blocked.append(j)
+            for j in blocked:                # keep FIFO order among TE
+                heapq.heappush(self.te_heap, (self.queue_key[j], j))
+        # 2) BE queue (all jobs under vanilla FIFO): strict head-of-line,
+        # or bounded first-fit backfill (beyond-paper, cfg.backfill)
+        if not self.cfg.backfill:
+            while True:
+                head = self._pop_valid(self.be_heap)
+                if head < 0:
+                    break
+                nodes = self._fits_job(head)
+                if nodes is None:
+                    break                     # head-of-line blocking
+                heapq.heappop(self.be_heap)
+                self._start(head, nodes, t)
+        else:
+            skipped = []
+            scanned = 0
+            while scanned < self.cfg.backfill_depth:
+                head = self._pop_valid(self.be_heap)
+                if head < 0:
+                    break
+                heapq.heappop(self.be_heap)
+                nodes = self._fits_job(head)
+                if nodes is not None:
+                    self._start(head, nodes, t)
+                else:
+                    skipped.append(head)
+                    scanned += 1
+            for j in skipped:                 # keep original keys
+                heapq.heappush(self.be_heap, (self.queue_key[j], j))
+
+    def step(self, t: int) -> None:
+        jobs = self.jobs
+        # arrivals
+        if self.admission_target > 0:
+            # closed-loop: admit next jobs while backlog < target
+            while (self._next_arrival < jobs.n and
+                   self._load < self.admission_target):
+                j = self._next_arrival
+                self.state[j] = QUEUED
+                self._push(j, float(j))
+                self.admit_time[j] = t
+                self._load += self.frac[j]
+                self._next_arrival += 1
+        else:
+            while (self._next_arrival < jobs.n and
+                   jobs.submit[self.arrival_order[self._next_arrival]] <= t):
+                j = int(self.arrival_order[self._next_arrival])
+                self.state[j] = QUEUED
+                self._push(j, float(self._next_arrival))
+                self._next_arrival += 1
+        # grace countdown -> vacate (job-index order: JAX-engine parity)
+        for j in sorted(j for j in self.grace if self.grace_left[j] <= 0):
+            self._vacate(j, t)
+        # allocate
+        self._schedule(t)
+        # run for one minute
+        if self.running:
+            run = np.fromiter(self.running, np.int64, count=len(self.running))
+            self.remaining[run] -= 1
+            for j in np.sort(run[self.remaining[run] <= 0]):
+                j = int(j)
+                self.free[self.job_nodes.pop(j)] += jobs.demand[j]
+                self.node[j] = -1
+                self.state[j] = DONE
+                self.finish[j] = t + 1
+                self.running.discard(j)
+                self.running_be.discard(j)
+                self.n_done += 1
+                self._load -= self.frac[j]
+        if self.grace:
+            g = np.fromiter(self.grace, np.int64, count=len(self.grace))
+            self.grace_left[g] -= 1
+
+    def run(self, max_ticks: int = 10_000_000) -> SimResult:
+        t = 0
+        while self.n_done < self.jobs.n:
+            self.step(t)
+            t += 1
+            if t >= max_ticks:
+                raise RuntimeError(f"simulation did not converge in {t} ticks")
+        return SimResult(
+            finish=self.finish.copy(),
+            exec_total=self.jobs.exec_total.copy(),
+            submit=self.jobs.submit.copy(),
+            is_te=self.jobs.is_te.copy(),
+            preempt_count=self.preempt_count.copy(),
+            events=self.events,
+            makespan=t,
+        )
+
+
+def simulate(cfg: SimConfig, jobs: JobSet) -> SimResult:
+    return Simulator(cfg, jobs).run()

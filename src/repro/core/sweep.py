@@ -1,0 +1,111 @@
+"""Mesh-distributed simulation sweeps.
+
+The sensitivity studies (Figs. 4-7) are hundreds of independent
+simulations (policy × s × P × workload seed). Each one is a pure-JAX
+program (core/sim_jax.py), so a sweep is a vmapped batch that
+``shard_map``s over the ``data`` axis of the production mesh — the
+scheduler study itself runs as a multi-pod data-parallel workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.cluster import SimConfig
+from repro.core import sim_jax, workload
+from repro.core.types import JobSet
+
+
+def stack_jobsets(jobsets: Sequence[JobSet]) -> sim_jax.Jobs:
+    """Stack workloads over a leading trial axis (equal n required)."""
+    js = [sim_jax.jobs_from_jobset(j) for j in jobsets]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *js)
+
+
+def _trial_result(cfg: SimConfig, jobs: sim_jax.Jobs, s, P_, seed):
+    st = sim_jax.run(cfg, jobs, seed=seed, s=s, P=P_)
+    sd = sim_jax.slowdown(jobs, st)
+    te = jobs.is_te
+
+    def pct(vals, mask, ps):
+        v = jnp.where(mask, vals, jnp.nan)
+        return jnp.stack([jnp.nanpercentile(v, p) for p in ps])
+
+    iv = (st.last_resume - st.last_signal).astype(jnp.float32)
+    iv_mask = st.last_resume >= 0
+    pc = st.preempt_count
+    be = ~te
+    return {
+        "te_slowdown": pct(sd, te, (50, 95, 99)),
+        "be_slowdown": pct(sd, be, (50, 95, 99)),
+        "intervals": pct(iv, iv_mask, (50, 75, 95, 99)),
+        "preempted_frac": jnp.nanmean(
+            jnp.where(be, (pc > 0).astype(jnp.float32), jnp.nan)),
+        "preempt_1": jnp.nanmean(
+            jnp.where(be, (pc == 1).astype(jnp.float32), jnp.nan)),
+        "preempt_2": jnp.nanmean(
+            jnp.where(be, (pc == 2).astype(jnp.float32), jnp.nan)),
+        "preempt_3plus": jnp.nanmean(
+            jnp.where(be, (pc >= 3).astype(jnp.float32), jnp.nan)),
+        "makespan": st.t,
+    }
+
+
+def run_sweep(cfg: SimConfig, jobs: sim_jax.Jobs, s_vals, P_vals, seeds,
+              mesh: Optional[Mesh] = None,
+              trial_axes: Sequence[str] = ("data",)) -> Dict[str, np.ndarray]:
+    """Run T independent trials; trial t uses jobs[t], s_vals[t], ...
+
+    With ``mesh``, trials are sharded over ``trial_axes`` via device_put
+    of the batched inputs (pjit partitions the vmapped program); without,
+    they run locally. T must be a multiple of the mesh axis size.
+    """
+    s_vals = jnp.asarray(s_vals, jnp.float32)
+    P_vals = jnp.asarray(P_vals, jnp.int32)
+    seeds = jnp.asarray(seeds, jnp.uint32)
+
+    def one(jobs_t, s, P_, seed):
+        return _trial_result(cfg, jobs_t, s, P_, jax.random.key(seed))
+
+    batched = jax.vmap(one)
+    if mesh is not None:
+        spec = P(*trial_axes)
+        shard = NamedSharding(mesh, spec)
+        jobs = jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(
+                mesh, P(*(trial_axes + (None,) * (x.ndim - 1))))), jobs)
+        s_vals = jax.device_put(s_vals, shard)
+        P_vals = jax.device_put(P_vals, shard)
+        seeds = jax.device_put(seeds, shard)
+        with mesh:
+            out = jax.jit(batched)(jobs, s_vals, P_vals, seeds)
+    else:
+        out = jax.jit(batched)(jobs, s_vals, P_vals, seeds)
+    return jax.tree.map(np.asarray, out)
+
+
+def sensitivity_grid(cfg: SimConfig, n_jobs: int, s_vals: Sequence[float],
+                     seeds: Sequence[int],
+                     mesh: Optional[Mesh] = None) -> Dict[str, np.ndarray]:
+    """Fig. 4-style grid: all (s, seed) pairs on shared per-seed workloads.
+
+    Returns arrays of shape (len(s_vals), len(seeds), ...).
+    """
+    wl = dataclasses.replace(cfg.workload, n_jobs=n_jobs)
+    base = dataclasses.replace(cfg, workload=wl)
+    jobsets = [workload.generate(base, seed=sd) for sd in seeds]
+    stacked = stack_jobsets(jobsets)
+
+    ns, nt = len(s_vals), len(seeds)
+    rep = jax.tree.map(lambda x: jnp.tile(x, (ns,) + (1,) * (x.ndim - 1)),
+                       stacked)
+    s_flat = np.repeat(np.asarray(s_vals, np.float32), nt)
+    P_flat = np.full(ns * nt, base.max_preemptions, np.int32)
+    seed_flat = np.tile(np.asarray(seeds, np.uint32), ns)
+    out = run_sweep(base, rep, s_flat, P_flat, seed_flat, mesh=mesh)
+    return jax.tree.map(lambda x: x.reshape((ns, nt) + x.shape[1:]), out)

@@ -1,0 +1,102 @@
+"""Core scheduler types: jobs, cluster state, events, results."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+# Job states
+NOT_ARRIVED = 0
+QUEUED = 1
+RUNNING = 2
+GRACE = 3      # preemption signalled; performing suspension processing
+DONE = 4
+
+TE = 1
+BE = 0
+
+
+@dataclass
+class JobSet:
+    """Static workload description (struct-of-arrays over n jobs).
+
+    demand[:, r] for r in (CPU, RAM, GPU); times in integer minutes.
+    ``n_nodes`` is the gang width for multi-node (distributed-DL) jobs —
+    the paper's stated future work; ``demand`` is PER NODE and the job
+    needs all its nodes simultaneously (gang scheduling).
+    """
+    submit: np.ndarray          # (n,) int
+    exec_total: np.ndarray      # (n,) int >= 1
+    demand: np.ndarray          # (n, 3) float
+    is_te: np.ndarray           # (n,) bool
+    gp: np.ndarray              # (n,) int grace period, minutes
+    n_nodes: np.ndarray = None  # (n,) int >= 1; None -> all single-node
+
+    def __post_init__(self):
+        if self.n_nodes is None:
+            self.n_nodes = np.ones(len(self.submit), np.int64)
+
+    @property
+    def n(self) -> int:
+        return len(self.submit)
+
+    def validate(self, node_cap: np.ndarray) -> None:
+        assert (self.exec_total >= 1).all()
+        assert (self.demand >= 0).all()
+        assert (self.demand <= node_cap[None, :]).all(), \
+            "job demand must fit on a single node"
+        assert (self.gp >= 0).all()
+        assert (np.diff(self.submit) >= 0).all(), "jobs sorted by submit time"
+
+
+@dataclass
+class PreemptionEvent:
+    job: int
+    te_job: int                 # the TE arrival that triggered it
+    signal_time: int            # grace period start
+    vacate_time: int = -1
+    resume_time: int = -1
+
+
+@dataclass
+class SimResult:
+    """Everything needed for the paper's tables/figures."""
+    finish: np.ndarray            # (n,) completion tick
+    exec_total: np.ndarray
+    submit: np.ndarray
+    is_te: np.ndarray
+    preempt_count: np.ndarray     # (n,)
+    events: List[PreemptionEvent] = field(default_factory=list)
+    makespan: int = 0
+
+    @property
+    def slowdown(self) -> np.ndarray:
+        """Eq. 5: 1 + Waiting/Execution, Waiting = turnaround - execution."""
+        waiting = self.finish - self.submit - self.exec_total
+        return 1.0 + waiting / self.exec_total
+
+    @property
+    def resched_intervals(self) -> np.ndarray:
+        """Minutes between the preemption signal and resuming (Table 2).
+
+        Includes the grace period — that is the point: FitGpp picks
+        short-GP victims, so its intervals are structurally shorter.
+        """
+        iv = [e.resume_time - e.signal_time for e in self.events
+              if e.resume_time >= 0]
+        return np.asarray(iv, dtype=np.float64)
+
+    def preempted_fraction(self) -> float:
+        """Proportion of jobs preempted at least once (Table 3)."""
+        be = ~self.is_te
+        return float((self.preempt_count[be] > 0).mean())
+
+    def preempt_count_fractions(self) -> Dict[str, float]:
+        """Proportion preempted exactly 1 / 2 / >=3 times (Table 4)."""
+        be = ~self.is_te
+        c = self.preempt_count[be]
+        n = max(len(c), 1)
+        return {"1": float((c == 1).sum()) / n,
+                "2": float((c == 2).sum()) / n,
+                ">=3": float((c >= 3).sum()) / n}

@@ -1,0 +1,147 @@
+"""Synthetic workload generation (paper §4.2) and the §4.4 trace proxy.
+
+The paper fits truncated normals to a private 6-month PFN trace for
+execution time, CPU, RAM and GPU per class (TE / BE) and samples jobs
+from them; arrival rate is set so the FIFO-normalized cluster load is a
+target value (2.0 in §4.2). Exec-time means/truncations and the GP
+distribution are taken from the paper verbatim; the resource-demand
+parameters are our documented choices (configs/cluster.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.cluster import ClassDists, SimConfig, TruncNormal, WorkloadSpec
+from repro.core.types import JobSet
+
+
+def sample_trunc_normal(rng: np.random.Generator, d: TruncNormal,
+                        size: int) -> np.ndarray:
+    """Resampling-based truncated normal (the paper truncates a fit)."""
+    out = rng.normal(d.mean, d.std, size)
+    bad = (out < d.lo) | (out > d.hi)
+    # resample the tails a few times, then clip the stragglers
+    for _ in range(8):
+        if not bad.any():
+            break
+        out[bad] = rng.normal(d.mean, d.std, int(bad.sum()))
+        bad = (out < d.lo) | (out > d.hi)
+    return np.clip(out, d.lo, d.hi)
+
+
+def _snap(x: np.ndarray, quanta) -> np.ndarray:
+    q = np.asarray(quanta)
+    return q[np.argmin(np.abs(x[:, None] - q[None, :]), axis=1)]
+
+
+def _sample_class(rng: np.random.Generator, dists: ClassDists, n: int,
+                  gpu_quanta=(0.0, 1.0, 2.0, 4.0, 8.0)):
+    exec_min = np.maximum(sample_trunc_normal(rng, dists.exec_min, n), 1.0)
+    cpu = np.round(sample_trunc_normal(rng, dists.cpu, n))
+    # whole GBs: keeps resource arithmetic exact in f32 (JAX engine parity)
+    ram = np.round(sample_trunc_normal(rng, dists.ram, n))
+    gpu = _snap(sample_trunc_normal(rng, dists.gpu, n), gpu_quanta)
+    demand = np.stack([np.maximum(cpu, 1.0), np.maximum(ram, 1.0),
+                       np.maximum(gpu, 0.0)], axis=1)
+    return np.round(exec_min).astype(np.int64), demand
+
+
+def cluster_fraction(demand: np.ndarray, cluster_cap: np.ndarray
+                     ) -> np.ndarray:
+    """Mean of the three normalized resources — the load norm (DESIGN §3)."""
+    return (demand / cluster_cap[None, :]).mean(axis=1)
+
+
+def generate(cfg: SimConfig, seed: int = None) -> JobSet:
+    wl: WorkloadSpec = cfg.workload
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    n = wl.n_jobs
+    is_te = rng.random(n) < wl.te_fraction
+
+    exec_total = np.zeros(n, np.int64)
+    demand = np.zeros((n, 3))
+    n_te = int(is_te.sum())
+    exec_total[is_te], demand[is_te] = _sample_class(
+        rng, wl.te, n_te, wl.gpu_quanta)
+    exec_total[~is_te], demand[~is_te] = _sample_class(
+        rng, wl.be, n - n_te, wl.gpu_quanta)
+
+    gp = np.round(sample_trunc_normal(rng, wl.scaled_gp(), n)).astype(np.int64)
+
+    n_nodes = np.ones(n, np.int64)
+    if wl.multi_node_frac > 0:
+        gang = rng.random(n) < wl.multi_node_frac
+        n_nodes[gang] = rng.choice(wl.multi_node_widths, int(gang.sum()))
+
+    node_cap = np.asarray(cfg.cluster.node.as_tuple())
+    js = JobSet(submit=np.zeros(n, np.int64), exec_total=exec_total,
+                demand=demand, is_te=is_te, gp=gp, n_nodes=n_nodes)
+    js.submit = _closed_loop_submit_times(cfg, js)
+    js.validate(node_cap)
+    return js
+
+
+def _closed_loop_submit_times(cfg: SimConfig, js: JobSet) -> np.ndarray:
+    """Paper §4.2: jobs are submitted "at such a rate that the cluster
+    load ... would be kept at 2.0 if they were scheduled by FIFO".
+
+    We realize this as closed-loop admission: run a FIFO simulation that
+    admits the next job whenever the backlog (cluster-normalized demand
+    of admitted, unfinished jobs) drops below ``load``; the recorded
+    admit times become the open-loop submit times used by EVERY policy.
+    (An open-loop Poisson rate at load>1 would grow the queue without
+    bound, contradicting the paper's bounded slowdowns — see DESIGN §3.)
+    """
+    from repro.core.simulator import Simulator
+    import dataclasses
+    fifo_cfg = dataclasses.replace(cfg, policy="fifo")
+    sim = Simulator(fifo_cfg, js, admission_target=cfg.workload.load)
+    sim.run()
+    assert (sim.admit_time >= 0).all()
+    return sim.admit_time.copy()
+
+
+def generate_trace_proxy(cfg: SimConfig, seed: int = None) -> JobSet:
+    """Heavy-tailed proxy for the private PFN trace (§4.4).
+
+    Log-normal execution times (median TE 4', BE 20', long tails to the
+    truncation caps) + bursty arrivals (exponential gaps modulated by a
+    slow on/off cycle). Reproduces the §4.4 regime where FIFO slowdowns
+    explode and preemptive re-ordering can *help* BE jobs.
+    """
+    wl = cfg.workload
+    rng = np.random.default_rng((cfg.seed if seed is None else seed) + 7919)
+    n = wl.n_jobs
+    is_te = rng.random(n) < wl.te_fraction
+
+    def lognorm(median, sigma, lo, hi, size):
+        x = np.exp(np.log(median) + sigma * rng.standard_normal(size))
+        return np.clip(x, lo, hi)
+
+    exec_total = np.where(
+        is_te,
+        lognorm(4.0, 1.0, 1.0, wl.te.exec_min.hi, n),
+        lognorm(20.0, 1.6, 3.0, wl.be.exec_min.hi, n)).astype(np.int64)
+    exec_total = np.maximum(exec_total, 1)
+
+    demand = np.zeros((n, 3))
+    n_te = int(is_te.sum())
+    _, demand[is_te] = _sample_class(rng, wl.te, n_te, wl.gpu_quanta)
+    _, demand[~is_te] = _sample_class(rng, wl.be, n - n_te, wl.gpu_quanta)
+
+    gp = np.round(sample_trunc_normal(rng, wl.scaled_gp(), n)).astype(np.int64)
+
+    node_cap = np.asarray(cfg.cluster.node.as_tuple())
+    cluster_cap = node_cap * cfg.cluster.n_nodes
+    work = exec_total * cluster_fraction(demand, cluster_cap)
+    lam = wl.load / work.mean()
+    # bursty arrivals: rate doubles during "day", halves during "night"
+    gaps = rng.exponential(1.0 / lam, n)
+    phase = np.sin(np.arange(n) / 2048.0 * 2 * np.pi)
+    gaps = gaps * np.where(phase > 0, 0.5, 2.0)
+    submit = np.floor(np.cumsum(gaps)).astype(np.int64)
+
+    js = JobSet(submit=submit, exec_total=exec_total, demand=demand,
+                is_te=is_te, gp=gp)
+    js.validate(node_cap)
+    return js

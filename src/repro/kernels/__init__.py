@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel lives in <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), dispatches through ops.py (jit'd wrappers with padding/backend
+selection) and is validated against its pure-jnp oracle in ref.py
+(interpret mode on this CPU container; native Mosaic on TPU):
+
+  flash_attention — blocked causal/SWA/softcap GQA, online softmax
+  lru_scan        — diagonal linear recurrence (RG-LRU / diagonal SSM)
+  ssd_chunk       — Mamba-2 SSD intra-chunk quadratic dual form
+  fitgpp_score    — the paper's Eq. 1-4 score + masked argmin over jobs
+"""

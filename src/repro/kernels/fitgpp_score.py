@@ -1,0 +1,111 @@
+"""FitGpp victim selection (Eq. 1-4) — Pallas TPU kernel.
+
+The scheduler's per-event hot loop at cluster scale: for J running BE
+jobs, compute the Eq. 3 score, apply the Eq. 2 eligibility + P-cap masks,
+and take the masked argmin — in one sweep over J with jobs on the vector
+lanes. Inputs are struct-of-arrays (J,) vectors; the Eq. 3 normalizers
+(max Size, max GP over running BE jobs) are cheap global reductions done
+by XLA outside and passed in as scalars.
+
+Outputs: per-job scores (for introspection) and the victim index
+(-1 when no job passes the masks — the caller falls back to the paper's
+random choice).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_J = 512
+_INF = jnp.inf
+
+
+def _kernel(scal_ref, dem_ref, free_ref, gp_ref, mask_ref,
+            score_ref, idx_ref, best_scr, *, block_j: int):
+    ji = pl.program_id(0)
+    nj = pl.num_programs(0)
+
+    @pl.when(ji == 0)
+    def _init():
+        best_scr[0, 0] = _INF          # best score
+        best_scr[0, 1] = -1.0          # best index
+
+    s_par = scal_ref[0]                # (8,): te_c te_r te_g  cap_c cap_r
+    te = s_par[0:3]                    # cap_g  max_sz*? ...
+    cap = s_par[3:6]
+    max_sz, max_gp = s_par[6], s_par[7]
+    s_w = scal_ref[1, 0]               # Eq. 3 s parameter
+    dem = dem_ref[0].astype(jnp.float32)     # (bj, 3)
+    free = free_ref[0].astype(jnp.float32)   # (bj, 3)
+    gp = gp_ref[0].astype(jnp.float32)       # (bj,)
+    ok = mask_ref[0] > 0                     # running BE & under P cap
+
+    size = jnp.sqrt(jnp.sum(jnp.square(dem / cap[None, :]), axis=1))
+    score = size / max_sz + s_w * (gp / max_gp)
+    elig = jnp.all(te[None, :] <= dem + free, axis=1)
+    allowed = ok & elig
+    val = jnp.where(allowed, score, _INF)
+
+    score_ref[0] = score.astype(score_ref.dtype)
+
+    local_min = jnp.min(val)
+    local_arg = jnp.argmin(val).astype(jnp.float32) + ji * block_j
+    better = local_min < best_scr[0, 0]
+    best_scr[0, 0] = jnp.where(better, local_min, best_scr[0, 0])
+    best_scr[0, 1] = jnp.where(better, local_arg, best_scr[0, 1])
+
+    @pl.when(ji == nj - 1)
+    def _finish():
+        found = best_scr[0, 0] < _INF
+        idx_ref[0, 0] = jnp.where(found, best_scr[0, 1], -1.0) \
+            .astype(jnp.int32)
+
+
+def fitgpp_score(demand: jax.Array, node_free: jax.Array, gp: jax.Array,
+                 mask: jax.Array, te_demand: jax.Array,
+                 node_cap: jax.Array, max_sz: jax.Array, max_gp: jax.Array,
+                 s: float, *, block_j: int = DEFAULT_BLOCK_J,
+                 interpret: bool = False):
+    """demand/node_free (J, 3); gp/mask (J,). Returns (scores (J,), idx ())."""
+    J = demand.shape[0]
+    bj = min(block_j, J)
+    assert J % bj == 0, (J, bj)
+    scalars = jnp.stack([
+        jnp.concatenate([te_demand.astype(jnp.float32),
+                         node_cap.astype(jnp.float32),
+                         jnp.stack([jnp.maximum(max_sz, 1e-12),
+                                    jnp.maximum(max_gp, 1e-12)])]),
+        jnp.full((8,), s, jnp.float32),
+    ])                                  # (2, 8)
+
+    scores, idx = pl.pallas_call(
+        functools.partial(_kernel, block_j=bj),
+        grid=(J // bj,),
+        in_specs=[
+            pl.BlockSpec((2, 8), lambda ji: (0, 0)),
+            pl.BlockSpec((1, bj, 3), lambda ji: (0, ji, 0)),
+            pl.BlockSpec((1, bj, 3), lambda ji: (0, ji, 0)),
+            pl.BlockSpec((1, bj), lambda ji: (0, ji)),
+            pl.BlockSpec((1, bj), lambda ji: (0, ji)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bj), lambda ji: (0, ji)),
+            pl.BlockSpec((1, 1), lambda ji: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, J), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 2), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(scalars, demand[None].astype(jnp.float32),
+      node_free[None].astype(jnp.float32),
+      gp[None].astype(jnp.float32),
+      mask[None].astype(jnp.float32))
+    return scores[0], idx[0, 0]

@@ -1,0 +1,114 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Handles padding to block multiples, dtype plumbing, and backend
+selection: on the CPU container the kernels execute in interpret mode
+(the kernel body runs as traced Python — bit-accurate semantics, no
+Mosaic); on TPU they compile natively. Set REPRO_PALLAS_INTERPRET=0/1 to
+force either way.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fitgpp_score as _fs
+from repro.kernels import flash_attention as _fa
+from repro.kernels import lru_scan as _ls
+from repro.kernels import ssd_chunk as _sc
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "")
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = _fa.DEFAULT_BLOCK_Q,
+                    block_k: int = _fa.DEFAULT_BLOCK_K):
+    """GQA flash attention; pads Sq/Skv to block multiples.
+
+    Query i sits at absolute position Skv - Sq + i (see kernel docs).
+    KV padding is appended AFTER the queries, so causal masking makes the
+    padded keys unreachable; padded query rows are sliced off.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    qp, _ = _pad_to(q, 1, block_q)
+    kp, _ = _pad_to(k, 1, block_k)
+    vp, _ = _pad_to(v, 1, block_k)
+    padded = qp.shape[1] != Sq or kp.shape[1] != Skv
+    if padded and not causal:
+        raise ValueError("non-causal attention requires block-aligned "
+                         "Sq and Skv (padded keys would be attended)")
+    # Keep the ORIGINAL query/key alignment: padded keys land at positions
+    # beyond every real query and are causally masked; padded query rows
+    # are sliced off below.
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, window=window,
+                              softcap=softcap, block_q=block_q,
+                              block_k=block_k, interpret=_interpret(),
+                              q_offset=Skv - Sq)
+    return out[:, :Sq]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_r"))
+def lru_scan(a, b, h0=None, *, block_t: int = _ls.DEFAULT_BLOCK_T,
+             block_r: int = _ls.DEFAULT_BLOCK_R):
+    """Diagonal linear recurrence; pads L (with a=1, b=0) and R."""
+    B, L, R = a.shape
+    ap, _ = _pad_to(a, 1, block_t, value=1.0)
+    bp, _ = _pad_to(b, 1, block_t, value=0.0)
+    ap, _ = _pad_to(ap, 2, block_r, value=1.0)
+    bp, _ = _pad_to(bp, 2, block_r, value=0.0)
+    if h0 is not None:
+        h0p, _ = _pad_to(h0, 1, block_r)
+    else:
+        h0p = None
+    out = _ls.lru_scan(ap, bp, h0p, block_t=min(block_t, ap.shape[1]),
+                       block_r=min(block_r, ap.shape[2]),
+                       interpret=_interpret())
+    return out[:, :L, :R]
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block_j"))
+def fitgpp_select(demand, node_free, gp, running_be, under_cap, te_demand,
+                  node_cap, *, s: float = 4.0,
+                  block_j: int = _fs.DEFAULT_BLOCK_J):
+    """Eq. 1-4 victim selection. Returns (scores (J,), victim idx or -1)."""
+    J = demand.shape[0]
+    sz = jnp.sqrt(jnp.sum(jnp.square(
+        demand.astype(jnp.float32) / node_cap.astype(jnp.float32)), -1))
+    max_sz = jnp.max(jnp.where(running_be, sz, 0.0))
+    max_gp = jnp.max(jnp.where(running_be, gp.astype(jnp.float32), 0.0))
+    mask = running_be & under_cap
+
+    dp, _ = _pad_to(demand, 0, block_j)
+    fp, _ = _pad_to(node_free, 0, block_j, value=-1.0)  # ineligible padding
+    gpp, _ = _pad_to(gp.astype(jnp.float32), 0, block_j)
+    mp, _ = _pad_to(mask, 0, block_j, value=False)
+    scores, idx = _fs.fitgpp_score(
+        dp, fp, gpp, mp, te_demand, node_cap, max_sz, max_gp, s,
+        block_j=min(block_j, dp.shape[0]), interpret=_interpret())
+    return scores[:J], idx
+
+
+@jax.jit
+def ssd_chunk(xdt, loga, Bm, Cm):
+    """Mamba-2 intra-chunk SSD (zero initial state); see kernels/ssd_chunk."""
+    return _sc.ssd_chunk(xdt, loga, Bm, Cm, interpret=_interpret())

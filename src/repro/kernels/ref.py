@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jax.Array:
+    """GQA attention oracle. q (B, Sq, H, hd); k/v (B, Skv, KV, hd).
+
+    Queries are the LAST Sq positions of the Skv-long sequence
+    (q position i sits at absolute Skv - Sq + i).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits * (hd ** -0.5)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    Skv = k.shape[1]
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, _NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def lru_scan_ref(a: jax.Array, b: jax.Array,
+                 h0: jax.Array = None) -> jax.Array:
+    """Diagonal linear recurrence oracle. a, b (B, L, R); h0 (B, R)."""
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bc = jax.lax.associative_scan(
+        op, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    if h0 is not None:
+        Bc = Bc + A * h0.astype(jnp.float32)[:, None]
+    return Bc.astype(a.dtype)
+
+
+def ssd_chunk_ref(xdt: jax.Array, loga: jax.Array, Bm: jax.Array,
+                  Cm: jax.Array) -> jax.Array:
+    """Intra-chunk SSD quadratic dual form oracle (single chunk,
+    zero initial state). xdt (B, Q, H, P); loga (B, Q, H);
+    Bm/Cm (B, Q, H, N) — groups pre-broadcast to heads."""
+    z = jnp.cumsum(loga.astype(jnp.float32), axis=1)
+    T = z[:, :, None, :] - z[:, None, :, :]            # (B, Q, Q, H)
+    Q = loga.shape[1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, :, :, None], jnp.exp(T), 0.0)
+    scores = jnp.einsum("bqhn,bshn->bqsh", Cm.astype(jnp.float32),
+                        Bm.astype(jnp.float32))
+    y = jnp.einsum("bqsh,bqsh,bshp->bqhp", scores, L,
+                   xdt.astype(jnp.float32))
+    return y.astype(xdt.dtype)
+
+
+def fitgpp_score_ref(demand: jax.Array, gp: jax.Array, node_free: jax.Array,
+                     te_demand: jax.Array, running_be: jax.Array,
+                     under_cap: jax.Array, node_cap: jax.Array,
+                     s: float):
+    """Eq. 1-4 oracle. demand (J,3); node_free (J,3) = free vector of each
+    candidate's node; returns (victim_idx or -1, scores (J,))."""
+    sz = jnp.sqrt(jnp.sum((demand / node_cap) ** 2, axis=-1))
+    max_sz = jnp.maximum(jnp.max(jnp.where(running_be, sz, 0.0)), 1e-12)
+    max_gp = jnp.maximum(jnp.max(jnp.where(running_be, gp, 0.0)), 1e-12)
+    score = sz / max_sz + s * (gp / max_gp)
+    elig = jnp.all(te_demand[None, :] <= demand + node_free, axis=1)
+    mask = running_be & elig & under_cap
+    idx = jnp.argmin(jnp.where(mask, score, jnp.inf))
+    return jnp.where(mask.any(), idx, -1).astype(jnp.int32), score

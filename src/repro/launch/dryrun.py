@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before ANY other import (jax locks the
+# device count at first init). Everything below may import jax.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro import models, trainer                     # noqa: E402
+from repro.configs import (INPUT_SHAPES, SHAPE_SKIPS, get_config,  # noqa: E402
+                           list_archs, shape_is_supported)
+from repro.launch import roofline as rf               # noqa: E402
+from repro.launch.mesh import make_production_mesh    # noqa: E402
+from repro.optim import AdamWConfig                   # noqa: E402
+from repro.sharding import plans                      # noqa: E402
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh).
+
+For each combination this produces
+  * memory_analysis()  — per-device bytes (args/outputs/temps): the
+    "does it fit" evidence,
+  * cost_analysis()    — raw XLA FLOPs/bytes (loop bodies counted once;
+    see roofline.py),
+  * parsed collective traffic (loop-multiplicity corrected), and
+  * the three roofline terms,
+written as JSON artifacts under experiments/dryrun/.
+"""
+
+
+def variant_config(arch: str, shape_name: str):
+    """Apply the long_500k sliding-window decode variant where needed."""
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and cfg.window == 0 and cfg.decode_window:
+        cfg = cfg.replace(window=cfg.decode_window)
+    return cfg
+
+
+def lower_one(arch: str, shape_name: str, mesh, *, compile_: bool = True):
+    """-> result dict (raises on lowering/compile failure)."""
+    cfg = variant_config(arch, shape_name)
+    shape = INPUT_SHAPES[shape_name]
+    plan = plans.arch_plan(cfg, shape, mesh)
+    cfg = cfg.replace(remat=plan.remat)       # plan controls remat policy
+    from repro.sharding import constraints
+    constraints.set_strategy(plan.strategy)
+    ocfg = AdamWConfig(moment_dtype=plan.opt_dtype)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        state_abs = trainer.abstract_train_state(cfg, ocfg)
+        batch_abs = models.input_specs(cfg, shape.global_batch,
+                                       shape.seq_len, "train")
+        state_sh = plans.train_state_sharding(cfg, plan, mesh, state_abs)
+        batch_sh = plans.batch_sharding(batch_abs, plan, mesh)
+        fn = trainer.make_train_step(cfg, ocfg, plan.microbatches)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                              donate_argnums=(0,)).lower(state_abs, batch_abs)
+    elif shape.kind == "prefill":
+        params_abs = models.abstract_params(cfg)
+        batch_abs = models.input_specs(cfg, shape.global_batch,
+                                       shape.seq_len, "prefill")
+        p_sh = plans.param_sharding(cfg, plan, mesh)
+        b_sh = plans.batch_sharding(batch_abs, plan, mesh)
+
+        def prefill_fn(params, batch):
+            return models.prefill(cfg, params, batch)
+
+        with mesh:
+            lowered = jax.jit(prefill_fn, in_shardings=(p_sh, b_sh)) \
+                .lower(params_abs, batch_abs)
+    else:  # decode
+        params_abs = models.abstract_params(cfg)
+        cache_abs = models.init_decode_cache(cfg, shape.global_batch,
+                                             shape.seq_len, abstract=True)
+        tok_abs = models.input_specs(cfg, shape.global_batch, shape.seq_len,
+                                     "decode")
+        p_sh = plans.param_sharding(cfg, plan, mesh)
+        c_sh = plans.cache_sharding(cfg, plan, mesh, cache_abs)
+        t_sh = plans.batch_sharding(tok_abs, plan, mesh)
+
+        def decode_fn(params, cache, batch):
+            return models.serve_step(cfg, params, cache, batch["tokens"])
+
+        with mesh:
+            lowered = jax.jit(decode_fn, in_shardings=(p_sh, c_sh, t_sh),
+                              donate_argnums=(1,)) \
+                .lower(params_abs, cache_abs, tok_abs)
+    lower_s = time.time() - t0
+
+    n_chips = mesh.size
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_chips": n_chips, "kind": shape.kind,
+        "microbatches": plan.microbatches, "opt_dtype": plan.opt_dtype,
+        "strategy": plan.strategy,
+        "lower_s": round(lower_s, 1),
+    }
+    if not compile_:
+        return result
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t0, 1)
+
+    ma = compiled.memory_analysis()
+    result["memory"] = {
+        "argument_gb": ma.argument_size_in_bytes / 1e9,
+        "output_gb": ma.output_size_in_bytes / 1e9,
+        "alias_gb": ma.alias_size_in_bytes / 1e9,
+        "temp_gb": ma.temp_size_in_bytes / 1e9,
+        "peak_gb": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    - ma.alias_size_in_bytes + ma.temp_size_in_bytes) / 1e9,
+    }
+    ca = compiled.cost_analysis() or {}
+    result["cost_analysis"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+    coll = rf.collective_bytes(compiled.as_text())
+    details = coll.pop("_details", [])
+    result["collectives"] = coll
+    result["top_collectives"] = [
+        {"gb": b / 1e9, "kind": kind, "mult": m, "op": line[:120]}
+        for b, kind, m, line in details[:8]]
+
+    shape_obj = INPUT_SHAPES[shape_name]
+    r = rf.roofline(variant_config(arch, shape_name), shape_obj, n_chips,
+                    coll["total"], float(ca.get("flops", 0.0)))
+    result["roofline"] = {
+        "compute_s": r.compute_s, "memory_s": r.memory_s,
+        "collective_s": r.collective_s, "dominant": r.dominant,
+        "model_flops": r.model_flops, "analytic_flops": r.analytic_flops,
+        "hlo_flops_raw_per_device": r.hlo_flops_raw,
+        "useful_ratio": r.useful_ratio,
+    }
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (see configs.list_archs)")
+    ap.add_argument("--shape", default="all",
+                    help="input shape name or 'all'")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-compile", action="store_true",
+                    help="lower only (fast structural check)")
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape_name in shapes:
+                if not shape_is_supported(arch, shape_name):
+                    print(f"SKIP  {arch} × {shape_name}: "
+                          f"{SHAPE_SKIPS[(arch, shape_name)]}")
+                    continue
+                tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+                try:
+                    res = lower_one(arch, shape_name, mesh,
+                                    compile_=not args.no_compile)
+                    path = os.path.join(args.out, tag + ".json")
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=1)
+                    mem = res.get("memory", {})
+                    roof = res.get("roofline", {})
+                    print(f"OK    {tag}  lower={res['lower_s']}s "
+                          f"compile={res.get('compile_s', '-')}s "
+                          f"peak={mem.get('peak_gb', 0):.1f}GB "
+                          f"dominant={roof.get('dominant', '-')}")
+                except Exception as e:                      # noqa: BLE001
+                    failures.append((tag, repr(e)))
+                    print(f"FAIL  {tag}: {e!r}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for tag, err in failures:
+            print(" ", tag, err[:200])
+        sys.exit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,287 @@
+"""Roofline-term extraction from a compiled dry-run.
+
+Three terms per (arch × shape × mesh), all in seconds (v5e constants):
+
+  compute    = FLOPs        / (chips * 197e12)
+  memory     = HBM bytes    / (chips * 819e9)
+  collective = link bytes   / (chips * 50e9)
+
+Sources:
+  * collective bytes — parsed from the compiled HLO, with while-loop
+    bodies multiplied by their ``known_trip_count`` (XLA's own
+    cost_analysis counts loop bodies ONCE, which would undercount the
+    per-layer TP collectives inside the layer scan by n_layers).
+  * FLOPs / HBM bytes — analytic per-arch model (below), cross-checked
+    against ``cost_analysis()`` on an unrolled lowering (REPRO_UNROLL_
+    SCANS=1) at small scale; the raw (loop-undercounted) cost_analysis
+    numbers are reported alongside for transparency.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import InputShape, ModelConfig
+
+# TPU v5e, from the brief
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# traffic multiplier per collective kind (ring algorithms, large-n limit)
+_COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# computation header: "%name (params...) -> result {" — params may contain
+# nested parens (tuples), so match only the leading name
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-_]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w.\-_]+), body=%?([\w.\-_]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?\).*?(?:to_apply|calls)=%?([\w.\-_]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum per-device collective traffic (bytes), loop-multiplicity aware.
+
+    Returns {op_kind: bytes, "total": bytes}.
+    """
+    # 1) split into computations (headers are non-indented "name (..) {"
+    # lines; bodies are indented and end with a bare "}")
+    current = None
+    comps = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        is_header = (line and not line[0].isspace()
+                     and stripped.endswith("{")
+                     and (stripped.startswith("%")
+                          or stripped.startswith("ENTRY")))
+        m = _COMP_RE.match(stripped) if is_header else None
+        if m:
+            current = m.group(1)
+            comps[current] = []
+        elif current is not None:
+            comps[current].append(line)
+        if stripped == "}":
+            current = None
+
+    # 2) multiplicity via while trip counts (+ calls), fixed-point
+    entry = None
+    for name in comps:
+        if "main" in name or name.startswith("jit_"):
+            entry = entry or name
+    mult = {name: 0.0 for name in comps}
+    if entry is None and comps:
+        entry = next(iter(comps))
+    mult[entry] = 1.0
+    edges = []   # (parent, child, factor)
+    for name, lines in comps.items():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                trip = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                edges.append((name, wm.group(2), float(trip)))
+                edges.append((name, wm.group(1), float(trip) + 1))
+                continue
+            cm = _CALL_RE.search(line)
+            if cm:
+                edges.append((name, cm.group(1), 1.0))
+    for _ in range(32):   # DAG depth bound
+        changed = False
+        new = {name: 0.0 for name in comps}
+        new[entry] = 1.0
+        for parent, child, f in edges:
+            if parent in mult and child in new:
+                new[child] += mult[parent] * f
+        if any(abs(new[k] - mult[k]) > 1e-9 for k in mult):
+            mult = new
+            changed = True
+        if not changed:
+            break
+
+    # 3) collect collectives
+    out = {k: 0.0 for k in _COLLECTIVE_FACTOR}
+    details = []
+    raw_total = 0.0
+    for name, lines in comps.items():
+        m = mult.get(name, 1.0)
+        for line in lines:
+            for kind, factor in _COLLECTIVE_FACTOR.items():
+                # match "= shape kind(" but not -done ops (avoid double
+                # counting start/done pairs)
+                if re.search(rf"=\s+\S+\s+{kind}(-start)?\(", line):
+                    b = _shape_bytes(line.split("=", 1)[1]
+                                     .split("(", 1)[0]) * factor * m
+                    raw_total += b
+                    # CPU-backend artifact: XLA upcasts bf16 matmuls to
+                    # f32 (no native bf16 on host) and SPMD then moves
+                    # collectives after the convert. On TPU these run in
+                    # bf16 — halve f32 collectives fed by a convert.
+                    if " f32[" in line.split("=", 1)[1].split("(")[0] and \
+                            "convert" in line.split("(", 1)[1]:
+                        b *= 0.5
+                    out[kind] += b
+                    details.append((b, kind, m, line.strip()[:160]))
+                    break
+    out["total"] = sum(out.values())
+    out["total_raw_f32"] = raw_total
+    out["_details"] = sorted(details, reverse=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs / HBM bytes
+# ---------------------------------------------------------------------------
+
+def _matmul_params(cfg: ModelConfig) -> Tuple[float, float]:
+    """-> (active matmul params per token, total params)."""
+    from repro import models
+    total = models.count_params(cfg)
+    embed = cfg.vocab * cfg.d_model
+    active = total - embed            # embed lookup is a gather
+    if cfg.family == "moe":
+        m = cfg.moe
+        per_ffn = cfg.d_model * m.d_expert * (3 if cfg.gated_mlp else 2)
+        inactive = cfg.n_layers * per_ffn * (m.num_experts - m.top_k)
+        active -= inactive
+    if not cfg.tie_embeddings:
+        pass                          # out_head already in total
+    else:
+        active += cfg.vocab * cfg.d_model   # tied unembed matmul
+    return float(active), float(total)
+
+
+def _attn_flops_per_token(cfg: ModelConfig, kv_len: float) -> float:
+    """QK^T + PV flops for one query token against kv_len keys."""
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        H = (s.expand * cfg.d_model) // s.head_dim
+        # intra-chunk dual form + state update/read
+        return 2.0 * H * (s.chunk * (s.d_state + s.head_dim)
+                          + 2 * s.head_dim * s.d_state)
+    attn_layers = cfg.n_layers
+    win = cfg.window
+    if cfg.family == "hybrid":
+        pat = cfg.recurrent.block_pattern
+        attn_layers = cfg.n_layers * pat.count("attn") / len(pat)
+        win = cfg.recurrent.local_window
+        R = cfg.recurrent.lru_width or cfg.d_model
+        rec_layers = cfg.n_layers - attn_layers
+        rec = rec_layers * 6.0 * R          # RG-LRU elementwise recurrence
+    else:
+        rec = 0.0
+    eff = min(kv_len, win) if win > 0 else kv_len
+    return 4.0 * attn_layers * eff * cfg.n_heads * cfg.head_dim + rec
+
+
+def analytic_costs(cfg: ModelConfig, shape: InputShape) -> Dict[str, float]:
+    """Global (all-chips) FLOPs and HBM bytes for ONE step of this shape.
+
+    train: fwd + bwd (2x) + full-remat recompute (~1x) = 4x matmul fwd.
+    decode: one token per sequence against the cache.
+    Returns MODEL_FLOPS (6·N_active·D, the "useful" number) separately.
+    """
+    active, total = _matmul_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    p_bytes = 2.0                      # bf16 params
+    if shape.kind == "train":
+        tokens = float(B) * S
+        mm = 2.0 * active * tokens * 4.0          # fwd+bwd+remat
+        # causal attention: mean kv_len = S/2 (fwd), x4 train multiplier
+        at = _attn_flops_per_token(cfg, S / 2) * tokens * 4.0
+        flops = mm + at
+        model_flops = 6.0 * active * tokens
+        # params fwd+bwd + grads + adam m/v read+write (f32-equivalents)
+        opt_bytes = 2 * total * 4.0
+        hbm = (2 * total * p_bytes            # fwd + bwd param reads
+               + total * 4.0                  # grad write (f32)
+               + 2 * opt_bytes                # moments read + write
+               + tokens * cfg.d_model * p_bytes * cfg.n_layers * 2)  # acts
+    elif shape.kind == "prefill":
+        tokens = float(B) * S
+        flops = 2.0 * active * tokens + \
+            _attn_flops_per_token(cfg, S / 2) * tokens
+        model_flops = 2.0 * active * tokens
+        hbm = total * p_bytes + tokens * cfg.d_model * p_bytes * \
+            cfg.n_layers * 2
+    else:   # decode: ONE new token, cache of seq_len
+        tokens = float(B)
+        kv_len = float(S)
+        flops = 2.0 * active * tokens + \
+            _attn_flops_per_token(cfg, kv_len) * tokens
+        model_flops = 2.0 * active * tokens
+        hbm = total * p_bytes + _cache_bytes(cfg, B, S)
+    return {"flops": flops, "model_flops": model_flops, "hbm_bytes": hbm}
+
+
+def _cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        H = (s.expand * cfg.d_model) // s.head_dim
+        return 2.0 * cfg.n_layers * B * H * s.head_dim * s.d_state * 2
+    win = cfg.window or (cfg.decode_window if S > 65536 else 0)
+    eff = min(S, win) if win > 0 else S
+    kv = 2.0 * cfg.n_layers * B * eff * cfg.n_kv_heads * cfg.head_dim * 2
+    if cfg.family == "hybrid":
+        pat = cfg.recurrent.block_pattern
+        kv *= pat.count("attn") / len(pat)
+        R = cfg.recurrent.lru_width or cfg.d_model
+        kv += 2.0 * cfg.n_layers * pat.count("rec") / len(pat) * B * R * 2
+    return kv
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_raw: float          # cost_analysis (loops counted once)
+    analytic_flops: float
+    dominant: str
+    useful_ratio: float           # MODEL_FLOPS / analytic FLOPs
+
+
+def roofline(cfg: ModelConfig, shape: InputShape, n_chips: int,
+             coll_bytes_per_device: float,
+             hlo_flops_raw: float) -> Roofline:
+    a = analytic_costs(cfg, shape)
+    compute_s = a["flops"] / (n_chips * PEAK_FLOPS)
+    memory_s = a["hbm_bytes"] / (n_chips * HBM_BW)
+    collective_s = coll_bytes_per_device / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops=a["model_flops"], hlo_flops_raw=hlo_flops_raw,
+        analytic_flops=a["flops"], dominant=dominant,
+        useful_ratio=a["model_flops"] / max(a["flops"], 1.0),
+    )

@@ -1,0 +1,113 @@
+"""Model registry: family -> module, plus uniform abstract/spec helpers."""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+_FAMILY_MODULES = {
+    "dense": "dense",
+    "moe": "moe",
+    "ssm": "ssm",
+    "hybrid": "hybrid",
+    "audio": "whisper",
+    "vlm": "vlm",
+}
+
+
+def get_module(cfg: ModelConfig):
+    return importlib.import_module(
+        f"repro.models.{_FAMILY_MODULES[cfg.family]}")
+
+
+def init(cfg: ModelConfig, rng: jax.Array):
+    return get_module(cfg).init(cfg, rng)
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct tree for dry-run lowering — no allocation."""
+    from repro.models import common
+    return common.abstract(get_module(cfg).param_defs(cfg), cfg.dtype)
+
+
+def param_logical_specs(cfg: ModelConfig):
+    from repro.models import common
+    return common.logical_specs(get_module(cfg).param_defs(cfg))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    from repro.models import common
+    return common.count_params(get_module(cfg).param_defs(cfg))
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> jax.Array:
+    return get_module(cfg).loss_fn(cfg, params, batch)
+
+
+def forward(cfg: ModelConfig, params, batch):
+    mod = get_module(cfg)
+    if cfg.family in ("audio", "vlm"):
+        return mod.forward(cfg, params, batch)
+    return mod.forward(cfg, params, batch["tokens"])
+
+
+def prefill(cfg: ModelConfig, params, batch, pad_to: int = 0):
+    mod = get_module(cfg)
+    if cfg.family in ("audio", "vlm"):
+        return mod.prefill(cfg, params, batch, pad_to=pad_to)
+    return mod.prefill(cfg, params, batch["tokens"], pad_to=pad_to)
+
+
+def serve_step(cfg: ModelConfig, params, cache, tokens):
+    return get_module(cfg).serve_step(cfg, params, cache, tokens)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, context_len: int,
+                      abstract: bool = False):
+    return get_module(cfg).init_decode_cache(cfg, batch, context_len,
+                                             abstract=abstract)
+
+
+def cache_logical_specs(cfg: ModelConfig):
+    from repro.models import attention
+    mod = get_module(cfg)
+    if hasattr(mod, "cache_logical_specs"):
+        return mod.cache_logical_specs()
+    return attention.cache_logical_specs()
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins; also shapes for the data pipeline)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                kind: str) -> dict:
+    """ShapeDtypeStructs for one step's inputs.
+
+    ``kind``: train | prefill -> full batch dict; decode -> one token
+    (the cache is built separately via ``init_decode_cache(abstract=)``).
+
+    For audio/vlm the modality frontend is stubbed: the spec hands the
+    model precomputed frame/patch embeddings of the right shape, and the
+    declared ``seq_len`` covers frontend tokens + text tokens.
+    """
+    s = jax.ShapeDtypeStruct
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    if kind == "decode":
+        return {"tokens": s((batch, 1), i32)}
+    if cfg.family == "audio":
+        F = cfg.encoder.n_frontend_tokens
+        dec = max(seq_len - F, 8)
+        return {"audio_embeds": s((batch, F, cfg.d_model), f),
+                "tokens": s((batch, dec), i32)}
+    if cfg.family == "vlm":
+        nv = cfg.vlm.n_visual_tokens
+        txt = max(seq_len - nv, 8)
+        return {"visual_embeds": s((batch, nv, cfg.vlm.d_visual), f),
+                "tokens": s((batch, txt), i32)}
+    return {"tokens": s((batch, seq_len), i32)}

@@ -1,0 +1,157 @@
+"""GQA attention: query-chunked reference path + KV-cache utilities.
+
+The pure-jnp path is the XLA/dry-run implementation (Pallas TPU kernels
+cannot lower on the CPU container backend); ``repro.kernels.ops`` provides
+the TPU flash kernel with identical semantics, selected via
+``REPRO_ATTN_IMPL=pallas``. Memory behaviour of the jnp path matches the
+flash kernel's O(S) footprint by scanning over query blocks instead of
+materializing the full (Sq, Skv) score matrix.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+_NEG_INF = -1e30
+
+
+def _impl() -> str:
+    return os.environ.get("REPRO_ATTN_IMPL", "jnp")
+
+
+def _scores_softmax_pv(q, k, v, mask, softcap_val):
+    """q: (B, Sq, KV, QpK, hd); k/v: (B, Skv, KV, hd); mask (B?, Sq, Skv)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = common.softcap(logits, softcap_val)
+    m = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    logits = jnp.where(m, logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out
+
+
+def attend(
+    q: jax.Array,                 # (B, Sq, H, hd)
+    k: jax.Array,                 # (B, Skv, KV, hd)
+    v: jax.Array,                 # (B, Skv, KV, hd)
+    *,
+    mask: jax.Array,              # (Sq, Skv) or (B, Sq, Skv) bool
+    softcap_val: float = 0.0,
+    q_chunk: int = 1024,
+    causal: Optional[bool] = None,   # semantic hints enabling the Pallas
+    window: int = 0,                 # kernel path (mask stays the oracle)
+) -> jax.Array:
+    """Grouped-query attention. Returns (B, Sq, H, hd).
+
+    Scans over query chunks so peak memory is O(q_chunk * Skv), matching
+    the flash kernel's footprint class instead of O(Sq * Skv).
+
+    When ``REPRO_ATTN_IMPL=pallas`` and the caller supplied the semantic
+    hints (``causal``/``window`` describing ``mask``), dispatches to the
+    TPU flash kernel instead of the jnp path.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, Sq, KV, H // KV, hd)
+
+    if _impl() == "pallas" and Sq > 1 and causal is not None:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window,
+                                    softcap=softcap_val)
+
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        out = _scores_softmax_pv(qg, k, v, mask, softcap_val)
+        return out.reshape(B, Sq, H, hd)
+
+    n = Sq // q_chunk
+    qs = qg.reshape(B, n, q_chunk, KV, H // KV, hd).swapaxes(0, 1)
+    if mask.ndim == 2:
+        ms = mask.reshape(n, q_chunk, mask.shape[-1])
+    else:
+        ms = mask.reshape(B, n, q_chunk, mask.shape[-1]).swapaxes(0, 1)
+
+    def step(_, qm):
+        qc, mc = qm
+        return None, _scores_softmax_pv(qc, k, v, mc, softcap_val)
+
+    _, outs = common.scan(step, None, (qs, ms))
+    out = outs.swapaxes(0, 1).reshape(B, Sq, KV, H // KV, hd)
+    return out.reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+# A cache is a dict pytree:
+#   k, v     : (L, B, S_cache, KV, hd)
+#   kv_pos   : (S_cache,) int32 — absolute position held by each slot,
+#              -1 if empty. Shared across layers/batch (all sequences in a
+#              batch advance in lockstep for our serving model).
+#   next_pos : () int32 — absolute position of the NEXT token to write.
+# For a full cache S_cache == max_len and slot i holds position i.
+# For a ring (sliding-window) cache S_cache == window and slot
+# (pos % window) holds position pos.
+
+
+def init_cache(n_layers: int, batch: int, cache_len: int, n_kv: int,
+               head_dim: int, dtype) -> dict:
+    return {
+        "k": jnp.zeros((n_layers, batch, cache_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((n_layers, batch, cache_len, n_kv, head_dim), dtype),
+        "kv_pos": jnp.full((cache_len,), -1, jnp.int32),
+        "next_pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_cache(n_layers: int, batch: int, cache_len: int, n_kv: int,
+                   head_dim: int, dtype) -> dict:
+    s = jax.ShapeDtypeStruct
+    d = jnp.dtype(dtype)
+    return {
+        "k": s((n_layers, batch, cache_len, n_kv, head_dim), d),
+        "v": s((n_layers, batch, cache_len, n_kv, head_dim), d),
+        "kv_pos": s((cache_len,), jnp.int32),
+        "next_pos": s((), jnp.int32),
+    }
+
+
+def cache_logical_specs() -> dict:
+    """Logical axes for cache leaves (see sharding/plans.py)."""
+    return {
+        "k": ("layers", "cache_batch", "cache_seq", "kv", "head_dim"),
+        "v": ("layers", "cache_batch", "cache_seq", "kv", "head_dim"),
+        "kv_pos": (None,),
+        "next_pos": (),
+    }
+
+
+def cache_write_slot(cache_len: int, pos: jax.Array, ring: bool) -> jax.Array:
+    return jnp.where(ring, pos % cache_len, pos) if isinstance(ring, jax.Array) \
+        else (pos % cache_len if ring else pos)
+
+
+def decode_mask(q_pos: jax.Array, kv_pos: jax.Array,
+                window: int = 0) -> jax.Array:
+    """Mask for one-token decode. q_pos (), kv_pos (S,). Returns (1, S)."""
+    m = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window > 0:
+        m &= kv_pos > q_pos - window
+    return m[None, :]
+
+
+def update_layer_cache(k_l: jax.Array, v_l: jax.Array, new_k: jax.Array,
+                       new_v: jax.Array, slot: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Write one token's (B, 1, KV, hd) into layer cache (B, S, KV, hd)."""
+    k_l = jax.lax.dynamic_update_slice(k_l, new_k.astype(k_l.dtype),
+                                       (0, slot, 0, 0))
+    v_l = jax.lax.dynamic_update_slice(v_l, new_v.astype(v_l.dtype),
+                                       (0, slot, 0, 0))
+    return k_l, v_l

@@ -1,0 +1,188 @@
+"""Shared model machinery: param definitions, init, abstract shapes, specs.
+
+Models are pure-functional: parameters are nested dicts of arrays. Each
+model module defines its parameters once as a tree of :class:`ParamDef`
+(shape + logical axes + initializer); from that single source of truth we
+derive
+
+* ``init``          — materialized parameters (smoke scale, CPU),
+* ``abstract``      — ShapeDtypeStruct tree (dry-run, no allocation),
+* ``logical_specs`` — matching tree of logical-axis tuples consumed by
+  ``sharding/plans.py`` to build PartitionSpecs.
+
+Logical axis vocabulary (see sharding/plans.py for the mesh mapping):
+  "layers"   stacked scan dim (never sharded)
+  "embed"    d_model            "mlp"     d_ff / expert hidden
+  "heads"    q heads            "kv"      kv heads
+  "head_dim" per-head dim       "vocab"   vocabulary
+  "experts"  MoE expert dim     "state"   SSM/LRU state dims
+  None       replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def scan(body, init, xs, length=None):
+    """lax.scan that fully unrolls when REPRO_UNROLL_SCANS=1.
+
+    The dry-run sets this flag so ``compiled.cost_analysis()`` counts every
+    layer (XLA reports while-loop bodies ONCE, regardless of trip count —
+    unrolling makes the FLOP/byte roofline terms exact at the cost of a
+    bigger HLO).
+    """
+    unroll = os.environ.get("REPRO_UNROLL_SCANS") == "1"
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if unroll else 1)
+
+Params = Any      # nested dict of arrays
+Tree = Any
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | lru_lambda
+    scale: Optional[float] = None   # None -> 1/sqrt(fan_in) for "normal"
+    dtype: Optional[str] = None     # None -> model dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # Convention: last axis is the output axis for projection matrices.
+    if len(shape) <= 1:
+        return max(shape[0] if shape else 1, 1)
+    return int(np.prod(shape[:-1]))
+
+
+def materialize(defs: Tree, rng: jax.Array, dtype: str) -> Params:
+    """Initialize a ParamDef tree into real arrays."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for d, k in zip(leaves, rngs):
+        dt = jnp.dtype(d.dtype or dtype)
+        if d.init == "zeros":
+            arr = jnp.zeros(d.shape, dt)
+        elif d.init == "ones":
+            arr = jnp.ones(d.shape, dt)
+        elif d.init == "lru_lambda":
+            # RG-LRU Lambda param: recurrence decay in [0.9, 0.999]
+            u = jax.random.uniform(k, d.shape, jnp.float32,
+                                   minval=0.9, maxval=0.999)
+            # stored as softplus^-1 of -log(a_max) style parameterization
+            val = jnp.log(jnp.expm1(-jnp.log(u)))
+            arr = val.astype(dt)
+        else:
+            scale = d.scale if d.scale is not None else 1.0 / math.sqrt(_fan_in(d.shape))
+            arr = (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dt)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(defs: Tree, dtype: str) -> Tree:
+    """ShapeDtypeStruct tree — dry-run stand-in, no allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype or dtype)),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def logical_specs(defs: Tree) -> Tree:
+    """Tree of logical-axes tuples matching the param tree structure."""
+    return jax.tree.map(lambda d: d.axes, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def count_params(defs: Tree) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Common layer math (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def activate(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "sq_relu":              # Nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., :, None, :]   # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_mask(sq: int, skv: int, *, q_offset: int = 0,
+                window: int = 0) -> jax.Array:
+    """(sq, skv) boolean mask; True = attend. Query i sits at absolute
+    position ``q_offset + i``; keys at 0..skv-1."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE. logits (..., V) float; labels int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,248 @@
+"""Dense decoder-only LM (command-r, stablelm, nemotron-4, mistral-large).
+
+Pre-norm GQA transformer with RoPE, gated or plain MLP, scan-over-layers
+with configurable remat. Also exports the layer building blocks reused by
+the MoE and VLM models.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common
+from repro.models.common import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig, L: int) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "attn_norm": ParamDef((L, D), ("layers", "embed"), init="zeros"),
+        "wq": ParamDef((L, D, H, hd), ("layers", "embed", "heads", "head_dim")),
+        "wk": ParamDef((L, D, KV, hd), ("layers", "embed", "kv", "head_dim")),
+        "wv": ParamDef((L, D, KV, hd), ("layers", "embed", "kv", "head_dim")),
+        "wo": ParamDef((L, H, hd, D), ("layers", "heads", "head_dim", "embed")),
+    }
+
+
+def mlp_defs(cfg: ModelConfig, L: int) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    defs = {
+        "mlp_norm": ParamDef((L, D), ("layers", "embed"), init="zeros"),
+        "w_up": ParamDef((L, D, F), ("layers", "embed", "mlp")),
+        "w_down": ParamDef((L, F, D), ("layers", "mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        defs["w_gate"] = ParamDef((L, D, F), ("layers", "embed", "mlp"))
+    return defs
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    defs = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), scale=0.02),
+        "final_norm": ParamDef((D,), ("embed",), init="zeros"),
+        "layers": {**attn_defs(cfg, L), **mlp_defs(cfg, L)},
+    }
+    if not cfg.tie_embeddings:
+        defs["out_head"] = ParamDef((D, V), ("embed", "vocab"))
+    return defs
+
+
+def init(cfg: ModelConfig, rng: jax.Array):
+    return common.materialize(param_defs(cfg), rng, cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def attn_block(cfg: ModelConfig, lp: dict, x: jax.Array,
+               positions: jax.Array, mask: jax.Array,
+               window: int = None,
+               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention sublayer. x (B, S, D). Returns (out, (k, v)).
+
+    ``window`` defaults to ``cfg.window``; hybrid passes its local window.
+    """
+    if window is None:
+        window = cfg.window
+    from repro.sharding.constraints import BATCH, SEQ, constrain
+    h = common.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dnh->bsnh", h, lp["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", h, lp["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", h, lp["wv"])
+    q = constrain(q, BATCH, None, "model", None)
+    q = common.rope(q, positions, cfg.rope_theta)
+    k = common.rope(k, positions, cfg.rope_theta)
+    o = attention.attend(q, k, v, mask=mask, causal=True, window=window)
+    o = constrain(o, BATCH, None, "model", None)
+    out = jnp.einsum("bsnh,nhd->bsd", o, lp["wo"])
+    out = constrain(out, BATCH, SEQ, None)
+    return out, (k, v)
+
+
+def attn_decode_block(cfg: ModelConfig, lp: dict, x: jax.Array,
+                      k_cache: jax.Array, v_cache: jax.Array,
+                      pos: jax.Array, slot: jax.Array, mask: jax.Array,
+                      ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One-token attention. x (B, 1, D); caches (B, S, KV, hd)."""
+    h = common.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dnh->bsnh", h, lp["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", h, lp["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", h, lp["wv"])
+    posv = jnp.full((1,), 0, jnp.int32) + pos
+    q = common.rope(q, posv, cfg.rope_theta)
+    k = common.rope(k, posv, cfg.rope_theta)
+    k_cache, v_cache = attention.update_layer_cache(k_cache, v_cache, k, v, slot)
+    o = attention.attend(q, k_cache, v_cache, mask=mask)
+    out = jnp.einsum("bsnh,nhd->bsd", o, lp["wo"])
+    return out, (k_cache, v_cache)
+
+
+def mlp_block(cfg: ModelConfig, lp: dict, x: jax.Array) -> jax.Array:
+    from repro.sharding.constraints import BATCH, SEQ, constrain
+    h = common.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,df->bsf", h, lp["w_up"])
+    up = constrain(up, BATCH, None, "model")
+    if cfg.gated_mlp:
+        gate = jnp.einsum("bsd,df->bsf", h, lp["w_gate"])
+        act = common.activate(gate, cfg.activation) * up
+    else:
+        act = common.activate(up, cfg.activation)
+    out = jnp.einsum("bsf,fd->bsd", act, lp["w_down"])
+    return constrain(out, BATCH, SEQ, None)
+
+
+def _layer(cfg: ModelConfig, x, lp, positions, mask):
+    a, kv = attn_block(cfg, lp, x, positions, mask)
+    x = x + a
+    x = x + mlp_block(cfg, lp, x)
+    return x, kv
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return fn
+
+
+def _stack(cfg: ModelConfig, x, layers, positions, mask, collect_kv: bool):
+    body = _maybe_remat(
+        cfg, functools.partial(_layer, cfg, positions=positions, mask=mask))
+
+    def step(h, lp):
+        h, kv = body(h, lp)
+        return h, kv if collect_kv else None
+
+    x, kvs = common.scan(step, x, layers)
+    return x, kvs
+
+
+def unembed(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["out_head"])
+    return common.softcap(logits, cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Public model API
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    """Training/scoring forward. tokens (B, S) -> logits (B, S, V)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(S)
+    mask = common.causal_mask(S, S, window=cfg.window)
+    x, _ = _stack(cfg, x, params["layers"], positions, mask, collect_kv=False)
+    return unembed(cfg, params, x)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"])
+    return common.cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            pad_to: int = 0) -> Tuple[jax.Array, dict]:
+    """Build a KV cache from a prompt. Returns (last-token logits, cache).
+
+    ``pad_to`` reserves cache room for subsequent decode steps.
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(S)
+    mask = common.causal_mask(S, S, window=cfg.window)
+    x, kvs = _stack(cfg, x, params["layers"], positions, mask, collect_kv=True)
+    logits = unembed(cfg, params, x[:, -1:])
+    k, v = kvs
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    if pad_to > S:
+        pad = [(0, 0), (0, 0), (0, pad_to - S), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        kv_pos = jnp.concatenate(
+            [kv_pos, jnp.full((pad_to - S,), -1, jnp.int32)])
+    cache = {"k": k, "v": v, "kv_pos": kv_pos,
+             "next_pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, context_len: int,
+                      abstract: bool = False) -> dict:
+    """Cache for serve_step. Ring buffer of the window size when the arch
+    has sliding-window attention; else full ``context_len``.
+
+    Note: ``cfg.decode_window`` (the beyond-paper long-context variant) is
+    applied by the *launcher* via ``cfg.replace(window=cfg.decode_window)``
+    for the ``long_500k`` shape only — this module honours ``cfg.window``.
+    """
+    w = min(cfg.window, context_len) if cfg.window > 0 else 0
+    cache_len = w if w > 0 else context_len
+    fn = attention.abstract_cache if abstract else attention.init_cache
+    return fn(cfg.n_layers, batch, cache_len, cfg.n_kv_heads, cfg.head_dim,
+              jnp.dtype(cfg.dtype))
+
+
+def serve_step(cfg: ModelConfig, params: dict, cache: dict,
+               tokens: jax.Array) -> Tuple[jax.Array, dict]:
+    """Decode ONE token. tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    B, _ = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    pos = cache["next_pos"]
+    cache_len = cache["k"].shape[2]
+    w = cfg.window   # 0 = full attention (see init_decode_cache docstring)
+    # Ring buffer only when the cache was allocated at exactly the window
+    # size (init_decode_cache); a prefill-padded full cache writes at pos.
+    ring = w > 0 and cache_len == w
+    slot = pos % cache_len if ring else pos
+    kv_pos = cache["kv_pos"].at[slot].set(pos)   # current token attends to itself
+    mask = attention.decode_mask(pos, kv_pos, window=w)
+
+    body = functools.partial(attn_decode_block, cfg)
+
+    def step(h, layer_in):
+        lp, k_l, v_l = layer_in
+        a, (k_l, v_l) = body(lp, h, k_l, v_l, pos, slot, mask)
+        h = h + a
+        h = h + mlp_block(cfg, lp, h)
+        return h, (k_l, v_l)
+
+    x, (ks, vs) = common.scan(step, x,
+                              (params["layers"], cache["k"], cache["v"]))
+    logits = unembed(cfg, params, x)
+    new_cache = {"k": ks, "v": vs, "kv_pos": kv_pos, "next_pos": pos + 1}
+    return logits, new_cache

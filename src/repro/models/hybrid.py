@@ -1,0 +1,385 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA.
+
+Block pattern ``(rec, rec, attn)`` repeated (2:1), every residual block
+followed by a GeGLU MLP. The RG-LRU linear recurrence is evaluated with
+``jax.lax.associative_scan`` (log-depth, shardable) for train/prefill and
+a single-step update for decode — constant-size state + a fixed local
+window make this arch natively ``long_500k``-capable.
+
+Gate matrices are block-diagonal with ``n_heads`` blocks (as in Griffin),
+which keeps them local under tensor parallelism over heads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, dense
+from repro.models.common import ParamDef
+
+_LRU_C = 8.0
+
+
+def layer_layout(cfg: ModelConfig):
+    """-> (n_groups, remainder_pattern, n_rec, n_attn)."""
+    pat = cfg.recurrent.block_pattern
+    g, rem = divmod(cfg.n_layers, len(pat))
+    rem_pat = pat[:rem]
+    n_rec = g * pat.count("rec") + rem_pat.count("rec")
+    n_attn = g * pat.count("attn") + rem_pat.count("attn")
+    return g, rem_pat, n_rec, n_attn
+
+
+def _rec_defs(cfg: ModelConfig, n: int) -> dict:
+    D = cfg.d_model
+    R = cfg.recurrent.lru_width or D
+    W = cfg.recurrent.d_conv
+    nb = cfg.n_heads                      # block-diagonal gate blocks
+    rb = R // nb
+    defs = {
+        "norm": ParamDef((n, D), ("layers", "embed"), init="zeros"),
+        "w_x": ParamDef((n, D, R), ("layers", "embed", "mlp")),
+        "w_gin": ParamDef((n, D, R), ("layers", "embed", "mlp")),
+        "conv_w": ParamDef((n, W, R), ("layers", None, "mlp"), scale=0.5),
+        "w_a": ParamDef((n, nb, rb, rb), ("layers", "heads", None, None)),
+        "b_a": ParamDef((n, R), ("layers", "mlp"), init="zeros"),
+        "w_i": ParamDef((n, nb, rb, rb), ("layers", "heads", None, None)),
+        "b_i": ParamDef((n, R), ("layers", "mlp"), init="zeros"),
+        "lam": ParamDef((n, R), ("layers", "mlp"), init="lru_lambda",
+                        dtype="float32"),
+        "w_out": ParamDef((n, R, D), ("layers", "mlp", "embed")),
+    }
+    defs.update(dense.mlp_defs(cfg, n))
+    return defs
+
+
+def _attn_defs(cfg: ModelConfig, n: int) -> dict:
+    defs = dense.attn_defs(cfg, n)
+    defs.update(dense.mlp_defs(cfg, n))
+    return defs
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    _, _, n_rec, n_attn = layer_layout(cfg)
+    D, V = cfg.d_model, cfg.vocab
+    defs = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), scale=0.02),
+        "final_norm": ParamDef((D,), ("embed",), init="zeros"),
+        "rec": _rec_defs(cfg, n_rec),
+        "attn": _attn_defs(cfg, n_attn),
+    }
+    if not cfg.tie_embeddings:
+        defs["out_head"] = ParamDef((D, V), ("embed", "vocab"))
+    return defs
+
+
+def init(cfg: ModelConfig, rng: jax.Array):
+    return common.materialize(param_defs(cfg), rng, cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def lru_scan(a: jax.Array, b: jax.Array, h0=None) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative scan. a, b (B, L, R) f32."""
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bc = jax.lax.associative_scan(op, (a, b), axis=1)
+    if h0 is not None:
+        return Bc + A * h0[:, None]
+    return Bc
+
+
+def _block_diag_mm(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x (..., R) @ block-diag w (nb, rb, rb) + b."""
+    nb, rb, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (nb, rb))
+    y = jnp.einsum("...nr,nrs->...ns", xs, w)
+    return y.reshape(x.shape) + b
+
+
+def _rg_lru_gates(lp: dict, xc: jax.Array):
+    """-> (log_a (f32), gated input (f32)). xc (B, L/1, R)."""
+    r = jax.nn.sigmoid(_block_diag_mm(xc, lp["w_a"], lp["b_a"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag_mm(xc, lp["w_i"], lp["b_i"])
+                       .astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(lp["lam"]) * r
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * i * xc.astype(jnp.float32)
+    return log_a, b
+
+
+def rec_mixer(cfg: ModelConfig, lp: dict, x: jax.Array,
+              conv_state=None, h_state=None, collect: bool = False):
+    """Recurrent temporal-mixing sublayer. x (B, L, D)."""
+    from repro.models.ssm import causal_conv
+    from repro.sharding.constraints import BATCH, constrain
+    h = common.rms_norm(x, lp["norm"], cfg.norm_eps)
+    xb = jnp.einsum("bld,dr->blr", h, lp["w_x"])
+    gate = jnp.einsum("bld,dr->blr", h, lp["w_gin"])
+    # pin row-parallel layout: lru width sharded over the model axis
+    # (without this, SPMD replicates the whole recurrent stack 16x)
+    xb = constrain(xb, BATCH, None, "model")
+    gate = constrain(gate, BATCH, None, "model")
+    xc, conv_out = causal_conv(xb, lp["conv_w"], conv_state)
+    log_a, b = _rg_lru_gates(lp, xc)
+    hs = lru_scan(jnp.exp(log_a), b,
+                  None if h_state is None else h_state.astype(jnp.float32))
+    y = hs.astype(x.dtype) * jax.nn.gelu(gate)
+    y = constrain(y, BATCH, None, "model")
+    out = jnp.einsum("blr,rd->bld", y, lp["w_out"])
+    out = constrain(out, BATCH, None, None)
+    if collect:
+        return out, (conv_out, hs[:, -1].astype(x.dtype))
+    return out, None
+
+
+def rec_mixer_step(cfg: ModelConfig, lp: dict, x: jax.Array,
+                   conv_state: jax.Array, h_state: jax.Array):
+    """One-token recurrent mixer. x (B, 1, D)."""
+    from repro.models.ssm import conv_step
+    h = common.rms_norm(x, lp["norm"], cfg.norm_eps)
+    xb = jnp.einsum("bld,dr->blr", h, lp["w_x"])
+    gate = jnp.einsum("bld,dr->blr", h, lp["w_gin"])
+    xc1, conv_out = conv_step(xb[:, 0], lp["conv_w"], conv_state)
+    log_a, b = _rg_lru_gates(lp, xc1)
+    hf = h_state.astype(jnp.float32) * jnp.exp(log_a) + b
+    y = hf[:, None].astype(x.dtype) * jax.nn.gelu(gate)
+    out = jnp.einsum("blr,rd->bld", y, lp["w_out"])
+    return out, (conv_out, hf.astype(x.dtype))
+
+
+def _rec_block(cfg, lp, x, conv_state=None, h_state=None, collect=False):
+    o, st = rec_mixer(cfg, lp, x, conv_state, h_state, collect)
+    x = x + o
+    x = x + dense.mlp_block(cfg, lp, x)
+    return x, st
+
+
+def _attn_block(cfg, lp, x, positions, mask, collect=False):
+    a, kv = dense.attn_block(cfg, lp, x, positions, mask,
+                             window=cfg.recurrent.local_window)
+    x = x + a
+    x = x + dense.mlp_block(cfg, lp, x)
+    return x, kv if collect else None
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence pass (scan over (rec, rec, attn) groups + remainder)
+# ---------------------------------------------------------------------------
+
+def _group_view(cfg: ModelConfig, params: dict):
+    """Reshape stacked rec/attn params into (groups, per-group) + remainder."""
+    g, rem_pat, n_rec, n_attn = layer_layout(cfg)
+    pat = cfg.recurrent.block_pattern
+    rpg = pat.count("rec")                # rec layers per group
+    apg = pat.count("attn")
+    grp_rec = jax.tree.map(
+        lambda p: p[: g * rpg].reshape((g, rpg) + p.shape[1:]), params["rec"])
+    grp_attn = jax.tree.map(
+        lambda p: p[: g * apg].reshape((g, apg) + p.shape[1:]), params["attn"])
+    rem_rec = jax.tree.map(lambda p: p[g * rpg:], params["rec"])
+    rem_attn = jax.tree.map(lambda p: p[g * apg:], params["attn"])
+    return grp_rec, grp_attn, rem_rec, rem_attn, rem_pat
+
+
+def _run_sequence(cfg: ModelConfig, params: dict, x: jax.Array,
+                  collect: bool):
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    mask = common.causal_mask(S, S, window=cfg.recurrent.local_window)
+    pat = cfg.recurrent.block_pattern
+    grp_rec, grp_attn, rem_rec, rem_attn, rem_pat = _group_view(cfg, params)
+
+    def group_body(h, grp):
+        rec_p, attn_p = grp
+        states = {"conv": [], "h": [], "k": [], "v": []}
+        ri = ai = 0
+        for kind in pat:
+            if kind == "rec":
+                lp = jax.tree.map(lambda p: p[ri], rec_p)
+                h, st = _rec_block(cfg, lp, h, collect=collect)
+                if collect:
+                    states["conv"].append(st[0])
+                    states["h"].append(st[1])
+                ri += 1
+            else:
+                lp = jax.tree.map(lambda p: p[ai], attn_p)
+                h, kv = _attn_block(cfg, lp, h, positions, mask, collect)
+                if collect:
+                    states["k"].append(kv[0])
+                    states["v"].append(kv[1])
+                ai += 1
+        out_state = None
+        if collect:
+            out_state = (jnp.stack(states["conv"]), jnp.stack(states["h"]),
+                         jnp.stack(states["k"]), jnp.stack(states["v"]))
+        return h, out_state
+
+    body = dense._maybe_remat(cfg, group_body)
+    x, grp_states = common.scan(lambda h, g: body(h, g), x,
+                                (grp_rec, grp_attn))
+
+    rem_states = {"conv": [], "h": [], "k": [], "v": []}
+    for j, kind in enumerate(rem_pat):
+        if kind == "rec":
+            lp = jax.tree.map(lambda p: p[j], rem_rec)
+            x, st = _rec_block(cfg, lp, x, collect=collect)
+            if collect:
+                rem_states["conv"].append(st[0])
+                rem_states["h"].append(st[1])
+        else:
+            lp = jax.tree.map(lambda p: p[j], rem_attn)
+            x, kv = _attn_block(cfg, lp, x, positions, mask, collect)
+            if collect:
+                rem_states["k"].append(kv[0])
+                rem_states["v"].append(kv[1])
+    return x, grp_states, rem_states
+
+
+def _flatten_states(cfg, grp_states, rem_states):
+    """-> cache arrays stacked over rec layers / attn layers."""
+    g, rem_pat, n_rec, n_attn = layer_layout(cfg)
+    pat = cfg.recurrent.block_pattern
+    rpg, apg = pat.count("rec"), pat.count("attn")
+    conv, hst, ks, vs = grp_states
+    # (g, rpg, B, ...) -> (g*rpg, B, ...)
+    conv = conv.reshape((g * rpg,) + conv.shape[2:])
+    hst = hst.reshape((g * rpg,) + hst.shape[2:])
+    ks = ks.reshape((g * apg,) + ks.shape[2:])
+    vs = vs.reshape((g * apg,) + vs.shape[2:])
+    if rem_states["conv"]:
+        conv = jnp.concatenate([conv, jnp.stack(rem_states["conv"])])
+        hst = jnp.concatenate([hst, jnp.stack(rem_states["h"])])
+    if rem_states["k"]:
+        ks = jnp.concatenate([ks, jnp.stack(rem_states["k"])])
+        vs = jnp.concatenate([vs, jnp.stack(rem_states["v"])])
+    return conv, hst, ks, vs
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    return x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = _embed(cfg, params, tokens)
+    x, _, _ = _run_sequence(cfg, params, x, collect=False)
+    return dense.unembed(cfg, params, x)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"])
+    return common.cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, context_len: int,
+                      abstract: bool = False) -> dict:
+    _, _, n_rec, n_attn = layer_layout(cfg)
+    R = cfg.recurrent.lru_width or cfg.d_model
+    W = cfg.recurrent.d_conv
+    win = min(cfg.recurrent.local_window, context_len)
+    dt = jnp.dtype(cfg.dtype)
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract \
+        else (lambda s, d: jnp.zeros(s, d))
+    cache = {
+        "conv": mk((n_rec, batch, W - 1, R), dt),
+        "h": mk((n_rec, batch, R), dt),
+        "k": mk((n_attn, batch, win, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": mk((n_attn, batch, win, cfg.n_kv_heads, cfg.head_dim), dt),
+        "kv_pos": mk((win,), jnp.int32) if abstract
+        else jnp.full((win,), -1, jnp.int32),
+        "next_pos": mk((), jnp.int32),
+    }
+    return cache
+
+
+def cache_logical_specs() -> dict:
+    return {
+        "conv": ("layers", "cache_batch", None, "mlp"),
+        "h": ("layers", "cache_batch", "mlp"),
+        "k": ("layers", "cache_batch", "cache_seq", "kv", "head_dim"),
+        "v": ("layers", "cache_batch", "cache_seq", "kv", "head_dim"),
+        "kv_pos": (None,),
+        "next_pos": (),
+    }
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            pad_to: int = 0) -> Tuple[jax.Array, dict]:
+    B, S = tokens.shape
+    x = _embed(cfg, params, tokens)
+    x, grp_states, rem_states = _run_sequence(cfg, params, x, collect=True)
+    logits = dense.unembed(cfg, params, x[:, -1:])
+    conv, hst, ks, vs = _flatten_states(cfg, grp_states, rem_states)
+    # Re-pack the last min(S, win) tokens into a ring cache of size win
+    # (slot of absolute position p is p % win) so serve_step can continue.
+    win = cfg.recurrent.local_window
+    keep = min(S, win)
+    sl = jnp.arange(S - keep, S)
+    ring_slot = sl % win
+    ks_w = jnp.zeros(ks.shape[:2] + (win,) + ks.shape[3:], ks.dtype)
+    vs_w = jnp.zeros_like(ks_w)
+    ks_w = ks_w.at[:, :, ring_slot].set(ks[:, :, sl])
+    vs_w = vs_w.at[:, :, ring_slot].set(vs[:, :, sl])
+    kv_pos = jnp.full((win,), -1, jnp.int32).at[ring_slot].set(sl)
+    ks, vs = ks_w, vs_w
+    cache = {"conv": conv, "h": hst, "k": ks, "v": vs, "kv_pos": kv_pos,
+             "next_pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def serve_step(cfg: ModelConfig, params: dict, cache: dict,
+               tokens: jax.Array) -> Tuple[jax.Array, dict]:
+    x = _embed(cfg, params, tokens)
+    pos = cache["next_pos"]
+    win = cache["k"].shape[2]
+    slot = pos % win
+    kv_pos = cache["kv_pos"].at[slot].set(pos)
+    mask = attention.decode_mask(pos, kv_pos,
+                                 window=cfg.recurrent.local_window)
+    pat = cfg.recurrent.block_pattern
+    g, rem_pat, n_rec, n_attn = layer_layout(cfg)
+
+    new_conv = cache["conv"]
+    new_h = cache["h"]
+    new_k = cache["k"]
+    new_v = cache["v"]
+    ri = ai = 0
+    # decode is one token — a python loop over layers is fine for tracing
+    # (layers are small; scan-over-groups buys nothing at Sq=1)
+    full_pat = list(pat) * g + list(rem_pat)
+    for kind in full_pat:
+        if kind == "rec":
+            lp = jax.tree.map(lambda p, i=ri: p[i], params["rec"])
+            o, (cs, hs) = rec_mixer_step(cfg, lp, x, new_conv[ri], new_h[ri])
+            x = x + o
+            x = x + dense.mlp_block(cfg, lp, x)
+            new_conv = new_conv.at[ri].set(cs)
+            new_h = new_h.at[ri].set(hs)
+            ri += 1
+        else:
+            lp = jax.tree.map(lambda p, i=ai: p[i], params["attn"])
+            a, (k_l, v_l) = dense.attn_decode_block(
+                cfg, lp, x, new_k[ai], new_v[ai], pos, slot, mask)
+            x = x + a
+            x = x + dense.mlp_block(cfg, lp, x)
+            new_k = new_k.at[ai].set(k_l)
+            new_v = new_v.at[ai].set(v_l)
+            ai += 1
+    logits = dense.unembed(cfg, params, x)
+    return logits, {"conv": new_conv, "h": new_h, "k": new_k, "v": new_v,
+                    "kv_pos": kv_pos, "next_pos": pos + 1}

@@ -1,0 +1,238 @@
+"""Mixture-of-Experts LM (qwen3-moe-30b-a3b, mixtral-8x22b).
+
+Attention blocks are shared with ``dense``; the MLP is replaced by a
+top-k routed expert layer with capacity-based token dropping.
+
+Dispatch is SCATTER-based (O(E·C·D) memory) rather than the textbook
+dense one-hot einsum (O(T·E·C)): at production shapes the one-hot
+dispatch tensor for qwen3 (4096 tokens × 128 experts × 320 capacity,
+bf16) is ~336 MB *per sequence* and cannot live in HBM next to the
+weights. ``moe_block_einsum`` keeps the textbook formulation as a
+cross-check oracle for tests.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, dense
+from repro.models.common import ParamDef
+
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = math.ceil(tokens_per_group * m.top_k / m.num_experts
+                  * m.capacity_factor)
+    return max(4 * math.ceil(c / 4), 4)   # pad to a multiple of 4
+
+
+def moe_defs(cfg: ModelConfig, L: int) -> dict:
+    D, m = cfg.d_model, cfg.moe
+    E, F = m.num_experts, m.d_expert
+    defs = {
+        "mlp_norm": ParamDef((L, D), ("layers", "embed"), init="zeros"),
+        "w_router": ParamDef((L, D, E), ("layers", "embed", None)),
+        "w_up": ParamDef((L, E, D, F), ("layers", "experts", "embed", "mlp")),
+        "w_down": ParamDef((L, E, F, D), ("layers", "experts", "mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        defs["w_gate"] = ParamDef((L, E, D, F),
+                                  ("layers", "experts", "embed", "mlp"))
+    return defs
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    defs = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), scale=0.02),
+        "final_norm": ParamDef((D,), ("embed",), init="zeros"),
+        "layers": {**dense.attn_defs(cfg, L), **moe_defs(cfg, L)},
+    }
+    if not cfg.tie_embeddings:
+        defs["out_head"] = ParamDef((D, V), ("embed", "vocab"))
+    return defs
+
+
+def init(cfg: ModelConfig, rng: jax.Array):
+    return common.materialize(param_defs(cfg), rng, cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Routed expert layer
+# ---------------------------------------------------------------------------
+
+def _route(cfg: ModelConfig, lp: dict, h: jax.Array):
+    """h (B, S, D) -> (gates (B,S,k), idx (B,S,k), aux_loss)."""
+    m = cfg.moe
+    logits = jnp.einsum("bsd,de->bse", h, lp["w_router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss over all assignments.
+    f = jnp.zeros((m.num_experts,), jnp.float32)
+    f = f.at[idx.reshape(-1)].add(1.0, mode="drop")
+    f = f / jnp.maximum(idx.size, 1)
+    p = jnp.mean(probs, axis=(0, 1))
+    aux = m.num_experts * jnp.sum(f * p)
+    return gates.astype(h.dtype), idx, aux
+
+
+def _expert_ffn(cfg: ModelConfig, lp: dict, xin: jax.Array) -> jax.Array:
+    """xin (E, C, D) -> (E, C, D), per-expert (optionally gated) MLP."""
+    up = jnp.einsum("ecd,edf->ecf", xin, lp["w_up"])
+    if cfg.gated_mlp:
+        gate = jnp.einsum("ecd,edf->ecf", xin, lp["w_gate"])
+        act = common.activate(gate, cfg.activation) * up
+    else:
+        act = common.activate(up, cfg.activation)
+    return jnp.einsum("ecf,efd->ecd", act, lp["w_down"])
+
+
+def moe_block(cfg: ModelConfig, lp: dict, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Scatter-dispatch MoE sublayer. x (B, S, D) -> (out, aux_loss).
+
+    Each batch row is one routing group (tokens_per_group = S).
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.num_experts, m.top_k
+    C = capacity(cfg, S)
+
+    h = common.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    gates, idx, aux = _route(cfg, lp, h)
+
+    def one_group(hb, gb, ib):
+        # hb (S, D); gb/ib (S, k)
+        flat_e = ib.reshape(-1)                              # (S*k,)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.float32)
+        rank = (jnp.cumsum(onehot, axis=0) - 1.0)            # rank within expert
+        pos = jnp.sum(rank * onehot, axis=-1).astype(jnp.int32)
+        keep = pos < C
+        slot = jnp.where(keep, flat_e * C + pos, E * C)      # E*C = dropped
+        tok = jnp.repeat(jnp.arange(S), k)
+        xin = jnp.zeros((E * C, D), hb.dtype)
+        xin = xin.at[slot].add(hb[tok] * keep[:, None].astype(hb.dtype),
+                               mode="drop")
+        yout = _expert_ffn(cfg, lp, xin.reshape(E, C, D)).reshape(E * C, D)
+        gath = yout.at[slot].get(mode="fill", fill_value=0.0)
+        w = (gb.reshape(-1) * keep.astype(gb.dtype))[:, None]
+        return jnp.sum((gath * w).reshape(S, k, D), axis=1)
+
+    out = jax.vmap(one_group)(h, gates, idx)
+    return out, aux
+
+
+def moe_block_einsum(cfg: ModelConfig, lp: dict, x: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Textbook dense one-hot dispatch — oracle for small-shape tests."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.num_experts, m.top_k
+    C = capacity(cfg, S)
+
+    h = common.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    gates, idx, aux = _route(cfg, lp, h)
+
+    def one_group(hb, gb, ib):
+        eoh = jax.nn.one_hot(ib.reshape(-1), E, dtype=jnp.float32)  # (S*k, E)
+        rank = jnp.cumsum(eoh, axis=0) * eoh - eoh
+        pos = jnp.sum(rank, -1).astype(jnp.int32)                   # (S*k,)
+        coh = jax.nn.one_hot(pos, C, dtype=jnp.float32)             # 0 if >= C
+        a = (eoh[:, :, None] * coh[:, None, :]).reshape(S, k, E, C)
+        xin = jnp.einsum("skec,sd->ecd", a, hb.astype(jnp.float32))
+        yout = _expert_ffn(cfg, lp, xin.astype(hb.dtype))
+        comb = jnp.einsum("skec,sk->sec", a, gb.astype(jnp.float32))
+        return jnp.einsum("sec,ecd->sd", comb,
+                          yout.astype(jnp.float32)).astype(hb.dtype)
+
+    out = jax.vmap(one_group)(h, gates, idx)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Model API (mirrors dense)
+# ---------------------------------------------------------------------------
+
+def _stack(cfg: ModelConfig, x, layers, positions, mask, collect_kv: bool):
+    def block(carry, lp):
+        h, aux = carry
+        a, kv = dense.attn_block(cfg, lp, h, positions, mask)
+        h = h + a
+        mo, la = moe_block(cfg, lp, h)
+        return (h + mo, aux + la), kv if collect_kv else None
+
+    body = dense._maybe_remat(cfg, block)
+    (x, aux), kvs = common.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                layers)
+    return x, aux, kvs
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            return_aux: bool = False):
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(S)
+    mask = common.causal_mask(S, S, window=cfg.window)
+    x, aux, _ = _stack(cfg, x, params["layers"], positions, mask, False)
+    logits = dense.unembed(cfg, params, x)
+    return (logits, aux) if return_aux else logits
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    logits, aux = forward(cfg, params, batch["tokens"], return_aux=True)
+    ce = common.cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+    return ce + cfg.moe.router_aux_weight * aux / cfg.n_layers
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            pad_to: int = 0) -> Tuple[jax.Array, dict]:
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(S)
+    mask = common.causal_mask(S, S, window=cfg.window)
+    x, _, kvs = _stack(cfg, x, params["layers"], positions, mask, True)
+    logits = dense.unembed(cfg, params, x[:, -1:])
+    k, v = kvs
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    if pad_to > S:
+        pad = [(0, 0), (0, 0), (0, pad_to - S), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        kv_pos = jnp.concatenate(
+            [kv_pos, jnp.full((pad_to - S,), -1, jnp.int32)])
+    return logits, {"k": k, "v": v, "kv_pos": kv_pos,
+                    "next_pos": jnp.asarray(S, jnp.int32)}
+
+
+init_decode_cache = dense.init_decode_cache
+
+
+def serve_step(cfg: ModelConfig, params: dict, cache: dict,
+               tokens: jax.Array) -> Tuple[jax.Array, dict]:
+    B, _ = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    pos = cache["next_pos"]
+    cache_len = cache["k"].shape[2]
+    w = cfg.window
+    ring = w > 0 and cache_len == w
+    slot = pos % cache_len if ring else pos
+    kv_pos = cache["kv_pos"].at[slot].set(pos)
+    mask = attention.decode_mask(pos, kv_pos, window=w)
+
+    def step(h, layer_in):
+        lp, k_l, v_l = layer_in
+        a, (k_l, v_l) = dense.attn_decode_block(cfg, lp, h, k_l, v_l,
+                                                pos, slot, mask)
+        h = h + a
+        mo, _ = moe_block(cfg, lp, h)
+        return h + mo, (k_l, v_l)
+
+    x, (ks, vs) = common.scan(step, x,
+                              (params["layers"], cache["k"], cache["v"]))
+    logits = dense.unembed(cfg, params, x)
+    return logits, {"k": ks, "v": vs, "kv_pos": kv_pos, "next_pos": pos + 1}

@@ -1,0 +1,339 @@
+"""Mamba-2 (SSD — state-space duality) LM. Attention-free.
+
+Chunked SSD forward (arXiv:2405.21060 §6): within-chunk quadratic dual
+form + inter-chunk linear recurrence, both expressed with jnp einsums and
+``lax`` scans so XLA/SPMD can shard (batch→data, heads→model). The
+per-chunk quadratic term is the Pallas ``ssd_chunk`` kernel's oracle.
+
+Decode keeps a constant-size recurrent state — this is the native
+sub-quadratic path that legitimizes ``long_500k`` for this arch.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import ParamDef
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.head_dim, s.n_groups, s.d_state
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    d_inner, H, P, G, N = _dims(cfg)
+    s = cfg.ssm
+    layers = {
+        "norm": ParamDef((L, D), ("layers", "embed"), init="zeros"),
+        "w_z": ParamDef((L, D, d_inner), ("layers", "embed", "mlp")),
+        "w_x": ParamDef((L, D, d_inner), ("layers", "embed", "mlp")),
+        "w_B": ParamDef((L, D, G * N), ("layers", "embed", None)),
+        "w_C": ParamDef((L, D, G * N), ("layers", "embed", None)),
+        "w_dt": ParamDef((L, D, H), ("layers", "embed", "heads")),
+        "conv_x": ParamDef((L, s.d_conv, d_inner), ("layers", None, "mlp"),
+                           scale=0.5),
+        "conv_B": ParamDef((L, s.d_conv, G * N), ("layers", None, None),
+                           scale=0.5),
+        "conv_C": ParamDef((L, s.d_conv, G * N), ("layers", None, None),
+                           scale=0.5),
+        "dt_bias": ParamDef((L, H), ("layers", "heads"), init="zeros"),
+        "A_log": ParamDef((L, H), ("layers", "heads"), init="zeros"),
+        "D": ParamDef((L, H), ("layers", "heads"), init="ones"),
+        "gn": ParamDef((L, d_inner), ("layers", "mlp"), init="zeros"),
+        "w_out": ParamDef((L, d_inner, D), ("layers", "mlp", "embed")),
+    }
+    defs = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), scale=0.02),
+        "final_norm": ParamDef((D,), ("embed",), init="zeros"),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        defs["out_head"] = ParamDef((D, V), ("embed", "vocab"))
+    return defs
+
+
+def init(cfg: ModelConfig, rng: jax.Array):
+    return common.materialize(param_defs(cfg), rng, cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv as shifted sums (shardable on the channel dim)
+# ---------------------------------------------------------------------------
+
+def causal_conv(x: jax.Array, w: jax.Array,
+                init_state: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """x (B, L, C), w (W, C). Returns (y (B, L, C), final (B, W-1, C))."""
+    B, L, C = x.shape
+    W = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(W):
+        y = y + xp[:, i:i + L] * w[i]
+    return y, xp[:, L:]
+
+
+def conv_step(x_t: jax.Array, w: jax.Array, state: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """One-token conv. x_t (B, C); state (B, W-1, C)."""
+    xp = jnp.concatenate([state, x_t[:, None]], axis=1)   # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", xp, w)
+    return y, xp[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# SSD scan (chunked dual form)
+# ---------------------------------------------------------------------------
+
+def segsum(loga: jax.Array) -> jax.Array:
+    """loga (..., q) -> (..., q, q): T[i, j] = sum_{j<k<=i}, -inf for j>i."""
+    q = loga.shape[-1]
+    z = jnp.cumsum(loga, axis=-1)
+    T = z[..., :, None] - z[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, T, -jnp.inf)
+
+
+def ssd_scan(xdt: jax.Array, loga: jax.Array, Bm: jax.Array, Cm: jax.Array,
+             chunk: int, init_state: jax.Array = None,
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. xdt (B,L,H,P) = dt*x; loga (B,L,H); Bm/Cm (B,L,G,N).
+
+    Recurrence per head: h_t = exp(loga_t) h_{t-1} + xdt_t ⊗ B_t,
+    y_t = C_t · h_t. Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, L, H, P = xdt.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert L % chunk == 0, (L, chunk)
+    c, q = L // chunk, chunk
+    rep = H // G
+
+    xc = xdt.reshape(Bsz, c, q, H, P)
+    lc = loga.reshape(Bsz, c, q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, c, q, G, N)
+    Cc = Cm.reshape(Bsz, c, q, G, N)
+    # expand groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)            # (B,c,q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    zc = jnp.cumsum(lc, axis=2)                  # within-chunk cumsum
+    # ---- intra-chunk (quadratic dual form) ----
+    Lmat = jnp.exp(segsum(lc.transpose(0, 3, 1, 2)))   # (B,H,c,q,q)
+    scores = jnp.einsum("bcqhn,bcshn->bhcqs", Ch, Bh)
+    y_diag = jnp.einsum("bhcqs,bhcqs,bcshp->bcqhp",
+                        scores, Lmat, xc.astype(jnp.float32))
+    # ---- chunk states ----
+    decay = jnp.exp(zc[:, :, -1:, :] - zc)       # (B,c,q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                        Bh.astype(jnp.float32), decay,
+                        xc.astype(jnp.float32))
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(zc[:, :, -1, :])       # (B,c,H)
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    else:
+        init_state = init_state.astype(jnp.float32)
+
+    def scan_fn(h, inp):
+        st, dc = inp                              # (B,H,P,N), (B,H)
+        prev = h
+        h = h * dc[..., None, None] + st
+        return h, prev
+
+    final, prev_states = jax.lax.scan(
+        scan_fn, init_state,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)      # (B,c,H,P,N)
+    # ---- off-diagonal (carry-in) contribution ----
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       Ch.astype(jnp.float32), prev_states, jnp.exp(zc))
+    y = (y_diag + y_off).reshape(Bsz, L, H, P).astype(xdt.dtype)
+    return y, final.astype(xdt.dtype)
+
+
+def ssd_step(state: jax.Array, x_t: jax.Array, dt: jax.Array,
+             A_log: jax.Array, B_t: jax.Array, C_t: jax.Array,
+             ) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. state (B,H,P,N); x_t (B,H,P); dt (B,H);
+    B_t/C_t (B,G,N). Returns (y (B,H,P), new state)."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1)            # (B,H,N)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    a = jnp.exp(-jnp.exp(A_log.astype(jnp.float32)) * dt.astype(jnp.float32))
+    xdt = x_t * dt[..., None].astype(x_t.dtype)
+    sf = state.astype(jnp.float32)
+    sf = sf * a[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xdt.astype(jnp.float32), Bh.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", sf, Ch.astype(jnp.float32))
+    return y.astype(x_t.dtype), sf.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block + model API
+# ---------------------------------------------------------------------------
+
+def _proj(cfg, lp, x):
+    """Shared projections. x (B,L,D) -> z, xh, B, C, dt (pre-conv/softplus)."""
+    z = jnp.einsum("bld,di->bli", x, lp["w_z"])
+    xh = jnp.einsum("bld,di->bli", x, lp["w_x"])
+    Bm = jnp.einsum("bld,di->bli", x, lp["w_B"])
+    Cm = jnp.einsum("bld,di->bli", x, lp["w_C"])
+    dt = jnp.einsum("bld,dh->blh", x, lp["w_dt"])
+    return z, xh, Bm, Cm, dt
+
+
+def _gated_out(cfg, lp, y, z):
+    d_inner = y.shape[-1]
+    g = y * jax.nn.silu(z)
+    g = common.rms_norm(g, lp["gn"], cfg.norm_eps)
+    return jnp.einsum("bli,id->bld", g, lp["w_out"])
+
+
+def ssm_block(cfg: ModelConfig, lp: dict, x: jax.Array,
+              conv_state=None, ssm_state=None, collect_state=False):
+    """Full-sequence Mamba-2 mixer. x (B, L, D)."""
+    d_inner, H, P, G, N = _dims(cfg)
+    h = common.rms_norm(x, lp["norm"], cfg.norm_eps)
+    z, xh, Bm, Cm, dt = _proj(cfg, lp, h)
+    cs_x = cs_B = cs_C = None
+    xh, cs_x = causal_conv(xh, lp["conv_x"],
+                           None if conv_state is None else conv_state["x"])
+    Bm, cs_B = causal_conv(Bm, lp["conv_B"],
+                           None if conv_state is None else conv_state["B"])
+    Cm, cs_C = causal_conv(Cm, lp["conv_C"],
+                           None if conv_state is None else conv_state["C"])
+    xh, Bm, Cm = jax.nn.silu(xh), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    loga = -jnp.exp(lp["A_log"].astype(jnp.float32)) * dt    # (B,L,H)
+
+    Bsz, L, _ = x.shape
+    xheads = xh.reshape(Bsz, L, H, P)
+    xdt = xheads * dt[..., None].astype(xheads.dtype)
+    Bmr, Cmr = Bm.reshape(Bsz, L, G, N), Cm.reshape(Bsz, L, G, N)
+    pad = (-L) % cfg.ssm.chunk
+    if pad:
+        # zero inputs + zero log-decay leave the carried state untouched
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        Bmr = jnp.pad(Bmr, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cmr = jnp.pad(Cmr, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, final = ssd_scan(xdt, loga, Bmr, Cmr,
+                        cfg.ssm.chunk, init_state=ssm_state)
+    y = y[:, :L]
+    y = y + xheads * lp["D"][None, None, :, None].astype(xheads.dtype)
+    out = _gated_out(cfg, lp, y.reshape(Bsz, L, d_inner), z)
+    if collect_state:
+        return out, ({"x": cs_x, "B": cs_B, "C": cs_C}, final)
+    return out, None
+
+
+def ssm_decode_block(cfg: ModelConfig, lp: dict, x: jax.Array,
+                     conv_state: dict, ssm_state: jax.Array):
+    """One-token mixer. x (B, 1, D)."""
+    d_inner, H, P, G, N = _dims(cfg)
+    h = common.rms_norm(x, lp["norm"], cfg.norm_eps)
+    z, xh, Bm, Cm, dt = _proj(cfg, lp, h)
+    xh1, cs_x = conv_step(xh[:, 0], lp["conv_x"], conv_state["x"])
+    Bm1, cs_B = conv_step(Bm[:, 0], lp["conv_B"], conv_state["B"])
+    Cm1, cs_C = conv_step(Cm[:, 0], lp["conv_C"], conv_state["C"])
+    xh1, Bm1, Cm1 = jax.nn.silu(xh1), jax.nn.silu(Bm1), jax.nn.silu(Cm1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + lp["dt_bias"])
+    Bsz = x.shape[0]
+    y, new_state = ssd_step(ssm_state, xh1.reshape(Bsz, H, P), dt1,
+                            lp["A_log"], Bm1.reshape(Bsz, G, N),
+                            Cm1.reshape(Bsz, G, N))
+    y = y + xh1.reshape(Bsz, H, P) * lp["D"][None, :, None].astype(x.dtype)
+    out = _gated_out(cfg, lp, y.reshape(Bsz, 1, d_inner), z)
+    return out, ({"x": cs_x, "B": cs_B, "C": cs_C}, new_state)
+
+
+def _stack(cfg, x, layers, collect_state: bool):
+    def block(h, lp):
+        o, st = ssm_block(cfg, lp, h, collect_state=collect_state)
+        return h + o, st
+
+    from repro.models import dense
+    body = dense._maybe_remat(cfg, block)
+    x, states = common.scan(body, x, layers)
+    return x, states
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    from repro.models import dense
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x, _ = _stack(cfg, x, params["layers"], collect_state=False)
+    return dense.unembed(cfg, params, x)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"])
+    return common.cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, context_len: int,
+                      abstract: bool = False) -> dict:
+    """Constant-size recurrent state — independent of context_len."""
+    d_inner, H, P, G, N = _dims(cfg)
+    W = cfg.ssm.d_conv
+    L = cfg.n_layers
+    dt = jnp.dtype(cfg.dtype)
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract \
+        else (lambda s, d: jnp.zeros(s, d))
+    return {
+        "conv": {"x": mk((L, batch, W - 1, d_inner), dt),
+                 "B": mk((L, batch, W - 1, G * N), dt),
+                 "C": mk((L, batch, W - 1, G * N), dt)},
+        "state": mk((L, batch, H, P, N), dt),
+        "next_pos": mk((), jnp.int32),
+    }
+
+
+def cache_logical_specs() -> dict:
+    return {
+        "conv": {"x": ("layers", "cache_batch", None, "mlp"),
+                 "B": ("layers", "cache_batch", None, None),
+                 "C": ("layers", "cache_batch", None, None)},
+        "state": ("layers", "cache_batch", "heads", "head_dim", "state"),
+        "next_pos": (),
+    }
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            pad_to: int = 0) -> Tuple[jax.Array, dict]:
+    from repro.models import dense
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x, states = _stack(cfg, x, params["layers"], collect_state=True)
+    conv_states, ssm_states = states
+    logits = dense.unembed(cfg, params, x[:, -1:])
+    cache = {"conv": conv_states, "state": ssm_states,
+             "next_pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def serve_step(cfg: ModelConfig, params: dict, cache: dict,
+               tokens: jax.Array) -> Tuple[jax.Array, dict]:
+    from repro.models import dense
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+
+    def step(h, layer_in):
+        lp, conv_l, state_l = layer_in
+        o, (new_conv, new_state) = ssm_decode_block(cfg, lp, h, conv_l, state_l)
+        return h + o, (new_conv, new_state)
+
+    x, (convs, states) = common.scan(
+        step, x, (params["layers"], cache["conv"], cache["state"]))
+    logits = dense.unembed(cfg, params, x)
+    return logits, {"conv": convs, "state": states,
+                    "next_pos": cache["next_pos"] + 1}

@@ -1,0 +1,95 @@
+"""InternVL2-2B [vlm]: InternLM2-style GQA decoder consuming projected
+visual tokens. The InternViT vision tower is the one allowed STUB —
+``input_specs`` supplies patch embeddings (B, n_visual, d_visual); the
+2-layer MLP projector and the whole language model are real.
+
+Sequence layout: [visual prefix | text tokens]; loss on text only.
+Decode reuses the dense cache semantics (the visual prefix lives in the
+cache after prefill).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, dense
+from repro.models.common import ParamDef
+
+
+def param_defs(cfg: ModelConfig) -> dict:
+    defs = dense.param_defs(cfg)
+    dv, D = cfg.vlm.d_visual, cfg.d_model
+    defs["projector"] = {
+        "w1": ParamDef((dv, D), ("state", "embed")),
+        "b1": ParamDef((D,), ("embed",), init="zeros"),
+        "w2": ParamDef((D, D), ("embed", "embed")),
+        "b2": ParamDef((D,), ("embed",), init="zeros"),
+    }
+    return defs
+
+
+def init(cfg: ModelConfig, rng: jax.Array):
+    return common.materialize(param_defs(cfg), rng, cfg.dtype)
+
+
+def project(cfg: ModelConfig, params: dict, visual: jax.Array) -> jax.Array:
+    """(B, n_vis, d_visual) -> (B, n_vis, D) visual prefix tokens."""
+    pp = params["projector"]
+    h = jnp.einsum("bnd,de->bne", visual.astype(jnp.dtype(cfg.dtype)),
+                   pp["w1"]) + pp["b1"]
+    h = jax.nn.gelu(h)
+    return jnp.einsum("bne,ef->bnf", h, pp["w2"]) + pp["b2"]
+
+
+def _embed_multimodal(cfg, params, batch):
+    prefix = project(cfg, params, batch["visual_embeds"])
+    text = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.dtype))
+    return jnp.concatenate([prefix, text], axis=1)
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    """-> logits over the FULL sequence (visual positions included)."""
+    x = _embed_multimodal(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    mask = common.causal_mask(S, S, window=cfg.window)
+    x, _ = dense._stack(cfg, x, params["layers"], positions, mask,
+                        collect_kv=False)
+    return dense.unembed(cfg, params, x)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    """Next-token CE on the text region only."""
+    nv = cfg.vlm.n_visual_tokens
+    logits = forward(cfg, params, batch)
+    # predict text token t+1 from position nv+t
+    pred = logits[:, nv:-1]
+    gold = batch["tokens"][:, 1:]
+    return common.cross_entropy(pred, gold)
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, pad_to: int = 0
+            ) -> Tuple[jax.Array, dict]:
+    x = _embed_multimodal(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    mask = common.causal_mask(S, S, window=cfg.window)
+    x, kvs = dense._stack(cfg, x, params["layers"], positions, mask,
+                          collect_kv=True)
+    logits = dense.unembed(cfg, params, x[:, -1:])
+    k, v = kvs
+    kv_pos = jnp.arange(S, dtype=jnp.int32)
+    if pad_to > S:
+        pad = [(0, 0), (0, 0), (0, pad_to - S), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        kv_pos = jnp.concatenate(
+            [kv_pos, jnp.full((pad_to - S,), -1, jnp.int32)])
+    return logits, {"k": k, "v": v, "kv_pos": kv_pos,
+                    "next_pos": jnp.asarray(S, jnp.int32)}
+
+
+init_decode_cache = dense.init_decode_cache
+serve_step = dense.serve_step   # text-token decode is identical to dense

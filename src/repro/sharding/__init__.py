@@ -1,0 +1,6 @@
+from repro.sharding.plans import (arch_plan, batch_sharding, cache_sharding,
+                                  param_sharding, spec_from_logical,
+                                  train_state_sharding)
+
+__all__ = ["arch_plan", "param_sharding", "batch_sharding", "cache_sharding",
+           "train_state_sharding", "spec_from_logical"]

@@ -1,0 +1,98 @@
+"""Activation sharding constraints (mesh-ambient, divisibility-safe).
+
+XLA's SPMD propagation sometimes resolves under-constrained loop bodies
+by REPLICATING tensor-parallel compute instead of inserting an
+all-reduce (observed: recurrentgemma's scanned recurrent stack computed
+full-width f32 matmuls on all 16 model shards). Pinning the activation
+layout at the block boundaries forces the intended row/column-parallel
+pattern.
+
+``constrain(x, *spec)`` is a no-op when there is no ambient mesh, when a
+named axis is absent, or when a dim is not divisible — so model code can
+call it unconditionally (CPU smoke tests included).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+BATCH = "__batch__"      # placeholder: ("pod","data") axes when present
+SEQ = "__seq__"          # sequence dim: sharded over "model" under tp_sp
+
+_STRATEGY = "tp"         # process-global; set by the launcher per plan
+
+
+def set_strategy(strategy: str) -> None:
+    """"tp" (default): hidden dims pin to the model axis.
+    "tp_sp": tp + Megatron sequence parallelism — residual-stream SEQ
+    dims shard over the model axis (all-reduces become
+    all-gather + reduce-scatter of equal volume, but stored activations
+    shrink by the TP degree).
+    "fsdp": no tensor parallelism — model-axis constraints are dropped
+    and the batch dim spans ("pod","data","model")."""
+    global _STRATEGY
+    _STRATEGY = strategy
+
+
+def _ambient_mesh():
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:                                   # noqa: BLE001
+        pass
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.shape_tuple:
+            return m
+    except Exception:                                   # noqa: BLE001
+        pass
+    return None
+
+
+def _axis_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= dict(mesh.shape)[a]
+    return n
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """Best-effort with_sharding_constraint.
+
+    spec entries: None, a mesh axis name ("model"), or BATCH (expands to
+    the ("pod","data") axes present in the ambient mesh).
+    """
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    parts = []
+    for dim, s in zip(x.shape, spec):
+        if s is None:
+            parts.append(None)
+            continue
+        if s == BATCH:
+            batch_axes = ("pod", "data", "model") if _STRATEGY == "fsdp" \
+                else ("pod", "data")
+            axes = tuple(a for a in batch_axes if a in names)
+        elif s == SEQ:
+            axes = ("model",) if (_STRATEGY == "tp_sp"
+                                  and "model" in names) else ()
+        elif _STRATEGY == "fsdp" and s == "model":
+            axes = ()
+        else:
+            axes = (s,) if s in names else ()
+        if axes and dim % _axis_size(mesh, axes) == 0:
+            parts.append(axes if len(axes) > 1 else axes[0])
+        else:
+            parts.append(None)
+    if all(p is None for p in parts):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*parts))
+    except Exception:                                   # noqa: BLE001
+        return x

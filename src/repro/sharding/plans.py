@@ -1,0 +1,203 @@
+"""Parallelism plans: logical param/cache axes -> mesh PartitionSpecs.
+
+One rules table per (arch × input-shape kind), shape-aware and
+divisibility-safe: a logical axis is sharded over a mesh axis only when
+the dimension divides the axis size and the mesh axis is not already
+used by another dim of the same tensor — otherwise it silently stays
+replicated (e.g. kv=8 heads on a model=16 axis: KV projections
+replicate, exactly like Megatron TP with kv < tp).
+
+Plans (see DESIGN.md §8):
+  * train: batch over (pod, data); TP over model on heads/mlp/vocab/
+    experts; FSDP (embed/weights over data axes too) + bf16 adam moments
+    + microbatching for the >=100B archs.
+  * prefill: like train, no FSDP-gradient concerns, no microbatching.
+  * decode: weights TP over model + FSDP over (pod, data) when batch
+    can't use them; KV cache batch over data, cache seq over model
+    (flash-decode-style SPMD sequence parallelism).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs.base import InputShape, ModelConfig
+
+Axes = Tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class Plan:
+    """Resolved plan for one (arch × shape × mesh)."""
+    rules: Dict[str, Axes]          # logical axis -> mesh axes
+    batch_axes: Axes                # data-parallel axes for the batch dim
+    microbatches: int = 1
+    opt_dtype: str = "float32"
+    remat: str = "full"
+    strategy: str = "tp"            # tp | fsdp (see arch_plan)
+    notes: str = ""
+
+
+# archs that need FSDP-weight sharding + bf16 moments + grad accumulation
+# to fit a pod: name -> (microbatches, moment dtype, remat)
+# remat="dots" keeps matmul outputs: the FSDP backward then reuses the
+# forward's weight all-gathers instead of re-gathering during recompute
+# (§Perf hillclimb #3; ~1/3 of the gather traffic for +saved-dot memory).
+_BIG = {"nemotron-4-340b": (16, "bfloat16", "full"),
+        "mistral-large-123b": (4, "float32", "full"),
+        "mixtral-8x22b": (4, "float32", "full"),
+        "command-r-35b": (2, "float32", "full")}
+
+# train-shape strategy override: models whose TP activation all-reduces
+# dwarf their compute go pure-FSDP (ZeRO-3: batch over BOTH mesh axes,
+# weights fully sharded, no tensor parallelism). Established by the
+# §Perf hillclimb on recurrentgemma (322 GB/dev TP traffic -> FSDP).
+# (fsdp was measured WORSE for mamba2/whisper — their SSD / cross-attn
+# einsums replicate under batch-over-model partitioning; they stay tp.)
+_TRAIN_STRATEGY = {"recurrentgemma-9b": "fsdp",
+                   "stablelm-12b": "fsdp",
+                   "internvl2-2b": "fsdp",
+                   # Megatron SP: S-sharded residual stream cuts the
+                   # scan-saved activation carries by the TP degree
+                   "nemotron-4-340b": "tp_sp",
+                   "mistral-large-123b": "tp_sp"}
+
+
+def arch_plan(cfg: ModelConfig, shape: InputShape, mesh: Mesh) -> Plan:
+    axes = mesh.axis_names
+    dp: Axes = tuple(a for a in ("pod", "data") if a in axes)
+    tp = "model" if "model" in axes else None
+
+    micro, opt_dtype, remat = _BIG.get(cfg.name, (1, "float32", cfg.remat))
+    fsdp = cfg.name in _BIG
+
+    rules: Dict[str, Axes] = {
+        "heads": (tp,), "kv": (tp,), "mlp": (tp,), "vocab": (tp,),
+        "experts": (tp,), "head_dim": (), "state": (), "layers": (),
+        "embed": dp if fsdp else (),
+        # cache axes
+        "cache_batch": dp, "cache_seq": (tp,),
+    }
+    if shape.kind == "train":
+        strategy = _TRAIN_STRATEGY.get(cfg.name, "tp")
+        if strategy == "tp_sp":
+            if shape.global_batch % _prod(mesh, dp) != 0:
+                dp = dp[-1:]
+            return Plan(rules=rules, batch_axes=dp, microbatches=micro,
+                        opt_dtype=opt_dtype, remat=remat,
+                        strategy="tp_sp", notes="megatron-sp")
+        if strategy == "fsdp" and tp and \
+                shape.global_batch % _prod(mesh, dp + (tp,)) == 0:
+            # ZeRO-3: batch and weights sharded over ALL mesh axes; no TP.
+            # Only when the batch spans the whole mesh — otherwise (e.g.
+            # batch 256 on the 512-chip two-pod mesh) fall through to tp.
+            all_axes = dp + (tp,)
+            rules = dict(rules)
+            rules.update({"embed": all_axes[:-1] or dp})
+            return Plan(rules=rules, batch_axes=all_axes,
+                        microbatches=micro, opt_dtype=opt_dtype,
+                        remat=remat, strategy="fsdp", notes="zero3")
+        if shape.global_batch % _prod(mesh, dp) != 0:
+            dp = dp[-1:]                      # fall back to data only
+        return Plan(rules=rules, batch_axes=dp, microbatches=micro,
+                    opt_dtype=opt_dtype, remat=remat,
+                    notes="fsdp" if fsdp else "tp+dp")
+    if shape.kind == "prefill":
+        return Plan(rules=rules, batch_axes=dp, microbatches=1,
+                    opt_dtype=opt_dtype, remat=cfg.remat)
+    # decode: batch may be tiny; weights lean on FSDP over unused dp axes.
+    # When the batch DOES occupy the data axis, weights must be
+    # model-sharded only — a data-axis weight shard would be re-gathered
+    # on EVERY decode step (measured: 5.1 GB/step on command-r, §Perf).
+    dp_batch = tuple(a for a in dp
+                     if shape.global_batch % _prod(mesh, (a,)) == 0)
+    rules = dict(rules)
+    rules["embed"] = dp if shape.global_batch < _prod(mesh, dp) else ()
+    rules["cache_batch"] = dp_batch
+    return Plan(rules=rules, batch_axes=dp_batch, microbatches=1,
+                opt_dtype=opt_dtype, remat="none")
+
+
+def _prod(mesh: Mesh, axes: Axes) -> int:
+    n = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def spec_from_logical(logical: Tuple[Optional[str], ...],
+                      shape: Tuple[int, ...], plan: Plan,
+                      mesh: Mesh) -> P:
+    """Map one tensor's logical axes to a PartitionSpec, enforcing
+    divisibility and no-mesh-axis-reuse."""
+    used = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        assigned = None
+        if name is not None:
+            want = plan.rules.get(name, ())
+            cand = tuple(a for a in want
+                         if a and a in mesh.axis_names and a not in used)
+            if cand:
+                n = _prod(mesh, cand)
+                if dim % n == 0:
+                    assigned = cand if len(cand) > 1 else cand[0]
+                    used.update(cand)
+                elif len(cand) == 1 and dim % mesh.shape[cand[0]] == 0:
+                    assigned = cand[0]
+                    used.add(cand[0])
+        parts.append(assigned)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def _tree_sharding(specs_tree, shapes_tree, plan: Plan, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec, arr: NamedSharding(
+            mesh, spec_from_logical(spec, arr.shape, plan, mesh)),
+        specs_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def param_sharding(cfg: ModelConfig, plan: Plan, mesh: Mesh):
+    """NamedSharding tree matching models.abstract_params(cfg)."""
+    specs = models.param_logical_specs(cfg)
+    shapes = models.abstract_params(cfg)
+    return _tree_sharding(specs, shapes, plan, mesh)
+
+
+def train_state_sharding(cfg: ModelConfig, plan: Plan, mesh: Mesh,
+                         abstract_state):
+    ps = param_sharding(cfg, plan, mesh)
+    return {
+        "params": ps,
+        "opt": {"m": ps, "v": ps,
+                "step": NamedSharding(mesh, P())},
+    }
+
+
+def batch_sharding(batch_abstract: dict, plan: Plan, mesh: Mesh):
+    """Shard every batch leaf on its leading (batch) dim."""
+    ba = tuple(a for a in plan.batch_axes if a in mesh.axis_names)
+
+    def leaf(x):
+        if ba and x.shape and x.shape[0] % _prod(mesh, ba) == 0:
+            spec = P(ba if len(ba) > 1 else ba[0])
+        else:
+            spec = P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(leaf, batch_abstract)
+
+
+def cache_sharding(cfg: ModelConfig, plan: Plan, mesh: Mesh,
+                   cache_abstract):
+    specs = models.cache_logical_specs(cfg)
+    return _tree_sharding(specs, cache_abstract, plan, mesh)

@@ -1,0 +1,78 @@
+"""Train-step factory: value_and_grad + AdamW + gradient accumulation.
+
+Microbatching (``microbatches > 1``) trades wall-clock for activation
+memory: the global batch is split along the batch axis and a lax.scan
+accumulates gradients, so the stored-activation footprint per layer drops
+by the microbatch factor. The big-arch plans (nemotron, mistral-large)
+rely on this to fit train_4k on a pod.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, rng) -> dict:
+    params = models.init(cfg, rng)
+    return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig) -> dict:
+    """ShapeDtypeStruct train state for dry-run lowering."""
+    params = models.abstract_params(cfg)
+    mdt = jnp.dtype(opt_cfg.moment_dtype)
+    mom = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, mdt), params)
+    return {"params": params,
+            "opt": {"m": mom, "v": mom,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+
+
+def _split_micro(batch: dict, m: int) -> dict:
+    def sp(x):
+        b = x.shape[0]
+        assert b % m == 0, (b, m)
+        return x.reshape((m, b // m) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    microbatches: int = 1) -> Callable:
+    """-> train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return models.loss_fn(cfg, params, batch)
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = _split_micro(batch, microbatches)
+
+            def acc_fn(carry, mb):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / microbatches,
+                    acc, g)
+                return (acc, lsum + l / microbatches), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            from repro.models import common as _c
+            (grads, loss), _ = _c.scan(
+                acc_fn, (zero, jnp.zeros((), jnp.float32)), micro)
+        new_params, new_opt = adamw_update(grads, state["opt"], params,
+                                           opt_cfg)
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "step": new_opt["step"]}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,6 @@
+import os
+
+# Tests must see the REAL device count (1 CPU device). Only the dry-run
+# script forces 512 placeholder devices.
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

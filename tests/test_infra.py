@@ -1,0 +1,164 @@
+"""Infrastructure tests: trainer, checkpoint, controller, data, sweep."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models, trainer
+from repro.checkpoint import (estimate_grace_period, load_pytree,
+                              save_pytree, state_bytes)
+from repro.configs import get_smoke_config
+from repro.core.controller import Controller, JobSpec
+from repro.data import make_batch
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+class TestTrainer:
+    def test_microbatch_equivalence(self):
+        """grad accumulation over M microbatches == full-batch step."""
+        cfg = get_smoke_config("stablelm-12b").replace(dtype="float32")
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10,
+                           grad_clip=0.0)
+        state0 = trainer.init_train_state(cfg, ocfg, jax.random.key(0))
+        batch = make_batch(cfg, 4, 32, seed=0, step=0)
+        s1, m1 = trainer.make_train_step(cfg, ocfg, 1)(state0, batch)
+        s2, m2 = trainer.make_train_step(cfg, ocfg, 2)(state0, batch)
+        assert np.isclose(float(m1["loss"]), float(m2["loss"]), atol=1e-5)
+        for a, b in zip(jax.tree.leaves(s1["params"]),
+                        jax.tree.leaves(s2["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-5)
+
+    def test_grad_clip(self):
+        cfg = get_smoke_config("mamba2-1.3b").replace(dtype="float32")
+        ocfg = AdamWConfig(lr=1e-2, grad_clip=1e-6, weight_decay=0.0,
+                           warmup_steps=0, total_steps=10)
+        state = trainer.init_train_state(cfg, ocfg, jax.random.key(0))
+        batch = make_batch(cfg, 2, 16, seed=0, step=0)
+        new, _ = trainer.make_train_step(cfg, ocfg)(state, batch)
+        # with a tiny clip the params should barely move
+        delta = max(float(jnp.abs(a - b).max()) for a, b in
+                    zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(new["params"])))
+        assert delta < 1e-2
+
+
+class TestCheckpoint:
+    def test_roundtrip_bf16(self):
+        cfg = get_smoke_config("command-r-35b")   # bf16 params
+        ocfg = AdamWConfig(moment_dtype="bfloat16")
+        state = trainer.init_train_state(cfg, ocfg, jax.random.key(1))
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "ck.npz")
+            save_pytree(state, p)
+            state2 = load_pytree(state, p)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(state2)):
+            assert a.dtype == b.dtype
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_grace_period_scales_with_state(self):
+        small = {"w": jnp.zeros((1024,))}
+        big = {"w": jnp.zeros((512, 1024, 1024))}   # 2 GB f32
+        assert estimate_grace_period(big, storage_bw_bytes_per_s=1e7) > \
+            estimate_grace_period(small, storage_bw_bytes_per_s=1e7)
+        assert state_bytes(big) == 512 * 1024 * 1024 * 4
+
+
+class TestController:
+    def _mk(self, policy="fitgpp", workdir=None):
+        return Controller(n_nodes=1, node_cap=(32., 256., 8.),
+                          policy=policy, steps_per_tick=2,
+                          workdir=workdir or tempfile.mkdtemp())
+
+    def test_preempt_resume_bit_exact(self):
+        cfg = get_smoke_config("internvl2-2b")
+        opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=1000)
+        # uninterrupted baseline
+        st = trainer.init_train_state(cfg, opt,
+                                      jax.random.key(hash("be0") % (1 << 31)))
+        step = jax.jit(trainer.make_train_step(cfg, opt))
+        base = []
+        for i in range(16):
+            st, m = step(st, make_batch(cfg, 4, 32, seed=1, step=i))
+            base.append(float(m["loss"]))
+        # controller run with one preemption in the middle
+        ctl = self._mk()
+        be = ctl.submit(JobSpec("be0", cfg, False,
+                                np.array([8., 32., 8.]), total_steps=16))
+        te = ctl.submit(JobSpec("te0", cfg, True,
+                                np.array([4., 16., 8.]), total_steps=2,
+                                submit_tick=2))
+        ctl.run()
+        assert be.preempt_count == 1
+        np.testing.assert_allclose(be.losses, base, atol=1e-6)
+
+    def test_te_latency_beats_fifo(self):
+        cfg = get_smoke_config("mamba2-1.3b")
+
+        def run(policy):
+            ctl = self._mk(policy)
+            ctl.submit(JobSpec("be0", cfg, False, np.array([8., 32., 8.]),
+                               total_steps=30))
+            te = ctl.submit(JobSpec("te0", cfg, True,
+                                    np.array([4., 16., 4.]), total_steps=2,
+                                    submit_tick=1))
+            ctl.run()
+            return ctl.slowdown(te)
+
+        assert run("fitgpp") < run("fifo")
+
+    def test_victim_selection_prefers_short_gp(self):
+        cfg = get_smoke_config("mamba2-1.3b")
+        ctl = Controller(n_nodes=2, node_cap=(32., 256., 8.),
+                         policy="fitgpp", s=4.0,
+                         workdir=tempfile.mkdtemp())
+        b1 = ctl.submit(JobSpec("be_long_gp", cfg, False,
+                                np.array([8., 32., 8.]), total_steps=40,
+                                gp_ticks=5))
+        b2 = ctl.submit(JobSpec("be_short_gp", cfg, False,
+                                np.array([8., 32., 8.]), total_steps=40,
+                                gp_ticks=1))
+        te = ctl.submit(JobSpec("te", cfg, True, np.array([4., 16., 4.]),
+                                total_steps=2, submit_tick=1))
+        ctl.run()
+        assert b2.preempt_count == 1 and b1.preempt_count == 0
+
+
+class TestData:
+    def test_determinism_and_resume(self):
+        cfg = get_smoke_config("stablelm-12b")
+        b1 = make_batch(cfg, 4, 32, seed=7, step=5)
+        b2 = make_batch(cfg, 4, 32, seed=7, step=5)
+        assert np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b2["tokens"]))
+        b3 = make_batch(cfg, 4, 32, seed=7, step=6)
+        assert not np.array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b3["tokens"]))
+
+    def test_zipf_structure(self):
+        cfg = get_smoke_config("stablelm-12b")
+        toks = np.asarray(make_batch(cfg, 8, 256, 0, 0)["tokens"]).ravel()
+        # low ids must be much more frequent than high ids (Zipf)
+        low = (toks < cfg.vocab // 10).mean()
+        assert low > 0.3
+
+    def test_multimodal_shapes(self):
+        for arch in ("whisper-large-v3", "internvl2-2b"):
+            cfg = get_smoke_config(arch)
+            b = make_batch(cfg, 2, 64, 0, 0)
+            assert "tokens" in b and len(b) == 2
+
+
+class TestSweep:
+    def test_grid_shapes_and_s_effect(self):
+        from repro.configs.cluster import SimConfig, WorkloadSpec
+        from repro.core import sweep
+        cfg = SimConfig(workload=WorkloadSpec(n_jobs=256), policy="fitgpp")
+        out = sweep.sensitivity_grid(cfg, 256, s_vals=[0.0, 4.0],
+                                     seeds=[0, 1])
+        assert out["te_slowdown"].shape == (2, 2, 3)
+        assert out["intervals"].shape == (2, 2, 4)
+        assert np.isfinite(out["be_slowdown"]).all()

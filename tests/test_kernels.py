@@ -1,0 +1,183 @@
+"""Pallas-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,Sq,Skv,H,KV,hd,causal,window,cap",
+        [
+            (2, 256, 256, 4, 2, 64, True, 0, 0.0),
+            (1, 128, 256, 4, 1, 128, True, 0, 0.0),     # offset queries
+            (2, 256, 256, 8, 8, 64, True, 64, 0.0),     # MHA + window
+            (1, 256, 256, 2, 1, 64, False, 0, 0.0),     # bidirectional
+            (1, 128, 128, 4, 2, 64, True, 0, 30.0),     # softcap
+            (2, 300, 300, 4, 2, 64, True, 0, 0.0),      # padded
+            (1, 100, 260, 4, 4, 32, True, 48, 0.0),     # padded + window
+        ])
+    def test_vs_oracle(self, B, Sq, Skv, H, KV, hd, causal, window, cap,
+                       dtype):
+        ks = jax.random.split(jax.random.PRNGKey(Sq + Skv + H), 3)
+        q = rand(ks[0], (B, Sq, H, hd), dtype)
+        k = rand(ks[1], (B, Skv, KV, hd), dtype)
+        v = rand(ks[2], (B, Skv, KV, hd), dtype)
+        out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                  softcap=cap)
+        ref = kref.flash_attention_ref(q, k, v, causal=causal,
+                                       window=window, softcap=cap)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            atol=tol, rtol=tol)
+
+    def test_matches_model_attention(self):
+        """Kernel path == model jnp path through attention.attend."""
+        from repro.models import attention, common
+        B, S, H, KV, hd = 2, 128, 4, 2, 32
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = rand(ks[0], (B, S, H, hd), jnp.float32)
+        k = rand(ks[1], (B, S, KV, hd), jnp.float32)
+        v = rand(ks[2], (B, S, KV, hd), jnp.float32)
+        mask = common.causal_mask(S, S)
+        jnp_out = attention.attend(q, k, v, mask=mask)
+        ker_out = ops.flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(jnp_out), np.asarray(ker_out),
+                                   atol=2e-5, rtol=2e-5)
+
+
+class TestLruScan:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,L,R,h0", [
+        (2, 256, 512, False), (2, 300, 130, True), (1, 64, 1024, True),
+        (3, 1024, 64, False),
+    ])
+    def test_vs_oracle(self, B, L, R, h0, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(L * R), 3)
+        a = jax.nn.sigmoid(rand(ks[0], (B, L, R), jnp.float32)).astype(dtype)
+        b = (rand(ks[1], (B, L, R), jnp.float32) * 0.5).astype(dtype)
+        h = rand(ks[2], (B, R), dtype) if h0 else None
+        out = ops.lru_scan(a, b, h)
+        ref = kref.lru_scan_ref(a, b, h)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+    def test_matches_hybrid_lru(self):
+        from repro.models import hybrid
+        B, L, R = 2, 64, 32
+        ks = jax.random.split(jax.random.PRNGKey(7), 2)
+        a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, L, R)))
+        b = jax.random.normal(ks[1], (B, L, R))
+        model_scan = hybrid.lru_scan(a, b)
+        kernel = ops.lru_scan(a, b)
+        np.testing.assert_allclose(np.asarray(model_scan),
+                                   np.asarray(kernel), atol=1e-4)
+
+
+class TestFitgppKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(4, 600), st.integers(0, 10_000))
+    def test_vs_oracle_random(self, J, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        demand = jnp.stack([
+            jax.random.randint(ks[0], (J,), 1, 33).astype(jnp.float32),
+            jax.random.randint(ks[1], (J,), 1, 257).astype(jnp.float32),
+            jax.random.randint(ks[2], (J,), 0, 9).astype(jnp.float32)], 1)
+        free = jnp.stack([
+            jax.random.randint(ks[3], (J,), 0, 16).astype(jnp.float32),
+            jax.random.randint(ks[4], (J,), 0, 128).astype(jnp.float32),
+            jax.random.randint(ks[5], (J,), 0, 5).astype(jnp.float32)], 1)
+        gp = jax.random.randint(ks[0], (J,), 0, 21).astype(jnp.float32)
+        running = jax.random.bernoulli(ks[1], 0.7, (J,))
+        under = jax.random.bernoulli(ks[2], 0.9, (J,))
+        te = jnp.array([4.0, 16.0, 4.0])
+        cap = jnp.array([32.0, 256.0, 8.0])
+        scores, idx = ops.fitgpp_select(demand, free, gp, running, under,
+                                        te, cap, s=4.0)
+        ridx, rscores = kref.fitgpp_score_ref(demand, gp, free, te,
+                                              running, under, cap, 4.0)
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(rscores),
+                                   atol=1e-5)
+        assert int(idx) == int(ridx)
+
+    def test_matches_numpy_policy(self):
+        """Kernel argmin == policies.FitGppPolicy main path."""
+        from repro.core import policies as pol
+        rng = np.random.default_rng(0)
+        J = 64
+        demand = np.stack([rng.integers(1, 33, J), rng.integers(1, 257, J),
+                           rng.integers(0, 9, J)], 1).astype(float)
+        free = np.zeros((J, 3))
+        gp = rng.integers(0, 21, J).astype(float)
+        te = np.array([4.0, 16.0, 2.0])
+        cap = np.array([32.0, 256.0, 8.0])
+        p = pol.FitGppPolicy(s=4.0)
+        victims = p.select(
+            rng=rng, te_demand=te, cand_ids=np.arange(J),
+            cand_demand=demand, cand_node_free=free, cand_gp=gp,
+            cand_remaining=np.ones(J), under_cap=np.ones(J, bool),
+            all_run_demand=demand, all_run_gp=gp, node_cap=cap,
+            free_by_node=np.zeros((4, 3)), cand_node=np.zeros(J, np.int64))
+        _, idx = ops.fitgpp_select(
+            jnp.asarray(demand, jnp.float32), jnp.asarray(free, jnp.float32),
+            jnp.asarray(gp, jnp.float32), jnp.ones(J, bool),
+            jnp.ones(J, bool), jnp.asarray(te, jnp.float32),
+            jnp.asarray(cap, jnp.float32), s=4.0)
+        elig = pol.eligible_eq2(te, demand, free)
+        if elig.any():
+            assert victims == [int(idx)]
+
+
+class TestSsdChunkKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,L,H,P,N", [
+        (2, 256, 2, 64, 32), (1, 512, 4, 64, 128), (2, 128, 2, 32, 16),
+    ])
+    def test_vs_oracle(self, B, L, H, P, N, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(L + H), 4)
+        xdt = (rand(ks[0], (B, L, H, P), jnp.float32) * 0.3).astype(dtype)
+        loga = -jax.nn.softplus(rand(ks[1], (B, L, H), jnp.float32))
+        loga = loga.astype(dtype)
+        Bm = (rand(ks[2], (B, L, H, N), jnp.float32) * 0.3).astype(dtype)
+        Cm = (rand(ks[3], (B, L, H, N), jnp.float32) * 0.3).astype(dtype)
+        out = ops.ssd_chunk(xdt, loga, Bm, Cm)
+        # oracle operates per chunk of 256 (matches kernel Q)
+        Q = min(256, L)
+        outs = []
+        for c in range(L // Q):
+            sl = slice(c * Q, (c + 1) * Q)
+            outs.append(kref.ssd_chunk_ref(xdt[:, sl], loga[:, sl],
+                                           Bm[:, sl], Cm[:, sl]))
+        ref = jnp.concatenate(outs, axis=1)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+    def test_matches_model_ssd_scan(self):
+        """kernel == models.ssm.ssd_scan y_diag path (zero init, 1 chunk)."""
+        from repro.models import ssm
+        B, Q, H, P, N = 1, 64, 2, 16, 8
+        ks = jax.random.split(jax.random.PRNGKey(9), 4)
+        xdt = jax.random.normal(ks[0], (B, Q, H, P)) * 0.3
+        loga = -jax.nn.softplus(jax.random.normal(ks[1], (B, Q, H)))
+        Bm = jax.random.normal(ks[2], (B, Q, H, N)) * 0.3
+        Cm = jax.random.normal(ks[3], (B, Q, H, N)) * 0.3
+        y_scan, _ = ssm.ssd_scan(xdt, loga, Bm, Cm, chunk=Q)
+        y_ker = ops.ssd_chunk(xdt, loga, Bm, Cm)
+        np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_scan),
+                                   atol=1e-4)

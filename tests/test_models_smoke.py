@@ -1,0 +1,108 @@
+"""Per-arch smoke tests: reduced same-family config, one forward + one
+train step on CPU, asserting output shapes and no NaNs; plus a decode
+consistency check per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models, trainer
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.data import make_batch
+from repro.optim import AdamWConfig
+
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.d_model <= 512 and cfg.n_layers <= 4
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    params = models.init(cfg, jax.random.key(0))
+    batch = make_batch(cfg, 2, 32, seed=0, step=0)
+    logits = models.forward(cfg, params, batch)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg = get_smoke_config(arch)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = trainer.init_train_state(cfg, ocfg, jax.random.key(0))
+    step = jax.jit(trainer.make_train_step(cfg, ocfg))
+    losses = []
+    for i in range(3):
+        state, m = step(state, make_batch(cfg, 2, 32, seed=0, step=i))
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] + 0.5      # not diverging
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_decode_consistency(arch):
+    """Incremental decode must match the full forward pass."""
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    params = models.init(cfg, jax.random.key(0))
+    T = 12
+    batch = make_batch(cfg, 2, 64, seed=0, step=0)
+    batch["tokens"] = batch["tokens"][:, :T]
+    ref = models.forward(cfg, params, batch)
+
+    prompt = dict(batch)
+    prompt["tokens"] = batch["tokens"][:, :4]
+    nv = cfg.vlm.n_visual_tokens if cfg.family == "vlm" else 0
+    lg, cache = models.prefill(cfg, params, prompt, pad_to=nv + T)
+    outs = [lg]
+    step = jax.jit(lambda p, c, t: models.serve_step(cfg, p, c, t))
+    for i in range(4, T):
+        lg, cache = step(params, cache, batch["tokens"][:, i:i + 1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    err = jnp.abs(dec - ref[:, nv + 3:nv + T]).max()
+    assert err < 5e-5, f"{arch}: decode err {err}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The full configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256_000),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92_553),
+        "mamba2-1.3b": (48, 2048, 64, 64, 0, 50_280),
+        "command-r-35b": (40, 8192, 64, 8, 22_528, 256_000),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51_866),
+        "stablelm-12b": (40, 5120, 32, 8, 13_824, 100_352),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151_936),
+        "nemotron-4-340b": (96, 18_432, 96, 8, 73_728, 256_000),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16_384, 32_768),
+        "mistral-large-123b": (88, 12_288, 96, 8, 28_672, 32_768),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab)
+    assert got == expected
+    if arch == "qwen3-moe-30b-a3b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 8
+    if arch == "mixtral-8x22b":
+        assert cfg.moe.num_experts == 8 and cfg.moe.top_k == 2
+        assert cfg.window > 0                      # native SWA
+    if arch == "mamba2-1.3b":
+        assert cfg.ssm.d_state == 128
+    if arch == "nemotron-4-340b":
+        assert cfg.activation == "sq_relu" and not cfg.gated_mlp
+
+
+def test_param_counts_sane():
+    expected_b = {
+        "recurrentgemma-9b": (7.5, 10.5), "internvl2-2b": (1.6, 2.4),
+        "mamba2-1.3b": (1.1, 1.6), "command-r-35b": (28, 37),
+        "whisper-large-v3": (1.2, 1.9), "stablelm-12b": (11, 13.5),
+        "qwen3-moe-30b-a3b": (28, 33), "nemotron-4-340b": (330, 350),
+        "mixtral-8x22b": (135, 146), "mistral-large-123b": (118, 128),
+    }
+    for arch, (lo, hi) in expected_b.items():
+        n = models.count_params(get_config(arch)) / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.1f}B not in [{lo}, {hi}]"

@@ -1,0 +1,81 @@
+"""Gang (multi-node) scheduling — the paper's stated future work."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
+from repro.core import metrics, simulator, workload
+from repro.core.types import JobSet
+
+
+def make_jobs(rows):
+    """rows: (submit, exec, cpu, ram, gpu, is_te, gp, n_nodes)"""
+    r = np.asarray(rows, dtype=float)
+    return JobSet(submit=r[:, 0].astype(np.int64),
+                  exec_total=r[:, 1].astype(np.int64),
+                  demand=r[:, 2:5], is_te=r[:, 5].astype(bool),
+                  gp=r[:, 6].astype(np.int64),
+                  n_nodes=r[:, 7].astype(np.int64))
+
+
+def cfg(policy="fitgpp", n_nodes=4):
+    return SimConfig(cluster=ClusterSpec(n_nodes=n_nodes), policy=policy)
+
+
+class TestGangScheduling:
+    def test_all_or_nothing_placement(self):
+        """A 3-node gang must wait until 3 nodes are simultaneously free."""
+        jobs = make_jobs([
+            (0, 10, 32, 256, 8, 0, 0, 1),   # fills node
+            (0, 10, 32, 256, 8, 0, 0, 1),   # fills node
+            (0, 5, 16, 128, 4, 0, 0, 3),    # 3-node gang: only 2 free
+        ])
+        res = simulator.simulate(cfg("fifo"), jobs)
+        assert res.finish[2] >= 10 + 5      # waited for completions
+
+    def test_gang_occupies_all_nodes(self):
+        jobs = make_jobs([(0, 5, 16, 128, 4, 0, 0, 4)])
+        sim = simulator.Simulator(cfg("fifo"), jobs)
+        sim.step(0)
+        assert len(sim.job_nodes[0]) == 4
+        assert np.allclose(sim.free[:, 2], 8 - 4)
+
+    def test_gang_te_triggers_multi_victim_preemption(self):
+        jobs = make_jobs([
+            (0, 30, 32, 256, 8, 0, 1, 1),
+            (0, 30, 32, 256, 8, 0, 1, 1),
+            (0, 30, 32, 256, 8, 0, 1, 1),
+            (0, 30, 32, 256, 8, 0, 1, 1),
+            (1, 3, 16, 128, 4, 1, 0, 2),    # 2-node TE gang
+        ])
+        res = simulator.simulate(cfg("fitgpp"), jobs)
+        assert res.preempt_count[:4].sum() == 2      # exactly 2 victims
+        assert res.slowdown[4] < 3.0
+
+    def test_gang_victim_frees_all_nodes(self):
+        jobs = make_jobs([
+            (0, 30, 32, 256, 8, 0, 1, 2),   # 2-node BE gang
+            (0, 30, 32, 256, 8, 0, 1, 1),
+            (0, 30, 32, 256, 8, 0, 1, 1),
+            (1, 3, 32, 256, 8, 1, 0, 2),    # 2-node TE: evicting the
+        ])                                   # gang frees both its nodes
+        res = simulator.simulate(cfg("fitgpp"), jobs)
+        assert res.preempt_count[0] == 1
+        assert res.preempt_count[1:3].sum() == 0
+
+    def test_mixed_workload_end_to_end(self):
+        wl = WorkloadSpec(n_jobs=1024, multi_node_frac=0.2)
+        c = SimConfig(workload=wl, seed=1)
+        jobs = workload.generate(c)
+        assert (jobs.n_nodes > 1).any()
+        for pol in ("fifo", "fitgpp"):
+            res = simulator.simulate(dataclasses.replace(c, policy=pol), jobs)
+            assert (res.finish > 0).all()
+            assert (res.slowdown >= 1 - 1e-9).all()
+
+    def test_jax_engine_rejects_gangs(self):
+        from repro.core import sim_jax
+        jobs = make_jobs([(0, 5, 16, 128, 4, 0, 0, 2)])
+        with pytest.raises(NotImplementedError):
+            sim_jax.jobs_from_jobset(jobs)

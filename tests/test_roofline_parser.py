@@ -1,0 +1,101 @@
+"""Unit tests for the roofline HLO-collective parser — it multiplies
+loop bodies by known_trip_count and bf16-adjusts f32 upcasts, so it must
+be right for §Roofline to mean anything."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import roofline as rf
+
+HLO = """\
+HloModule jit_train_step
+
+%body.1 (p: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %p = parameter(0)
+  %ar = f32[4,8]{1,0} all-reduce(%something), replica_groups={}
+  ROOT %t = tuple(%x)
+}
+
+%cond.1 (p: (s32[], f32[4,8])) -> pred[] {
+  %p = parameter(0)
+  ROOT %lt = compare(%i, %n)
+}
+
+ENTRY %main.42 (a: f32[16,16]) -> f32[16,16] {
+  %a = parameter(0)
+  %ag = bf16[16,16]{1,0} all-gather(%a), replica_groups={}
+  %w = (s32[], f32[4,8]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"},"known_init_step":{"init":"0","step":"1"}}
+  ROOT %r = f32[16,16] add(%x, %y)
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_trip_count_multiplies_body(self):
+        out = rf.collective_bytes(HLO)
+        # body all-reduce: 4*8*4 bytes * factor 2 * 10 trips = 2560
+        assert out["all-reduce"] == pytest.approx(4 * 8 * 4 * 2 * 10)
+
+    def test_entry_counted_once(self):
+        out = rf.collective_bytes(HLO)
+        # entry all-gather: bf16 16*16*2 bytes * factor 1
+        assert out["all-gather"] == pytest.approx(16 * 16 * 2)
+
+    def test_total_and_details(self):
+        out = rf.collective_bytes(HLO)
+        assert out["total"] == out["all-reduce"] + out["all-gather"]
+        kinds = [d[1] for d in out["_details"]]
+        assert set(kinds) == {"all-reduce", "all-gather"}
+
+    def test_bf16_adjustment_on_converted_f32(self):
+        hlo = HLO.replace("all-reduce(%something)",
+                          "all-reduce(%convert_fusion.3)")
+        out = rf.collective_bytes(hlo)
+        # f32 collective fed by a convert -> halved (CPU upcast artifact)
+        assert out["all-reduce"] == pytest.approx(4 * 8 * 4 * 2 * 10 / 2)
+        assert out["total_raw_f32"] == pytest.approx(
+            4 * 8 * 4 * 2 * 10 + 16 * 16 * 2)
+
+    def test_shape_bytes_dtypes(self):
+        assert rf._shape_bytes("bf16[2,3]") == 12
+        assert rf._shape_bytes("f32[10]") == 40
+        assert rf._shape_bytes("pred[7]") == 7
+        assert rf._shape_bytes("(f32[2], bf16[4])") == 16
+
+
+class TestAnalyticCosts:
+    def test_train_flops_scale_with_params(self):
+        small = rf.analytic_costs(get_config("mamba2-1.3b"),
+                                  INPUT_SHAPES["train_4k"])
+        big = rf.analytic_costs(get_config("nemotron-4-340b"),
+                                INPUT_SHAPES["train_4k"])
+        assert big["flops"] > 100 * small["flops"]
+
+    def test_model_flops_is_6nd(self):
+        cfg = get_config("stablelm-12b")
+        a = rf.analytic_costs(cfg, INPUT_SHAPES["train_4k"])
+        tokens = 256 * 4096
+        # 6·N_active·D within 20% (N_active excludes embed, adds tied head)
+        assert a["model_flops"] == pytest.approx(6 * 12.1e9 * tokens,
+                                                 rel=0.2)
+
+    def test_moe_counts_active_params_only(self):
+        cfg = get_config("qwen3-moe-30b-a3b")
+        a = rf.analytic_costs(cfg, INPUT_SHAPES["train_4k"])
+        dense_equiv = 6 * 30.5e9 * 256 * 4096
+        assert a["model_flops"] < 0.25 * dense_equiv    # top-8 of 128
+
+    def test_decode_window_caps_attention(self):
+        cfg = get_config("mixtral-8x22b")              # SWA 4096
+        d = rf.analytic_costs(cfg, INPUT_SHAPES["decode_32k"])
+        full = rf.analytic_costs(cfg.replace(window=0),
+                                 INPUT_SHAPES["decode_32k"])
+        assert d["flops"] < full["flops"]
+
+    def test_roofline_dominant(self):
+        cfg = get_config("stablelm-12b")
+        r = rf.roofline(cfg, INPUT_SHAPES["train_4k"], 256,
+                        coll_bytes_per_device=1e9, hlo_flops_raw=1e12)
+        assert r.dominant == "compute"
+        r2 = rf.roofline(cfg, INPUT_SHAPES["train_4k"], 256,
+                         coll_bytes_per_device=1e15, hlo_flops_raw=1e12)
+        assert r2.dominant == "collective"

@@ -1,0 +1,121 @@
+"""Property-based tests (hypothesis) for scheduler invariants."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
+from repro.core import simulator, workload
+from repro.core.types import DONE, JobSet
+
+NODE_CAP = np.array([32.0, 256.0, 8.0])
+
+
+@st.composite
+def jobsets(draw, max_jobs=40):
+    n = draw(st.integers(3, max_jobs))
+    submit = np.cumsum(draw(st.lists(
+        st.integers(0, 3), min_size=n, max_size=n)))
+    execs = draw(st.lists(st.integers(1, 20), min_size=n, max_size=n))
+    cpus = draw(st.lists(st.integers(1, 32), min_size=n, max_size=n))
+    rams = draw(st.lists(st.integers(1, 256), min_size=n, max_size=n))
+    gpus = draw(st.lists(st.sampled_from([0, 1, 2, 4, 8]),
+                         min_size=n, max_size=n))
+    te = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    gp = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+    return JobSet(
+        submit=np.asarray(submit, np.int64),
+        exec_total=np.asarray(execs, np.int64),
+        demand=np.stack([np.asarray(cpus, float), np.asarray(rams, float),
+                         np.asarray(gpus, float)], 1),
+        is_te=np.asarray(te, bool),
+        gp=np.asarray(gp, np.int64),
+    )
+
+
+def cfg_for(policy, P=1, s=4.0, n_nodes=2):
+    return SimConfig(cluster=ClusterSpec(n_nodes=n_nodes),
+                     policy=policy, s=s, max_preemptions=P)
+
+
+class CapacityCheckedSim(simulator.Simulator):
+    """Simulator that asserts resource conservation every tick."""
+
+    def step(self, t):
+        super().step(t)
+        # free never negative, never above capacity
+        assert (self.free >= -1e-9).all(), f"over-allocated at t={t}"
+        assert (self.free <= self.node_cap[None] + 1e-9).all(), \
+            f"free above capacity at t={t}"
+        # running jobs' demand + free == capacity per node
+        used = np.zeros_like(self.free)
+        for j in self.running | self.grace:
+            used[int(self.node[j])] += self.jobs.demand[j]
+        assert np.allclose(used + self.free, self.node_cap[None]), \
+            f"conservation violated at t={t}"
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(jobsets(), st.sampled_from(["fifo", "lrtp", "rand", "fitgpp"]))
+def test_capacity_conservation_and_completion(js, policy):
+    cfg = cfg_for(policy)
+    sim = CapacityCheckedSim(cfg, js)
+    res = sim.run(max_ticks=100_000)
+    # every job completes exactly once
+    assert (res.finish > 0).all()
+    # slowdown >= 1 for all jobs
+    assert (res.slowdown >= 1.0 - 1e-9).all()
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(jobsets(), st.sampled_from(["lrtp", "rand", "fitgpp"]),
+       st.integers(1, 3))
+def test_te_never_preempted_and_p_cap_under_normal_path(js, policy, P):
+    cfg = cfg_for(policy, P=P)
+    res = simulator.simulate(cfg, js)
+    # TE jobs are never preempted
+    assert (res.preempt_count[js.is_te] == 0).all()
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(jobsets())
+def test_fifo_order_no_preemption(js):
+    """Under vanilla FIFO: no preemption, and start order follows
+    submission order (strict head-of-line)."""
+    cfg = cfg_for("fifo")
+    res = simulator.simulate(cfg, js)
+    assert res.preempt_count.sum() == 0
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(jobsets(max_jobs=25), st.integers(0, 3))
+def test_jax_engine_parity(js, seed):
+    """JAX engine reproduces the reference tick-for-tick (deterministic
+    policies)."""
+    from repro.core import sim_jax
+    for policy in ("fifo", "lrtp"):
+        cfg = cfg_for(policy)
+        ref = simulator.simulate(cfg, js)
+        st_ = sim_jax.run_jit(cfg, sim_jax.jobs_from_jobset(js), seed)
+        assert (np.asarray(st_.finish) == ref.finish).all(), policy
+        assert (np.asarray(st_.preempt_count) == ref.preempt_count).all()
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.integers(0, 1000))
+def test_fitgpp_parity_generated_workloads(seed):
+    """FitGpp parity on realistic generated workloads."""
+    from repro.core import sim_jax
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=192), policy="fitgpp",
+                    seed=seed)
+    js = workload.generate(cfg)
+    ref = simulator.simulate(cfg, js)
+    st_ = sim_jax.run_jit(cfg, sim_jax.jobs_from_jobset(js), seed)
+    assert (np.asarray(st_.finish) == ref.finish).all()
+    assert (np.asarray(st_.preempt_count) == ref.preempt_count).all()

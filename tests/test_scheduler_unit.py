@@ -1,0 +1,264 @@
+"""Unit tests for the paper's equations and queue semantics."""
+import numpy as np
+import pytest
+
+from repro.configs.cluster import SimConfig, WorkloadSpec
+from repro.core import policies as pol
+from repro.core import simulator, workload
+from repro.core.types import DONE, GRACE, QUEUED, RUNNING, JobSet
+
+NODE_CAP = np.array([32.0, 256.0, 8.0])
+
+
+def make_jobs(rows):
+    """rows: (submit, exec, cpu, ram, gpu, is_te, gp)"""
+    r = np.asarray(rows, dtype=float)
+    return JobSet(
+        submit=r[:, 0].astype(np.int64),
+        exec_total=r[:, 1].astype(np.int64),
+        demand=r[:, 2:5],
+        is_te=r[:, 5].astype(bool),
+        gp=r[:, 6].astype(np.int64),
+    )
+
+
+def small_cfg(policy="fitgpp", n_nodes=2, s=4.0, P=1):
+    from repro.configs.cluster import ClusterSpec
+    return SimConfig(cluster=ClusterSpec(n_nodes=n_nodes),
+                     policy=policy, s=s, max_preemptions=P)
+
+
+class TestEq1Size:
+    def test_scale_invariance(self):
+        """Eq. 1 must be invariant under the measurement scale."""
+        d = np.array([[4.0, 64.0, 2.0]])
+        s1 = pol.size_eq1(d, NODE_CAP)
+        # re-measure RAM in MB: demand and capacity both x1024
+        d2 = d.copy()
+        d2[:, 1] *= 1024
+        cap2 = NODE_CAP.copy()
+        cap2[1] *= 1024
+        assert np.allclose(s1, pol.size_eq1(d2, cap2))
+
+    def test_monotone(self):
+        small = pol.size_eq1(np.array([[1.0, 1.0, 1.0]]), NODE_CAP)
+        big = pol.size_eq1(np.array([[16.0, 128.0, 8.0]]), NODE_CAP)
+        assert big > small
+
+    def test_formula(self):
+        d = np.array([[16.0, 128.0, 4.0]])
+        expect = np.sqrt((16 / 32) ** 2 + (128 / 256) ** 2 + (4 / 8) ** 2)
+        assert np.allclose(pol.size_eq1(d, NODE_CAP), expect)
+
+
+class TestEq2Eligibility:
+    def test_elementwise(self):
+        te = np.array([8.0, 32.0, 4.0])
+        demand = np.array([[8.0, 32.0, 4.0],    # exactly sufficient
+                           [8.0, 32.0, 3.0]])   # gpu short by 1
+        free = np.zeros((2, 3))
+        elig = pol.eligible_eq2(te, demand, free)
+        assert elig.tolist() == [True, False]
+
+    def test_free_counts(self):
+        te = np.array([8.0, 32.0, 4.0])
+        demand = np.array([[8.0, 32.0, 3.0]])
+        free = np.array([[0.0, 0.0, 1.0]])      # free GPU closes the gap
+        assert pol.eligible_eq2(te, demand, free).tolist() == [True]
+
+
+class TestEq3Score:
+    def test_gp_weight(self):
+        demand = np.array([[4.0, 16.0, 2.0], [4.0, 16.0, 2.0]])
+        gp = np.array([0.0, 10.0])
+        s0 = pol.fitgpp_scores(demand, gp, NODE_CAP, s=0.0)
+        s4 = pol.fitgpp_scores(demand, gp, NODE_CAP, s=4.0)
+        assert np.allclose(s0[0], s0[1])        # s=0: GP ignored
+        assert s4[1] > s4[0]                    # s>0: long GP penalized
+
+    def test_normalized_by_max(self):
+        demand = np.array([[4.0, 16.0, 2.0], [8.0, 32.0, 4.0]])
+        gp = np.array([5.0, 5.0])
+        sc = pol.fitgpp_scores(demand, gp, NODE_CAP, s=1.0)
+        assert np.isclose(sc[1], 1.0 + 1.0)     # max size, max gp -> 1+s
+
+
+class TestEq4Selection:
+    def _select(self, policy, te_demand, cand_demand, free, gps,
+                remaining=None, under=None, nodes=None):
+        n = len(cand_demand)
+        rng = np.random.default_rng(0)
+        nodes = np.zeros(n, np.int64) if nodes is None else nodes
+        return policy.select(
+            rng=rng, te_demand=np.asarray(te_demand),
+            cand_ids=np.arange(n),
+            cand_demand=np.asarray(cand_demand, float),
+            cand_node_free=np.asarray(free, float),
+            cand_gp=np.asarray(gps, float),
+            cand_remaining=np.asarray(remaining if remaining is not None
+                                      else np.ones(n), float),
+            under_cap=np.asarray(under if under is not None
+                                 else np.ones(n, bool)),
+            all_run_demand=np.asarray(cand_demand, float),
+            all_run_gp=np.asarray(gps, float),
+            node_cap=NODE_CAP,
+            free_by_node=np.zeros((4, 3)),
+            cand_node=nodes)
+
+    def test_fitgpp_prefers_small_sufficient(self):
+        p = pol.FitGppPolicy(s=0.0)
+        te = [4.0, 16.0, 2.0]
+        cands = [[16.0, 128.0, 8.0],    # big, sufficient
+                 [4.0, 16.0, 2.0],      # small, sufficient  <- winner
+                 [2.0, 8.0, 1.0]]       # smaller but NOT sufficient
+        free = [[0, 0, 0], [0, 0, 0], [0, 0, 0]]
+        v = self._select(p, te, cands, free, [1, 1, 1])
+        assert v == [1]
+
+    def test_fitgpp_prefers_short_gp(self):
+        p = pol.FitGppPolicy(s=4.0)
+        te = [4.0, 16.0, 2.0]
+        cands = [[4.0, 16.0, 2.0], [4.0, 16.0, 2.0]]
+        free = [[0, 0, 0], [0, 0, 0]]
+        v = self._select(p, te, cands, free, gps=[10, 1])
+        assert v == [1]
+
+    def test_fitgpp_respects_p_cap(self):
+        p = pol.FitGppPolicy(s=0.0)
+        te = [4.0, 16.0, 2.0]
+        cands = [[4.0, 16.0, 2.0], [8.0, 32.0, 4.0]]
+        free = [[0, 0, 0], [0, 0, 0]]
+        v = self._select(p, te, cands, free, [1, 1],
+                         under=[False, True])   # first is at the cap
+        assert v == [1]
+
+    def test_fitgpp_single_victim(self):
+        p = pol.FitGppPolicy()
+        te = [4.0, 16.0, 2.0]
+        cands = [[8.0, 64.0, 4.0]] * 5
+        free = [[0, 0, 0]] * 5
+        assert len(self._select(p, te, cands, free, np.ones(5))) == 1
+
+    def test_lrtp_picks_longest(self):
+        p = pol.LrtpPolicy()
+        te = [4.0, 16.0, 2.0]
+        cands = [[8.0, 64.0, 4.0], [8.0, 64.0, 4.0]]
+        free = [[0, 0, 0], [0, 0, 0]]
+        v = self._select(p, te, cands, free, [1, 1], remaining=[10, 99])
+        assert v[0] == 1
+
+    def test_lrtp_until_fits(self):
+        """LRTP accumulates victims until the TE fits on one node."""
+        p = pol.LrtpPolicy()
+        te = [8.0, 64.0, 8.0]
+        cands = [[4.0, 32.0, 4.0], [4.0, 32.0, 4.0]]   # both on node 0
+        free = [[0, 0, 0], [0, 0, 0]]
+        v = self._select(p, te, cands, free, [1, 1], remaining=[5, 9],
+                         nodes=np.zeros(2, np.int64))
+        assert sorted(v) == [0, 1]
+
+
+class TestSimulatorSemantics:
+    def test_fifo_head_of_line(self):
+        """A big head BE blocks later (fitting) BE jobs: strict FIFO."""
+        jobs = make_jobs([
+            (0, 5, 32, 256, 8, 0, 0),     # fills node 0 entirely
+            (0, 5, 32, 256, 8, 0, 0),     # fills node 1 entirely
+            (1, 5, 32, 256, 8, 0, 0),     # head of queue, can't fit
+            (1, 1, 1, 1, 0, 0, 0),        # small; must WAIT behind head
+        ])
+        cfg = small_cfg("fifo", n_nodes=2)
+        res = simulator.simulate(cfg, jobs)
+        # job 3 (1 min) must not finish before job 2 starts at t=5
+        assert res.finish[3] > 5
+
+    def test_te_triggers_preemption(self):
+        jobs = make_jobs([
+            (0, 30, 32, 256, 8, 0, 2),     # BE fills node 0
+            (0, 30, 32, 256, 8, 0, 2),     # BE fills node 1
+            (1, 3, 16, 128, 4, 1, 0),      # TE arrives: must preempt
+        ])
+        cfg = small_cfg("fitgpp", n_nodes=2)
+        res = simulator.simulate(cfg, jobs)
+        assert res.preempt_count.sum() == 1
+        te_sd = res.slowdown[2]
+        assert te_sd < 3.0                 # scheduled after ~GP ticks
+
+    def test_grace_period_delays_te(self):
+        base = [(0, 30, 32, 256, 8, 0, 0), (0, 30, 32, 256, 8, 0, 0),
+                (1, 5, 16, 128, 4, 1, 0)]
+        cfg = small_cfg("fitgpp", n_nodes=2)
+        fast = simulator.simulate(cfg, make_jobs(base))
+        slow_rows = [r[:6] + (10,) if not r[5] else r for r in base]
+        slow = simulator.simulate(cfg, make_jobs(slow_rows))
+        assert slow.finish[2] > fast.finish[2]
+
+    def test_victim_requeued_on_top(self):
+        """Preempted BE resumes before queued BEs that arrived earlier."""
+        jobs = make_jobs([
+            (0, 30, 32, 256, 8, 0, 1),    # BE a (victim) on node 0
+            (0, 30, 32, 256, 8, 0, 1),    # BE b on node 1
+            (0, 30, 32, 256, 8, 0, 1),    # BE c queued (head-of-line)
+            (1, 2, 32, 256, 8, 1, 0),     # TE preempts a
+        ])
+        cfg = small_cfg("fitgpp", n_nodes=2)
+        sim = simulator.Simulator(cfg, jobs)
+        res = sim.run()
+        assert res.preempt_count[:3].sum() == 1
+        victim = int(np.argmax(res.preempt_count[:3]))
+        others = [j for j in range(3) if j != victim and jobs.submit[j] == 0]
+        # victim (requeued on top) must resume before BE c starts
+        assert res.finish[victim] < res.finish[2] or victim == 2
+
+    def test_preemption_cap(self):
+        cfg = small_cfg("fitgpp", n_nodes=1, P=1)
+        jobs = make_jobs([
+            (0, 60, 32, 256, 8, 0, 0),
+            (1, 2, 32, 256, 8, 1, 0),
+            (8, 2, 32, 256, 8, 1, 0),
+            (16, 2, 32, 256, 8, 1, 0),
+        ])
+        res = simulator.simulate(cfg, jobs)
+        assert res.preempt_count[0] <= 1 + 2   # cap 1 + random fallbacks
+        # with a single BE and P=1, fallback preempts it at most... allow
+        # the paper's random fallback to fire; count must stay bounded.
+
+    def test_slowdown_formula(self):
+        jobs = make_jobs([(0, 10, 1, 1, 1, 0, 0)])
+        cfg = small_cfg("fifo", n_nodes=1)
+        res = simulator.simulate(cfg, jobs)
+        assert np.isclose(res.slowdown[0], 1.0)   # no waiting
+
+
+class TestWorkload:
+    def test_closed_loop_load(self):
+        cfg = SimConfig(workload=WorkloadSpec(n_jobs=1024))
+        js = workload.generate(cfg)
+        assert js.n == 1024
+        js.validate(NODE_CAP)
+        assert (np.diff(js.submit) >= 0).all()
+
+    def test_determinism(self):
+        cfg = SimConfig(workload=WorkloadSpec(n_jobs=256))
+        a = workload.generate(cfg)
+        b = workload.generate(cfg)
+        assert np.array_equal(a.submit, b.submit)
+        assert np.array_equal(a.demand, b.demand)
+
+    def test_te_fraction(self):
+        cfg = SimConfig(workload=WorkloadSpec(n_jobs=4096, te_fraction=0.3))
+        js = workload.generate(cfg)
+        assert abs(js.is_te.mean() - 0.3) < 0.05
+
+    def test_gp_scaling(self):
+        c1 = SimConfig(workload=WorkloadSpec(n_jobs=2048, gp_scale=1.0))
+        c4 = SimConfig(workload=WorkloadSpec(n_jobs=2048, gp_scale=4.0))
+        g1 = workload.generate(c1).gp.mean()
+        g4 = workload.generate(c4).gp.mean()
+        assert g4 > 2 * g1
+
+    def test_exec_time_paper_bounds(self):
+        cfg = SimConfig(workload=WorkloadSpec(n_jobs=4096))
+        js = workload.generate(cfg)
+        te, be = js.exec_total[js.is_te], js.exec_total[~js.is_te]
+        assert te.max() <= 30 and be.max() <= 1440     # paper truncations

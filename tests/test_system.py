@@ -1,0 +1,74 @@
+"""End-to-end behaviour: the paper's headline claims hold on a reduced
+synthetic workload (the full-scale numbers live in EXPERIMENTS.md)."""
+import dataclasses
+
+import numpy as np
+
+from repro.configs.cluster import SimConfig, WorkloadSpec
+from repro.core import metrics, simulator, workload
+
+
+def _run(policy, jobs, cfg):
+    res = simulator.simulate(dataclasses.replace(cfg, policy=policy), jobs)
+    return metrics.pooled_tables(metrics.merge_results([res]))
+
+
+def test_paper_headline_claims_reduced_scale():
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=2 ** 12), s=4.0,
+                    max_preemptions=1, seed=0)
+    jobs = workload.generate(cfg)
+    fifo = _run("fifo", jobs, cfg)
+    lrtp = _run("lrtp", jobs, cfg)
+    fit = _run("fitgpp", jobs, cfg)
+
+    # claim 1: FitGpp slashes the TE p95 slowdown vs FIFO (paper: -96.6%)
+    assert fit["TE"]["p95"] < 0.10 * fifo["TE"]["p95"]
+    # claim 2: BE jobs are not greatly elongated (paper: +18% median)
+    assert fit["BE"]["p50"] < 1.35 * fifo["BE"]["p50"]
+    # claim 3: FitGpp preempts far fewer jobs than LRTP (paper: ~15x)
+    assert fit["preempted_frac"] < 0.6 * lrtp["preempted_frac"]
+    # claim 4: FitGpp's preemption->reschedule intervals are shorter
+    assert fit["intervals"]["p50"] <= lrtp["intervals"]["p50"]
+    # claim 5: preemptive TE latencies are near-1 (paper: p50 = 1.00)
+    assert fit["TE"]["p50"] <= 1.05
+
+
+def test_fig5_p_independence_reduced():
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=2 ** 11), s=4.0, seed=1)
+    jobs = workload.generate(cfg)
+    p95 = []
+    for P in (1, 1_000_000):
+        c = dataclasses.replace(cfg, max_preemptions=P)
+        p95.append(_run("fitgpp", jobs, c)["TE"]["p95"])
+    assert abs(p95[0] - p95[1]) < 0.4      # paper Fig. 5: ~independent
+
+
+def test_beyond_paper_backfill_extension():
+    """Non-FIFO extension (paper's future work): bounded backfill keeps
+    FitGpp's TE latency while strongly improving BE slowdowns."""
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=2 ** 11), s=4.0,
+                    max_preemptions=1, seed=3)
+    jobs = workload.generate(cfg)
+    plain = _run("fitgpp", jobs, cfg)
+    cfg_bf = dataclasses.replace(cfg, backfill=True)
+    bf = _run("fitgpp", jobs, cfg_bf)
+    assert bf["BE"]["p50"] < plain["BE"]["p50"]        # BE improves
+    assert bf["TE"]["p95"] < 2.0                        # TE stays near-1
+
+
+def test_sim_kernel_path_parity():
+    """REPRO_SIM_KERNEL=1 routes Eq. 1-4 through the Pallas kernel with
+    identical outcomes."""
+    import os
+    import numpy as np
+    from repro.core import sim_jax
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=192), policy="fitgpp",
+                    seed=11)
+    jobs = workload.generate(cfg)
+    ref = simulator.simulate(cfg, jobs)
+    os.environ["REPRO_SIM_KERNEL"] = "1"
+    try:
+        st = sim_jax.run(cfg, sim_jax.jobs_from_jobset(jobs), 11)
+    finally:
+        os.environ.pop("REPRO_SIM_KERNEL", None)
+    assert (np.asarray(st.finish) == ref.finish).all()
