@@ -1,15 +1,57 @@
-"""Simulator-engine benchmarks: reference (numpy) vs JAX engine, plus the
-vmapped sweep throughput that the mesh distribution relies on."""
+"""Simulator-engine benchmarks: reference (numpy) tick vs event-driven
+advancement, the JAX engine, and the vmapped sweep throughput that the
+mesh distribution relies on.
+
+``python -m benchmarks.sim_engine_bench --json`` additionally emits
+``BENCH_sim_engine.json`` — tick vs event-driven throughput (jobs
+simulated per second) on a sparse long-horizon workload, with the
+bit-exactness of the two modes re-verified in-run (DESIGN.md §4).
+"""
 from __future__ import annotations
 
-import dataclasses
+import argparse
+import json
 import time
 from typing import List
 
-import jax
+from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
+from repro.core import metrics, sim_jax, simulator, sweep, workload
+from repro.core.workload import sparse_long_horizon
 
-from repro.configs.cluster import SimConfig, WorkloadSpec
-from repro.core import sim_jax, simulator, sweep, workload
+
+def bench_tick_vs_event(n_jobs: int = 512, policy: str = "fitgpp",
+                        n_nodes: int = 8, seed: int = 0) -> dict:
+    cfg = SimConfig(cluster=ClusterSpec(n_nodes=n_nodes), policy=policy)
+    js = sparse_long_horizon(n_jobs, seed=seed)
+
+    t0 = time.perf_counter()
+    res_tick = simulator.simulate(cfg, js, mode="tick")
+    s_tick = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    res_event = simulator.simulate(cfg, js, mode="event")
+    s_event = time.perf_counter() - t0
+
+    metrics.assert_result_parity(res_tick, res_event)
+    return {
+        "workload": {"kind": "sparse_long_horizon", "n_jobs": n_jobs,
+                     "n_nodes": n_nodes, "policy": policy, "seed": seed,
+                     "makespan_ticks": int(res_tick.makespan)},
+        "tick": {"seconds": s_tick,
+                 "jobs_per_sec": metrics.sim_throughput(res_tick, s_tick)},
+        "event": {"seconds": s_event,
+                  "jobs_per_sec": metrics.sim_throughput(res_event,
+                                                         s_event)},
+        "speedup": s_tick / max(s_event, 1e-12),
+        "parity": True,      # assert_result_parity would have raised
+    }
+
+
+def emit_json(path: str = "BENCH_sim_engine.json") -> dict:
+    out = bench_tick_vs_event()
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
 
 
 def run_all() -> List[tuple]:
@@ -19,9 +61,21 @@ def run_all() -> List[tuple]:
     jobs = workload.generate(cfg)
 
     t0 = time.perf_counter()
-    simulator.simulate(cfg, jobs)
-    rows.append(("sim_reference_2k", (time.perf_counter() - t0) * 1e6,
-                 "numpy heaps"))
+    simulator.simulate(cfg, jobs, mode="tick")
+    rows.append(("sim_reference_2k_tick", (time.perf_counter() - t0) * 1e6,
+                 "numpy heaps, minute ticks"))
+
+    t0 = time.perf_counter()
+    simulator.simulate(cfg, jobs, mode="event")
+    rows.append(("sim_reference_2k_event", (time.perf_counter() - t0) * 1e6,
+                 "numpy heaps, event jumps"))
+
+    ev = bench_tick_vs_event()
+    rows.append(("sim_sparse_512_tick", ev["tick"]["seconds"] * 1e6,
+                 f"{ev['tick']['jobs_per_sec']:.0f} jobs/s"))
+    rows.append(("sim_sparse_512_event", ev["event"]["seconds"] * 1e6,
+                 f"{ev['event']['jobs_per_sec']:.0f} jobs/s, "
+                 f"{ev['speedup']:.1f}x"))
 
     jj = sim_jax.jobs_from_jobset(jobs)
     st = sim_jax.run_jit(cfg, jj, 0)           # compile
@@ -38,3 +92,22 @@ def run_all() -> List[tuple]:
     rows.append(("sim_sweep_8trials", (time.perf_counter() - t0) * 1e6,
                  "vmap(8 sims)"))
     return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="emit BENCH_sim_engine.json (tick vs event)")
+    ap.add_argument("--out", default="BENCH_sim_engine.json")
+    args = ap.parse_args(argv)
+    if args.json:
+        out = emit_json(args.out)
+        print(json.dumps(out, indent=2))
+        return
+    print("name,us_per_call,derived")
+    for name, us, derived in run_all():
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,29 +10,35 @@ the paper's observation that big DL jobs need long GPs. Resumed jobs
 continue bit-exactly (property-tested: the loss trajectory matches an
 uninterrupted run).
 
-Scheduling semantics mirror the simulator: strict-FIFO BE queue with
-head-of-line blocking, TE priority lane, victims re-queued on top,
-per-job preemption cap P, pending-grace-aware triggering.
+Scheduling semantics are not mirrored by hand any more — they are the
+simulator's semantics, literally: both drive the same
+:class:`~repro.core.engine.SchedulerCore` (DESIGN.md §2), which owns
+the strict-FIFO BE queue with head-of-line blocking, the TE priority
+lane, requeue-on-top for victims, the per-job preemption cap P,
+pending-grace-aware triggering, and gang (multi-node) placement. This
+driver owns only the real-training concerns: initializing/step-ping
+train states, checkpoint flush on vacate, restore on resume, and
+sizing grace periods from live state bytes.
 """
 from __future__ import annotations
 
 import os
-import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import numpy as np
 
 from repro import trainer
 from repro.checkpoint import (estimate_grace_period, load_pytree,
-                              save_pytree, state_bytes)
+                              save_pytree)
 from repro.configs.base import ModelConfig
 from repro.core import policies as pol
+from repro.core.engine import ClusterState, CoreHooks, SchedulerCore
+from repro.core.types import DONE, GRACE, QUEUED, RUNNING
+from repro.core.types import NOT_ARRIVED as PENDING
 from repro.data import make_batch
 from repro.optim import AdamWConfig
-
-PENDING, QUEUED, RUNNING, GRACE, DONE = range(5)
 
 
 @dataclass
@@ -40,11 +46,12 @@ class JobSpec:
     name: str
     cfg: ModelConfig                  # smoke-scale model config
     is_te: bool
-    demand: np.ndarray                # (cpu, ram, gpu)
+    demand: np.ndarray                # (cpu, ram, gpu) PER NODE
     total_steps: int
     batch: int = 4
     seq_len: int = 32
     submit_tick: int = 0
+    n_nodes: int = 1                  # gang width (all-or-nothing)
     opt: AdamWConfig = field(default_factory=lambda: AdamWConfig(
         lr=1e-3, warmup_steps=2, total_steps=1000))
     gp_ticks: Optional[int] = None    # None -> estimated from state size
@@ -58,7 +65,6 @@ class Job:
     node: int = -1
     preempt_count: int = 0
     grace_left: int = 0
-    queue_key: float = 0.0
     state: Optional[dict] = None      # live train state (when scheduled)
     ckpt_path: Optional[str] = None
     losses: List[float] = field(default_factory=list)
@@ -86,8 +92,6 @@ class Controller:
                  workdir: str = "/tmp/repro_ctl",
                  seed: int = 0):
         self.node_cap = np.asarray(node_cap, float)
-        self.free = np.tile(self.node_cap, (n_nodes, 1))
-        self.pending_free = np.zeros_like(self.free)
         self.policy = pol.make_policy(policy, s)
         self.P = max_preemptions
         self.steps_per_tick = steps_per_tick
@@ -95,16 +99,40 @@ class Controller:
         self.rng = np.random.default_rng(seed)
         self.jobs: List[Job] = []
         self.t = 0
-        self.top_key = -1.0
-        self._next_key = 0.0
         self.events: List[dict] = []
+        self.core = SchedulerCore(
+            cluster=ClusterState(n_nodes, self.node_cap),
+            policy=self.policy,
+            max_preemptions=max_preemptions,
+            rng=self.rng,
+            gp_of=self._gp_of,
+            remaining_of=self._remaining_of,
+            hooks=CoreHooks(on_start=self._on_start,
+                            on_signal=self._on_signal,
+                            on_vacate=self._on_vacate,
+                            on_finish=self._on_finish),
+        )
         os.makedirs(workdir, exist_ok=True)
 
-    # -- job lifecycle -----------------------------------------------------
+    # -- core accessors: live quantities the core cannot own -----------------
+
+    def _gp_of(self, ids):
+        if np.ndim(ids) == 0:
+            return self.jobs[int(ids)].gp
+        return np.asarray([self.jobs[int(i)].gp for i in np.asarray(ids)],
+                          float)
+
+    def _remaining_of(self, ids):
+        return np.asarray(
+            [self.jobs[int(i)].spec.total_steps - self.jobs[int(i)].steps_done
+             for i in np.atleast_1d(np.asarray(ids))], float)
+
+    # -- job lifecycle -------------------------------------------------------
 
     def submit(self, spec: JobSpec) -> Job:
         job = Job(spec=spec)
         self.jobs.append(job)
+        self.core.add_job(spec.demand, spec.is_te, spec.n_nodes)
         return job
 
     def _init_state(self, job: Job) -> None:
@@ -120,137 +148,78 @@ class Controller:
             job._step_fn = jax.jit(trainer.make_train_step(
                 job.spec.cfg, job.spec.opt))
 
-    def _start(self, job: Job, node: int) -> None:
+    # -- core hooks: the real-training side of each transition ---------------
+
+    def _on_start(self, j: int, nodes: np.ndarray, t: int) -> None:
+        job = self.jobs[j]
         job.status = RUNNING
-        job.node = node
-        self.free[node] -= job.spec.demand
+        job.node = int(nodes[0])
         self._init_state(job)
-        self.events.append({"t": self.t, "ev": "start",
-                            "job": job.spec.name})
+        self.events.append({"t": t, "ev": "start", "job": job.spec.name})
 
-    def _signal(self, job: Job, te: Job) -> None:
+    def _on_signal(self, j: int, te: int, t: int) -> None:
+        job = self.jobs[j]
         job.status = GRACE
-        job.grace_left = job.gp
-        job.preempt_count += 1
-        self.pending_free[job.node] += job.spec.demand
-        self.events.append({"t": self.t, "ev": "preempt",
-                            "job": job.spec.name, "for": te.spec.name,
+        job.preempt_count = int(self.core.preempt_count[j])
+        job.grace_left = int(self.core.grace_left[j])
+        self.events.append({"t": t, "ev": "preempt",
+                            "job": job.spec.name,
+                            "for": self.jobs[te].spec.name,
                             "gp": job.grace_left})
-        if job.grace_left == 0:
-            self._vacate(job)
 
-    def _vacate(self, job: Job) -> None:
+    def _on_vacate(self, j: int, t: int) -> None:
         # grace period over: the checkpoint is flushed and memory freed
+        job = self.jobs[j]
         job.ckpt_path = os.path.join(
             self.workdir, f"{job.spec.name}.{job.preempt_count}.npz")
         save_pytree(job.state, job.ckpt_path)
         job.state = None
-        self.pending_free[job.node] -= job.spec.demand
-        self.free[job.node] += job.spec.demand
         job.node = -1
         job.status = QUEUED
-        job.queue_key = self.top_key
-        self.top_key -= 1.0
-        self.events.append({"t": self.t, "ev": "vacate",
+        self.events.append({"t": t, "ev": "vacate",
                             "job": job.spec.name,
                             "ckpt": job.ckpt_path})
 
-    def _finish(self, job: Job) -> None:
-        self.free[job.node] += job.spec.demand
+    def _on_finish(self, j: int, t: int) -> None:
+        job = self.jobs[j]
         job.node = -1
         job.status = DONE
-        job.finish_time = self.t
-        self.events.append({"t": self.t, "ev": "done",
-                            "job": job.spec.name})
+        job.finish_time = t
+        self.events.append({"t": t, "ev": "done", "job": job.spec.name})
 
-    # -- scheduling ---------------------------------------------------------
-
-    def _first_fit(self, demand) -> int:
-        fits = np.all(self.free >= demand[None, :] - 1e-9, axis=1)
-        idx = np.flatnonzero(fits)
-        return int(idx[0]) if len(idx) else -1
-
-    def _queued(self, te: bool) -> List[Job]:
-        js = [j for j in self.jobs if j.status == QUEUED
-              and j.spec.is_te == te]
-        return sorted(js, key=lambda j: j.queue_key)
-
-    def _try_preempt(self, te: Job) -> None:
-        cands = [j for j in self.jobs
-                 if j.status == RUNNING and not j.spec.is_te]
-        if not cands:
-            return
-        cand_node = np.asarray([j.node for j in cands])
-        victims = self.policy.select(
-            rng=self.rng,
-            te_demand=te.spec.demand,
-            cand_ids=np.arange(len(cands)),
-            cand_demand=np.stack([j.spec.demand for j in cands]),
-            cand_node_free=self.free[cand_node],
-            cand_gp=np.asarray([j.gp for j in cands], float),
-            cand_remaining=np.asarray(
-                [j.spec.total_steps - j.steps_done for j in cands], float),
-            under_cap=np.asarray([j.preempt_count < self.P for j in cands]),
-            all_run_demand=np.stack([j.spec.demand for j in cands]),
-            all_run_gp=np.asarray([j.gp for j in cands], float),
-            node_cap=self.node_cap,
-            free_by_node=self.free,
-            cand_node=cand_node,
-        )
-        for v in victims:
-            self._signal(cands[int(v)], te)
+    # -- one tick ------------------------------------------------------------
 
     def tick(self) -> None:
+        t = self.t
+        core = self.core
         # arrivals
-        for job in self.jobs:
-            if job.status == PENDING and job.spec.submit_tick <= self.t:
+        for j, job in enumerate(self.jobs):
+            if job.status == PENDING and job.spec.submit_tick <= t:
+                core.enqueue(j)
                 job.status = QUEUED
-                job.queue_key = self._next_key
-                self._next_key += 1.0
-                job.submit_time = self.t
-        # grace expiry
-        for job in [j for j in self.jobs
-                    if j.status == GRACE and j.grace_left <= 0]:
-            self._vacate(job)
-        # TE lane
-        if self.policy.preemptive:
-            for job in self._queued(te=True):
-                node = self._first_fit(job.spec.demand)
-                if node >= 0:
-                    self._start(job, node)
-                else:
-                    promised = self.free + self.pending_free
-                    fits_pending = np.all(
-                        promised >= job.spec.demand[None, :] - 1e-9,
-                        axis=1).any()
-                    if not fits_pending:
-                        self._try_preempt(job)
-        # BE queue, strict FIFO
-        queue = self._queued(te=False) if self.policy.preemptive else \
-            sorted([j for j in self.jobs if j.status == QUEUED],
-                   key=lambda j: j.queue_key)
-        for job in queue:
-            node = self._first_fit(job.spec.demand)
-            if node < 0:
-                break                     # head-of-line blocking
-            self._start(job, node)
+                job.submit_time = t
+        # grace expiry, then the shared schedule pass (TE lane + BE FIFO)
+        core.expire_grace(t)
+        core.schedule(t)
         # run real train steps for every RUNNING job
-        for job in self.jobs:
-            if job.status == RUNNING:
-                for _ in range(self.steps_per_tick):
-                    if job.steps_done >= job.spec.total_steps:
-                        break
-                    batch = make_batch(job.spec.cfg, job.spec.batch,
-                                       job.spec.seq_len, seed=1,
-                                       step=job.steps_done)
-                    job.state, m = job._step_fn(job.state, batch)
-                    job.losses.append(float(m["loss"]))
-                    job.steps_done += 1
-                job.run_ticks += 1
+        for j, job in enumerate(self.jobs):
+            if job.status != RUNNING:
+                continue
+            for _ in range(self.steps_per_tick):
                 if job.steps_done >= job.spec.total_steps:
-                    self._finish(job)
-            elif job.status == GRACE:
-                job.grace_left -= 1
+                    break
+                batch = make_batch(job.spec.cfg, job.spec.batch,
+                                   job.spec.seq_len, seed=1,
+                                   step=job.steps_done)
+                job.state, m = job._step_fn(job.state, batch)
+                job.losses.append(float(m["loss"]))
+                job.steps_done += 1
+            job.run_ticks += 1
+            if job.steps_done >= job.spec.total_steps:
+                core.finish(j, t)
+        core.tick_clocks()
+        for j in core.grace:
+            self.jobs[j].grace_left = int(core.grace_left[j])
         self.t += 1
 
     def run(self, max_ticks: int = 10_000) -> None:

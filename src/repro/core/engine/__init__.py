@@ -1,0 +1,18 @@
+"""Shared scheduling core (DESIGN.md §2).
+
+One state machine — queue lanes, first-fit/gang placement, the
+grace-period preemption lifecycle, and the policy-invocation protocol
+— driven by both the reference simulator (``core/simulator.py``) and
+the live-training controller (``core/controller.py``), and mirrored
+array-wise by the JAX engine (``core/sim_jax.py``).
+"""
+from repro.core.engine.core import CoreHooks, SchedulerCore
+from repro.core.engine.placement import FIT_EPS, ClusterState
+from repro.core.engine.preemption import (best_victim_node, gang_select,
+                                          ranked_order)
+from repro.core.engine.queues import QueueLanes
+
+__all__ = [
+    "FIT_EPS", "ClusterState", "QueueLanes", "SchedulerCore", "CoreHooks",
+    "best_victim_node", "gang_select", "ranked_order",
+]

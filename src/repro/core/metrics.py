@@ -8,6 +8,26 @@ import numpy as np
 from repro.core.types import SimResult
 
 
+def assert_result_parity(a: SimResult, b: SimResult) -> None:
+    """Bit-exactness check between two SimResults — the contract the
+    event-driven advancement mode guarantees against tick stepping
+    (DESIGN.md §4), also used for driver-vs-driver semantics tests."""
+    np.testing.assert_array_equal(a.finish, b.finish)
+    np.testing.assert_array_equal(a.preempt_count, b.preempt_count)
+    np.testing.assert_array_equal(a.submit, b.submit)
+    np.testing.assert_array_equal(a.exec_total, b.exec_total)
+    np.testing.assert_array_equal(a.is_te, b.is_te)
+    assert a.makespan == b.makespan, (a.makespan, b.makespan)
+    assert len(a.events) == len(b.events), (len(a.events), len(b.events))
+    for ea, eb in zip(a.events, b.events):
+        assert ea.as_tuple() == eb.as_tuple(), (ea, eb)
+
+
+def sim_throughput(res: SimResult, seconds: float) -> float:
+    """Jobs simulated per wall-clock second (engine benchmarks)."""
+    return len(res.finish) / max(seconds, 1e-12)
+
+
 def percentiles(x: np.ndarray, ps=(50, 95, 99)) -> Dict[str, float]:
     if len(x) == 0:
         return {f"p{p}": float("nan") for p in ps}

@@ -15,6 +15,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.core.engine.placement import FIT_EPS
+
 
 def size_eq1(demand: np.ndarray, node_cap: np.ndarray) -> np.ndarray:
     """Eq. 1: scale-invariant demand size, ||D / capacity||_2.
@@ -42,9 +44,10 @@ def eligible_eq2(te_demand: np.ndarray, demand: np.ndarray,
     """Eq. 2: D_TE <= D_j + N_free(node_j), element-wise, per job.
 
     demand (m, 3) of running BE jobs; node_free (m, 3) free vector of the
-    node each candidate runs on.
+    node each candidate runs on. FIT_EPS-tolerant, like every other fit
+    check (and like the JAX engine's eligibility mask).
     """
-    return np.all(te_demand[None, :] <= demand + node_free, axis=1)
+    return np.all(te_demand[None, :] <= demand + node_free + FIT_EPS, axis=1)
 
 
 @dataclass
@@ -66,6 +69,13 @@ class Policy:
         marks those with PreemptionCount < P. ``all_run_*`` equal cand_*
         (kept explicit: Eq. 3 normalizes over all running BE jobs).
         """
+        raise NotImplementedError
+
+    def rank_key(self, rng, cand_demand, cand_gp, cand_remaining,
+                 node_cap) -> np.ndarray:
+        """Per-candidate preemption-order key, LOWER = preempt first
+        (used by the engine's gang selection; ``cand_demand`` arrives
+        pre-scaled by gang width so Eq. 1 sees total demand)."""
         raise NotImplementedError
 
 
@@ -101,6 +111,10 @@ class FitGppPolicy(Policy):
         pick = int(rng.integers(len(cand_ids)))
         return [int(cand_ids[pick])]
 
+    def rank_key(self, rng, cand_demand, cand_gp, cand_remaining,
+                 node_cap) -> np.ndarray:
+        return fitgpp_scores(cand_demand, cand_gp, node_cap, self.s)
+
 
 class LrtpPolicy(Policy):
     """Big-C's policy: Longest Remaining Time Preemption (oracle runtime).
@@ -119,6 +133,10 @@ class LrtpPolicy(Policy):
             cand_node=cand_node, under_cap=under_cap,
             free_by_node=free_by_node, rng=rng)
 
+    def rank_key(self, rng, cand_demand, cand_gp, cand_remaining,
+                 node_cap) -> np.ndarray:
+        return -np.asarray(cand_remaining, float)
+
 
 class RandPolicy(Policy):
     name = "rand"
@@ -131,6 +149,10 @@ class RandPolicy(Policy):
             te_demand=te_demand, cand_ids=cand_ids, cand_demand=cand_demand,
             cand_node=cand_node, under_cap=under_cap,
             free_by_node=free_by_node, rng=rng)
+
+    def rank_key(self, rng, cand_demand, cand_gp, cand_remaining,
+                 node_cap) -> np.ndarray:
+        return rng.random(len(cand_gp))
 
 
 def _preempt_until_fits(order, te_demand, cand_ids, cand_demand, cand_node,
@@ -146,7 +168,7 @@ def _preempt_until_fits(order, te_demand, cand_ids, cand_demand, cand_node,
         node = int(cand_node[i])
         pending[node] += cand_demand[i]
         victims.append(int(cand_ids[i]))
-        if np.all(te_demand <= pending[node]):
+        if np.all(te_demand <= pending[node] + FIT_EPS):
             return victims
     return victims   # even preempting everyone wasn't enough
 

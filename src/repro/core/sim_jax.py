@@ -27,11 +27,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.cluster import SimConfig
+from repro.core.engine.placement import FIT_EPS
 from repro.core.types import JobSet
 
 NOT_ARRIVED, QUEUED, RUNNING, GRACE, DONE = 0, 1, 2, 3, 4
 _INF = jnp.inf
-_EPS = 1e-9
+_EPS = FIT_EPS    # one epsilon for every fit check, engine-wide
 
 
 class Jobs(NamedTuple):

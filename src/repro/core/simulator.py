@@ -14,21 +14,30 @@ Mechanics (choices documented in DESIGN.md §3):
   * A TE that triggered preemption re-triggers victim selection only
     after all victims it signalled have vacated (defensive; rare).
 
-Data structures: the job queues are lazy-deletion heaps and the running/
-grace sets are Python sets — running jobs are bounded by cluster
-capacity (<~1k), so every tick is O(active), not O(n_jobs).
+This module is a thin DRIVER over the shared scheduling core
+(``repro.core.engine``, DESIGN.md §2): the :class:`SchedulerCore` owns
+the queues, placement, the grace lifecycle and policy invocation; this
+driver owns the workload (arrivals / closed-loop admission), the clock
+and result assembly.
+
+Time advancement (DESIGN.md §4): the default ``mode="event"`` jumps the
+clock straight to the next event (arrival, finish, grace expiry)
+whenever a schedule pass provably cannot start or preempt anything —
+the skipped ticks are pure countdowns, bulk-applied, so the result is
+bit-for-bit identical to ``mode="tick"`` (property-tested, including
+the RNG-consuming policies). On sparse / long-horizon workloads this
+drops wall-clock by an order of magnitude.
 """
 from __future__ import annotations
 
-import heapq
-from typing import Dict, List, Set
+from typing import Dict, List
 
 import numpy as np
 
 from repro.configs.cluster import SimConfig
 from repro.core import policies as pol
-from repro.core.types import (DONE, GRACE, NOT_ARRIVED, QUEUED, RUNNING,
-                              JobSet, PreemptionEvent, SimResult)
+from repro.core.engine import ClusterState, CoreHooks, SchedulerCore
+from repro.core.types import JobSet, PreemptionEvent, SimResult
 
 
 class Simulator:
@@ -52,31 +61,29 @@ class Simulator:
         self.rng = np.random.default_rng(cfg.seed + 104729)
 
         n = jobs.n
-        self.state = np.full(n, NOT_ARRIVED, np.int8)
         self.remaining = jobs.exec_total.astype(np.int64).copy()
-        self.node = np.full(n, -1, np.int64)
-        self.preempt_count = np.zeros(n, np.int64)
-        self.grace_left = np.zeros(n, np.int64)
-        self.queue_key = np.full(n, np.inf)      # lower = closer to head
-        self.top_key = -1.0                       # next "top of queue" key
         self.finish = np.full(n, -1, np.int64)
         self.vacated_at = np.full(n, -1, np.int64)
-        self.te_pending = np.zeros(n, np.int64)  # victims still in grace
-        self.victim_of = np.full(n, -1, np.int64)
-        self.free = np.tile(self.node_cap, (self.n_nodes, 1))
         self.events: List[PreemptionEvent] = []
         self.open_events: Dict[int, PreemptionEvent] = {}
 
-        self.te_heap: List = []      # (key, job)
-        self.be_heap: List = []
-        # resources already promised by in-flight grace periods, per node
-        self.pending_free = np.zeros((self.n_nodes, 3))
-        self.running: Set[int] = set()
-        self.running_be: Set[int] = set()
-        self.grace: Set[int] = set()
-        self.n_done = 0
+        self.core = SchedulerCore(
+            cluster=ClusterState(self.n_nodes, self.node_cap),
+            policy=self.policy,
+            max_preemptions=cfg.max_preemptions,
+            rng=self.rng,
+            demand=jobs.demand,
+            is_te=jobs.is_te,
+            width=jobs.n_nodes,
+            gp_of=lambda ids: jobs.gp[ids],
+            remaining_of=lambda ids: self.remaining[ids],
+            backfill=cfg.backfill,
+            backfill_depth=cfg.backfill_depth,
+            hooks=CoreHooks(on_start=self._on_start,
+                            on_signal=self._on_signal,
+                            on_vacate=self._on_vacate),
+        )
 
-        self.job_nodes: Dict[int, np.ndarray] = {}   # gang placements
         order = np.argsort(jobs.submit, kind="stable")
         self.arrival_order = order
         self._next_arrival = 0
@@ -84,267 +91,83 @@ class Simulator:
         self.frac = (jobs.demand / cluster_cap[None, :]).mean(axis=1) \
             * jobs.n_nodes
 
-    # -- queue helpers -------------------------------------------------------
+    # -- result bookkeeping (driver-side, via core hooks) --------------------
 
-    def _push(self, j: int, key: float) -> None:
-        self.queue_key[j] = key
-        use_te_lane = self.policy.preemptive and self.jobs.is_te[j]
-        heapq.heappush(self.te_heap if use_te_lane else self.be_heap,
-                       (key, j))
-
-    def _pop_valid(self, heap) -> int:
-        """-> head job index or -1. Skips stale (lazy-deleted) entries."""
-        while heap:
-            key, j = heap[0]
-            if self.state[j] == QUEUED and self.queue_key[j] == key:
-                return j
-            heapq.heappop(heap)
-        return -1
-
-    # -- resource helpers ----------------------------------------------------
-
-    def _first_fit(self, demand: np.ndarray, k: int = 1) -> int:
-        """First node fitting ``demand`` (k=1), or -1. For gangs (k>1)
-        use _gang_fit."""
-        fits = np.all(self.free >= demand[None, :] - 1e-9, axis=1)
-        idx = np.flatnonzero(fits)
-        if k > 1:
-            return -1 if len(idx) < k else int(idx[0])
-        return int(idx[0]) if len(idx) else -1
-
-    def _gang_fit(self, demand: np.ndarray, k: int):
-        """First k nodes that each fit ``demand`` (gang: all-or-nothing)."""
-        fits = np.all(self.free >= demand[None, :] - 1e-9, axis=1)
-        idx = np.flatnonzero(fits)
-        return idx[:k] if len(idx) >= k else None
-
-    def _fits_job(self, j: int):
-        """-> node array for job j (len n_nodes[j]) or None."""
-        k = int(self.jobs.n_nodes[j])
-        if k == 1:
-            n = self._first_fit(self.jobs.demand[j])
-            return None if n < 0 else np.asarray([n])
-        return self._gang_fit(self.jobs.demand[j], k)
-
-    def _start(self, j: int, nodes, t: int) -> None:
-        nodes = np.atleast_1d(np.asarray(nodes))
-        self.state[j] = RUNNING
-        self.node[j] = int(nodes[0])
-        self.job_nodes[j] = nodes
-        self.free[nodes] -= self.jobs.demand[j]
-        self.queue_key[j] = np.inf
-        self.running.add(j)
-        if not self.jobs.is_te[j]:
-            self.running_be.add(j)
+    def _on_start(self, j: int, nodes: np.ndarray, t: int) -> None:
         if self.vacated_at[j] >= 0:
             ev = self.open_events.pop(j, None)
             if ev is not None:
                 ev.resume_time = t
             self.vacated_at[j] = -1
 
-    def _signal_preemption(self, j: int, te: int, t: int) -> None:
-        """Move a running BE job into its grace period."""
-        assert self.state[j] == RUNNING and not self.jobs.is_te[j]
-        self.state[j] = GRACE
-        self.grace_left[j] = self.jobs.gp[j]
-        self.preempt_count[j] += 1
-        self.victim_of[j] = te
-        self.te_pending[te] += 1
-        self.running.discard(j)
-        self.running_be.discard(j)
-        self.pending_free[self.job_nodes[j]] += self.jobs.demand[j]
+    def _on_signal(self, j: int, te: int, t: int) -> None:
         ev = PreemptionEvent(job=j, te_job=te, signal_time=t)
         self.events.append(ev)
         self.open_events[j] = ev
-        if self.grace_left[j] <= 0:          # GP=0: vacate immediately
-            self._vacate(j, t)
-        else:
-            self.grace.add(j)
 
-    def _vacate(self, j: int, t: int) -> None:
-        nodes = self.job_nodes.pop(j)
-        self.free[nodes] += self.jobs.demand[j]
-        self.pending_free[nodes] -= self.jobs.demand[j]
-        self.node[j] = -1
-        self.state[j] = QUEUED
-        self.grace.discard(j)
-        self._push(j, self.top_key)
-        self.top_key -= 1.0
+    def _on_vacate(self, j: int, t: int) -> None:
         self.vacated_at[j] = t
         if j in self.open_events:
             self.open_events[j].vacate_time = t
-        te = int(self.victim_of[j])
-        if te >= 0:
-            self.te_pending[te] -= 1
-            self.victim_of[j] = -1
 
-    # -- victim selection ------------------------------------------------------
+    # -- state views (tests and subclasses introspect these) ----------------
 
-    def _cand_best_node(self, j: int, te_demand: np.ndarray) -> int:
-        """Node of job j with the most slack for ``te_demand`` (Eq. 2 is
-        evaluated against the victim's best node; single-node jobs keep
-        their only node, preserving the paper's exact semantics)."""
-        nodes = self.job_nodes[j]
-        if len(nodes) == 1:
-            return int(nodes[0])
-        slack = np.min(self.free[nodes] + self.jobs.demand[j][None, :]
-                       - te_demand[None, :], axis=1)
-        return int(nodes[int(np.argmax(slack))])
+    @property
+    def free(self) -> np.ndarray:
+        return self.core.cluster.free
 
-    def _gang_preempt(self, te: int, t: int) -> None:
-        """Multi-node TE (paper future work): Eq. 2/4 generalized —
-        prefer the min-score SINGLE victim whose eviction alone yields
-        >= k satisfying nodes (the paper's minimize-preemption-count
-        strategy); otherwise signal victims in policy order until the
-        gang fits (counting this selection's pending frees)."""
-        k = int(self.jobs.n_nodes[te])
-        d = self.jobs.demand[te]
+    @property
+    def pending_free(self) -> np.ndarray:
+        return self.core.cluster.pending_free
 
-        def n_fit(free):
-            return int(np.all(free >= d[None, :] - 1e-9, axis=1).sum())
+    @property
+    def state(self) -> np.ndarray:
+        return self.core.state
 
-        cand = sorted(self.running_be)
-        ranked = self._policy_rank(cand)
-        if self.policy.name == "fitgpp":
-            under = [j for j in ranked
-                     if self.preempt_count[j] < self.cfg.max_preemptions]
-            for j in (under or ranked):          # Eq. 4: min score first
-                trial = self.free.copy()
-                trial[self.job_nodes[j]] += self.jobs.demand[j]
-                if n_fit(trial) >= k:
-                    self._signal_preemption(j, te, t)
-                    return
-        pending = self.free.copy()
-        victims = []
-        for j in ranked:
-            if n_fit(pending) >= k:
-                break
-            pending[self.job_nodes[j]] += self.jobs.demand[j]
-            victims.append(j)
-        if n_fit(pending) >= k:
-            for v in victims:
-                self._signal_preemption(v, te, t)
+    @property
+    def node(self) -> np.ndarray:
+        return self.core.node
 
-    def _policy_rank(self, cand):
-        """Candidates in the policy's preemption order (under-cap first)."""
-        if not cand:
-            return []
-        cand = np.asarray(cand)
-        under = self.preempt_count[cand] < self.cfg.max_preemptions
-        if self.policy.name == "lrtp":
-            key = -self.remaining[cand].astype(float)
-        elif self.policy.name == "rand":
-            key = self.rng.random(len(cand))
-        else:   # fitgpp: Eq. 3 score (normalized over running BE)
-            key = pol.fitgpp_scores(
-                self.jobs.demand[cand] * self.jobs.n_nodes[cand][:, None],
-                self.jobs.gp[cand], self.node_cap, self.cfg.s)
-        order = np.lexsort((key, ~under))
-        return [int(cand[i]) for i in order]
+    @property
+    def preempt_count(self) -> np.ndarray:
+        return self.core.preempt_count
 
-    def _try_preempt_for(self, te: int, t: int) -> None:
-        if self.jobs.n_nodes[te] > 1:
-            self._gang_preempt(te, t)
-            return
-        cand = np.sort(np.fromiter(self.running_be, np.int64,
-                                   count=len(self.running_be)))
-        if len(cand) == 0:
-            return
-        cand_node = np.asarray([self._cand_best_node(int(j),
-                                                     self.jobs.demand[te])
-                                for j in cand])
-        victims = self.policy.select(
-            rng=self.rng,
-            te_demand=self.jobs.demand[te],
-            cand_ids=cand,
-            cand_demand=self.jobs.demand[cand],
-            cand_node_free=self.free[cand_node],
-            cand_gp=self.jobs.gp[cand],
-            cand_remaining=self.remaining[cand],
-            under_cap=self.preempt_count[cand] < self.cfg.max_preemptions,
-            all_run_demand=self.jobs.demand[cand],
-            all_run_gp=self.jobs.gp[cand],
-            node_cap=self.node_cap,
-            free_by_node=self.free,
-            cand_node=cand_node,
-        )
-        for v in victims:
-            self._signal_preemption(v, te, t)
+    @property
+    def grace_left(self) -> np.ndarray:
+        return self.core.grace_left
 
-    # -- one tick ---------------------------------------------------------------
+    @property
+    def job_nodes(self) -> Dict[int, np.ndarray]:
+        return self.core.job_nodes
 
-    def _schedule(self, t: int) -> None:
-        # 1) TE priority lane (preemptive policies only)
-        if self.policy.preemptive:
-            blocked: List[int] = []
-            while True:
-                j = self._pop_valid(self.te_heap)
-                if j < 0:
-                    break
-                nodes = self._fits_job(j)
-                if nodes is not None:
-                    heapq.heappop(self.te_heap)
-                    self._start(j, nodes, t)
-                else:
-                    heapq.heappop(self.te_heap)
-                    # Preempt only if the TE would not fit even counting
-                    # resources already promised by in-flight grace
-                    # periods ("the resource is insufficient", §2) — an
-                    # imminent vacate is incoming supply, not a shortage.
-                    promised = self.free + self.pending_free
-                    fits_pending = (np.all(
-                        promised >= self.jobs.demand[j][None, :] - 1e-9,
-                        axis=1)).sum() >= int(self.jobs.n_nodes[j])
-                    if self.te_pending[j] == 0 and not fits_pending:
-                        self._try_preempt_for(j, t)
-                        # GP=0 victims vacate inline: place the TE NOW,
-                        # before the BE pass can reclaim the freed node.
-                        nodes = self._fits_job(j)
-                        if nodes is not None:
-                            self._start(j, nodes, t)
-                            continue
-                    blocked.append(j)
-            for j in blocked:                # keep FIFO order among TE
-                heapq.heappush(self.te_heap, (self.queue_key[j], j))
-        # 2) BE queue (all jobs under vanilla FIFO): strict head-of-line,
-        # or bounded first-fit backfill (beyond-paper, cfg.backfill)
-        if not self.cfg.backfill:
-            while True:
-                head = self._pop_valid(self.be_heap)
-                if head < 0:
-                    break
-                nodes = self._fits_job(head)
-                if nodes is None:
-                    break                     # head-of-line blocking
-                heapq.heappop(self.be_heap)
-                self._start(head, nodes, t)
-        else:
-            skipped = []
-            scanned = 0
-            while scanned < self.cfg.backfill_depth:
-                head = self._pop_valid(self.be_heap)
-                if head < 0:
-                    break
-                heapq.heappop(self.be_heap)
-                nodes = self._fits_job(head)
-                if nodes is not None:
-                    self._start(head, nodes, t)
-                else:
-                    skipped.append(head)
-                    scanned += 1
-            for j in skipped:                 # keep original keys
-                heapq.heappush(self.be_heap, (self.queue_key[j], j))
+    @property
+    def running(self):
+        return self.core.running
+
+    @property
+    def running_be(self):
+        return self.core.running_be
+
+    @property
+    def grace(self):
+        return self.core.grace
+
+    @property
+    def n_done(self) -> int:
+        return self.core.n_done
+
+    # -- one tick ------------------------------------------------------------
 
     def step(self, t: int) -> None:
         jobs = self.jobs
+        core = self.core
         # arrivals
         if self.admission_target > 0:
             # closed-loop: admit next jobs while backlog < target
             while (self._next_arrival < jobs.n and
                    self._load < self.admission_target):
                 j = self._next_arrival
-                self.state[j] = QUEUED
-                self._push(j, float(j))
+                core.enqueue(j)
                 self.admit_time[j] = t
                 self._load += self.frac[j]
                 self._next_arrival += 1
@@ -352,49 +175,92 @@ class Simulator:
             while (self._next_arrival < jobs.n and
                    jobs.submit[self.arrival_order[self._next_arrival]] <= t):
                 j = int(self.arrival_order[self._next_arrival])
-                self.state[j] = QUEUED
-                self._push(j, float(self._next_arrival))
+                core.enqueue(j)
                 self._next_arrival += 1
-        # grace countdown -> vacate (job-index order: JAX-engine parity)
-        for j in sorted(j for j in self.grace if self.grace_left[j] <= 0):
-            self._vacate(j, t)
-        # allocate
-        self._schedule(t)
+        # grace countdown -> vacate, then allocate
+        core.expire_grace(t)
+        core.schedule(t)
         # run for one minute
-        if self.running:
-            run = np.fromiter(self.running, np.int64, count=len(self.running))
+        if core.running:
+            run = np.fromiter(core.running, np.int64, count=len(core.running))
             self.remaining[run] -= 1
             for j in np.sort(run[self.remaining[run] <= 0]):
                 j = int(j)
-                self.free[self.job_nodes.pop(j)] += jobs.demand[j]
-                self.node[j] = -1
-                self.state[j] = DONE
+                core.finish(j, t + 1)
                 self.finish[j] = t + 1
-                self.running.discard(j)
-                self.running_be.discard(j)
-                self.n_done += 1
                 self._load -= self.frac[j]
-        if self.grace:
-            g = np.fromiter(self.grace, np.int64, count=len(self.grace))
-            self.grace_left[g] -= 1
+        core.tick_clocks()
 
-    def run(self, max_ticks: int = 10_000_000) -> SimResult:
+    # -- event-driven time advancement (DESIGN.md §4) ------------------------
+
+    def _fast_forward(self, t: int, max_ticks: int) -> int:
+        """Return the next tick that must actually execute, bulk-applying
+        the countdowns of the skipped (provably no-op) ticks."""
+        core = self.core
+        if core.schedule_would_act():
+            return t
+        nxt = None
+        if self.admission_target > 0:
+            if (self._next_arrival < self.jobs.n and
+                    self._load < self.admission_target):
+                return t                      # admission due next tick
+        elif self._next_arrival < self.jobs.n:
+            nxt = int(self.jobs.submit[
+                self.arrival_order[self._next_arrival]])
+        run = None
+        if core.running:
+            run = np.fromiter(core.running, np.int64, count=len(core.running))
+            # remaining r after a step -> the job finishes during the
+            # step at tick (t - 1) + r
+            ev = t - 1 + int(self.remaining[run].min())
+            nxt = ev if nxt is None else min(nxt, ev)
+        g = core.min_grace_left()
+        if g is not None:
+            # grace_left g after a step -> vacates at the top of tick t + g
+            ev = t + g
+            nxt = ev if nxt is None else min(nxt, ev)
+        if nxt is None:
+            raise RuntimeError(
+                "simulation stalled: jobs remain but no arrival, finish or "
+                "grace expiry is pending and nothing can be scheduled")
+        if nxt <= t:
+            return t
+        if nxt >= max_ticks:
+            raise RuntimeError(
+                f"simulation did not converge in {max_ticks} ticks")
+        k = nxt - t
+        if run is not None:
+            self.remaining[run] -= k
+        core.tick_clocks(k)
+        return nxt
+
+    def run(self, max_ticks: int = 10_000_000,
+            mode: str = "event") -> SimResult:
+        """``mode="event"`` (default) and ``mode="tick"`` produce
+        bit-identical results; event mode just skips no-op ticks."""
+        if mode not in ("event", "tick"):
+            raise ValueError(f"unknown advancement mode: {mode!r}")
         t = 0
-        while self.n_done < self.jobs.n:
+        n = self.jobs.n
+        while self.core.n_done < n:
             self.step(t)
             t += 1
-            if t >= max_ticks:
-                raise RuntimeError(f"simulation did not converge in {t} ticks")
+            if self.core.n_done < n:
+                if t >= max_ticks:
+                    raise RuntimeError(
+                        f"simulation did not converge in {t} ticks")
+                if mode == "event":
+                    t = self._fast_forward(t, max_ticks)
         return SimResult(
             finish=self.finish.copy(),
             exec_total=self.jobs.exec_total.copy(),
             submit=self.jobs.submit.copy(),
             is_te=self.jobs.is_te.copy(),
-            preempt_count=self.preempt_count.copy(),
+            preempt_count=self.core.preempt_count.copy(),
             events=self.events,
             makespan=t,
         )
 
 
-def simulate(cfg: SimConfig, jobs: JobSet) -> SimResult:
-    return Simulator(cfg, jobs).run()
+def simulate(cfg: SimConfig, jobs: JobSet, mode: str = "event") -> SimResult:
+    return Simulator(cfg, jobs).run(mode=mode)

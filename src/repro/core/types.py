@@ -50,6 +50,11 @@ class JobSet:
         assert (np.diff(self.submit) >= 0).all(), "jobs sorted by submit time"
 
 
+# Human-readable state names (engine assertion messages).
+STATE_NAMES = {NOT_ARRIVED: "not_arrived", QUEUED: "queued",
+               RUNNING: "running", GRACE: "grace", DONE: "done"}
+
+
 @dataclass
 class PreemptionEvent:
     job: int
@@ -57,6 +62,11 @@ class PreemptionEvent:
     signal_time: int            # grace period start
     vacate_time: int = -1
     resume_time: int = -1
+
+    def as_tuple(self):
+        """Canonical comparison key (engine-parity tests)."""
+        return (self.job, self.te_job, self.signal_time,
+                self.vacate_time, self.resume_time)
 
 
 @dataclass

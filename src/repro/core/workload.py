@@ -145,3 +145,25 @@ def generate_trace_proxy(cfg: SimConfig, seed: int = None) -> JobSet:
                 is_te=is_te, gp=gp)
     js.validate(node_cap)
     return js
+
+
+def sparse_long_horizon(n: int = 512, seed: int = 0,
+                        gap_mean: float = 180.0) -> JobSet:
+    """Trickle arrivals (exponential gaps, mean ``gap_mean`` minutes)
+    with heavy-tailed executions: the regime where an O(makespan) tick
+    loop wastes almost every iteration. Shared by the engine benchmark
+    and the event-vs-tick parity tests (DESIGN.md §4)."""
+    rng = np.random.default_rng(seed)
+    submit = np.cumsum(rng.exponential(gap_mean, n).astype(np.int64))
+    is_te = rng.random(n) < 0.3
+    exec_total = np.maximum(
+        rng.lognormal(np.log(60), 1.2, n).astype(np.int64), 1)
+    exec_total = np.minimum(exec_total, 1440)
+    exec_total[is_te] = np.minimum(exec_total[is_te], 30)
+    demand = np.stack([
+        np.clip(np.round(rng.normal(8, 6, n)), 1, 32),
+        np.clip(np.round(rng.normal(48, 48, n)), 1, 256),
+        rng.choice([0.0, 1.0, 2.0, 4.0, 8.0], n)], axis=1)
+    gp = np.round(np.clip(rng.normal(3, 3, n), 0, 20)).astype(np.int64)
+    return JobSet(submit=submit, exec_total=exec_total, demand=demand,
+                  is_te=is_te, gp=gp)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pltpu_compat import CompilerParams
+
 DEFAULT_BLOCK_J = 512
 _INF = jnp.inf
 
@@ -101,7 +103,7 @@ def fitgpp_score(demand: jax.Array, node_free: jax.Array, gp: jax.Array,
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
         scratch_shapes=[pltpu.VMEM((1, 2), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(scalars, demand[None].astype(jnp.float32),

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pltpu_compat import CompilerParams
+
 DEFAULT_BLOCK_T = 256
 DEFAULT_BLOCK_R = 512
 
@@ -65,7 +67,7 @@ def lru_scan(a: jax.Array, b: jax.Array, h0: jax.Array = None, *,
         out_specs=pl.BlockSpec((1, bt, br), lambda bi, ri, ti: (bi, ti, ri)),
         out_shape=jax.ShapeDtypeStruct((B, L, R), a.dtype),
         scratch_shapes=[pltpu.VMEM((1, br), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, h0)

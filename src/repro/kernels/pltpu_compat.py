@@ -1,0 +1,17 @@
+"""Pallas-TPU API compatibility shims.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in
+newer jax releases; kernels import :data:`CompilerParams` from here so
+they run on both (the pinned CI toolchain still ships the old name).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams",
+                         getattr(_pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:                      # pragma: no cover
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is unsupported by the "
+        "repro kernels")

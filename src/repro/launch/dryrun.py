@@ -119,6 +119,8 @@ def lower_one(arch: str, shape_name: str, mesh, *, compile_: bool = True):
                     - ma.alias_size_in_bytes + ma.temp_size_in_bytes) / 1e9,
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # older jax: one dict per device
+        ca = ca[0] if ca else {}
     result["cost_analysis"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

@@ -1,0 +1,178 @@
+"""Engine-refactor contracts: (1) event-driven time advancement is
+bit-exact with tick stepping for every policy; (2) the simulator and
+the controller really share one state machine — a minimal
+controller-style driver over ``SchedulerCore`` reproduces the
+simulator's results exactly."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
+from repro.core import metrics, simulator, workload
+from repro.core import policies as pol
+from repro.core.engine import ClusterState, CoreHooks, FIT_EPS, SchedulerCore
+from repro.core.types import JobSet
+from repro.core.workload import sparse_long_horizon
+
+POLICIES = ["fifo", "lrtp", "rand", "fitgpp"]
+
+
+def sparse_jobset(n=96, seed=0, gap=60.0):
+    """Long-horizon trickle workload: most ticks are no-ops, so event
+    mode actually exercises the fast-forward path (same generator the
+    engine benchmark measures)."""
+    return sparse_long_horizon(n, seed=seed, gap_mean=gap)
+
+
+class TestEventTickParity:
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_generated_workload(self, policy):
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=4), policy=policy,
+                        workload=WorkloadSpec(n_jobs=192), seed=11)
+        js = workload.generate(cfg)
+        metrics.assert_result_parity(
+            simulator.simulate(cfg, js, mode="tick"),
+            simulator.simulate(cfg, js, mode="event"))
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_sparse_long_horizon(self, policy):
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=4), policy=policy)
+        js = sparse_jobset(seed=3)
+        metrics.assert_result_parity(
+            simulator.simulate(cfg, js, mode="tick"),
+            simulator.simulate(cfg, js, mode="event"))
+
+    def test_gang_workload(self):
+        cfg = SimConfig(
+            cluster=ClusterSpec(n_nodes=6), policy="fitgpp", seed=2,
+            workload=WorkloadSpec(n_jobs=160, multi_node_frac=0.25))
+        js = workload.generate(cfg)
+        metrics.assert_result_parity(
+            simulator.simulate(cfg, js, mode="tick"),
+            simulator.simulate(cfg, js, mode="event"))
+
+    def test_backfill_workload(self):
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=4), policy="fitgpp",
+                        workload=WorkloadSpec(n_jobs=160), seed=9,
+                        backfill=True)
+        js = workload.generate(cfg)
+        metrics.assert_result_parity(
+            simulator.simulate(cfg, js, mode="tick"),
+            simulator.simulate(cfg, js, mode="event"))
+
+    def test_closed_loop_admission(self):
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=4), policy="fifo",
+                        workload=WorkloadSpec(n_jobs=160), seed=4)
+        js = workload.generate(cfg)
+        runs = []
+        for mode in ("tick", "event"):
+            sim = simulator.Simulator(cfg, js, admission_target=2.0)
+            runs.append((sim.run(mode=mode), sim.admit_time.copy()))
+        metrics.assert_result_parity(runs[0][0], runs[1][0])
+        np.testing.assert_array_equal(runs[0][1], runs[1][1])
+
+    def test_event_mode_is_default(self):
+        """simulate() defaults to event mode and stays tick-exact."""
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=2), policy="fitgpp",
+                        workload=WorkloadSpec(n_jobs=96), seed=6)
+        js = workload.generate(cfg)
+        metrics.assert_result_parity(
+            simulator.simulate(cfg, js),
+            simulator.simulate(cfg, js, mode="tick"))
+
+
+class MinimalDriver:
+    """Controller-shaped driver over the shared core: arrivals by
+    submit tick, 'work' is decrementing a per-job step budget — no
+    training, no checkpoints. If this reproduces the simulator
+    bit-for-bit, the scheduling semantics live in the core, not in
+    either driver."""
+
+    def __init__(self, cfg: SimConfig, js: JobSet):
+        self.js = js
+        self.remaining = js.exec_total.astype(np.int64).copy()
+        self.finish = np.full(js.n, -1, np.int64)
+        policy = pol.make_policy(cfg.policy, cfg.s)
+        self.core = SchedulerCore(
+            cluster=ClusterState(cfg.cluster.n_nodes,
+                                 cfg.cluster.node.as_tuple()),
+            policy=policy, max_preemptions=cfg.max_preemptions,
+            rng=np.random.default_rng(cfg.seed + 104729),
+            gp_of=lambda ids: js.gp[ids],
+            remaining_of=lambda ids: self.remaining[ids],
+            hooks=CoreHooks(on_finish=self._on_finish))
+        for j in range(js.n):
+            self.core.add_job(js.demand[j], bool(js.is_te[j]),
+                              int(js.n_nodes[j]))
+
+    def _on_finish(self, j, t):
+        self.finish[j] = t
+
+    def run(self, max_ticks=100_000):
+        core, js = self.core, self.js
+        arrived = 0
+        order = np.argsort(js.submit, kind="stable")
+        t = 0
+        while core.n_done < js.n:
+            while arrived < js.n and js.submit[order[arrived]] <= t:
+                core.enqueue(int(order[arrived]))
+                arrived += 1
+            core.expire_grace(t)
+            core.schedule(t)
+            for j in sorted(core.running):
+                self.remaining[j] -= 1
+                if self.remaining[j] <= 0:
+                    core.finish(j, t + 1)
+            core.tick_clocks()
+            t += 1
+            assert t < max_ticks, "driver did not converge"
+        return self.finish
+
+
+class TestSharedCoreSemantics:
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_minimal_driver_matches_simulator(self, policy):
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=3), policy=policy,
+                        seed=13)
+        js = sparse_jobset(n=64, seed=21, gap=8.0)
+        ref = simulator.simulate(cfg, js, mode="tick")
+        drv = MinimalDriver(cfg, js)
+        finish = drv.run()
+        np.testing.assert_array_equal(finish, ref.finish)
+        np.testing.assert_array_equal(drv.core.preempt_count,
+                                      ref.preempt_count)
+
+    def test_controller_uses_shared_core(self):
+        """The live-training controller must not duplicate the queue /
+        preemption machinery — its scheduling state IS a SchedulerCore."""
+        controller = pytest.importorskip("repro.core.controller")
+        src_attrs = dir(controller.Controller)
+        for dup in ("_first_fit", "_try_preempt", "_queued", "_signal",
+                    "_vacate", "_start"):
+            assert dup not in src_attrs, \
+                f"controller re-implements {dup}; use the engine core"
+        import inspect
+        src = inspect.getsource(controller)
+        assert "SchedulerCore" in src
+
+
+class TestFitEps:
+    def test_single_epsilon_everywhere(self):
+        from repro.core import sim_jax
+        from repro.core.engine import placement
+        assert sim_jax._EPS == FIT_EPS == placement.FIT_EPS
+
+    def test_exact_fit_eligible(self):
+        """Eq. 2 and _preempt_until_fits agree on exact fits (no more
+        tolerance drift between the fit paths)."""
+        te = np.array([8.0, 32.0, 4.0])
+        elig = pol.eligible_eq2(te, np.array([[8.0, 32.0, 4.0]]),
+                                np.zeros((1, 3)))
+        assert elig.tolist() == [True]
+        victims = pol._preempt_until_fits(
+            order=np.array([0]), te_demand=te,
+            cand_ids=np.array([0]), cand_demand=np.array([[8., 32., 4.]]),
+            cand_node=np.array([0]), under_cap=np.array([True]),
+            free_by_node=np.zeros((1, 3)), rng=np.random.default_rng(0))
+        assert victims == [0]

@@ -3,6 +3,11 @@ import dataclasses
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt)")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
