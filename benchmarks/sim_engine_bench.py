@@ -5,15 +5,18 @@ mesh distribution relies on.
 ``python -m benchmarks.sim_engine_bench --json`` additionally emits
 ``BENCH_sim_engine.json`` — tick vs event-driven throughput (jobs
 simulated per second) on a sparse long-horizon workload, with the
-bit-exactness of the two modes re-verified in-run (DESIGN.md §4).
+bit-exactness of the two modes re-verified in-run (DESIGN.md §4) —
+plus per-scenario event-engine timings over the full registered
+scenario suite (``repro.scenarios``, DESIGN.md §5).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
-from typing import List
+from typing import Dict, List
 
+from repro import scenarios
 from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
 from repro.core import metrics, sim_jax, simulator, sweep, workload
 from repro.core.workload import sparse_long_horizon
@@ -47,8 +50,28 @@ def bench_tick_vs_event(n_jobs: int = 512, policy: str = "fitgpp",
     }
 
 
+def bench_scenario_suite(n_jobs: int = 256, n_nodes: int = 8,
+                         policy: str = "fitgpp", seed: int = 0) -> Dict:
+    """Event-engine timing for every registered scenario + trace adapter
+    (trace fixtures keep their native job counts)."""
+    cfg = SimConfig(cluster=ClusterSpec(n_nodes=n_nodes),
+                    workload=WorkloadSpec(n_jobs=n_jobs),
+                    policy=policy, seed=seed)
+    out = {}
+    for name in scenarios.scenario_names():
+        js = scenarios.build(name, cfg)
+        t0 = time.perf_counter()
+        res = simulator.simulate(cfg, js, mode="event")
+        s = time.perf_counter() - t0
+        out[name] = {"n_jobs": js.n, "seconds": s,
+                     "jobs_per_sec": metrics.sim_throughput(res, s),
+                     "makespan_ticks": int(res.makespan)}
+    return out
+
+
 def emit_json(path: str = "BENCH_sim_engine.json") -> dict:
     out = bench_tick_vs_event()
+    out["scenario_suite"] = bench_scenario_suite()
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     return out
@@ -91,6 +114,19 @@ def run_all() -> List[tuple]:
                                  seeds=[0, 1])
     rows.append(("sim_sweep_8trials", (time.perf_counter() - t0) * 1e6,
                  "vmap(8 sims)"))
+
+    for name, r in bench_scenario_suite().items():
+        rows.append((f"scenario_{name}", r["seconds"] * 1e6,
+                     f"{r['n_jobs']} jobs, {r['makespan_ticks']} ticks, "
+                     f"{r['jobs_per_sec']:.0f} jobs/s"))
+
+    t0 = time.perf_counter()
+    sweep.scenario_sweep(
+        SimConfig(cluster=ClusterSpec(n_nodes=8),
+                  workload=WorkloadSpec(n_jobs=256), policy="fitgpp"),
+        ["te-flood", "long-tail-be", "burst-storm"], seeds=[0, 1])
+    rows.append(("scenario_sweep_ragged_6", (time.perf_counter() - t0) * 1e6,
+                 "vmap(3 scenarios x 2 seeds, sentinel-padded)"))
     return rows
 
 

@@ -36,12 +36,21 @@ _EPS = FIT_EPS    # one epsilon for every fit check, engine-wide
 
 
 class Jobs(NamedTuple):
-    """Static workload arrays (device-resident)."""
+    """Static workload arrays (device-resident).
+
+    ``valid`` marks real jobs; False rows are sentinel padding added by
+    ``sweep.stack_jobsets`` so jobsets of unequal ``n`` can share one
+    vmapped batch. Sentinels are born DONE (``init_state``) — they never
+    arrive, queue, run or get preempted — and are masked out of every
+    percentile/mean in ``sweep`` and ``result_summary``, so a padded
+    trial is bit-identical to its unpadded run (DESIGN.md §5).
+    """
     submit: jax.Array        # (N,) i32
     exec_total: jax.Array    # (N,) i32
     demand: jax.Array        # (N, 3) f32
     is_te: jax.Array         # (N,) bool
     gp: jax.Array            # (N,) i32
+    valid: jax.Array         # (N,) bool
 
 
 class State(NamedTuple):
@@ -77,6 +86,7 @@ def jobs_from_jobset(js: JobSet) -> Jobs:
         demand=jnp.asarray(js.demand, jnp.float32),
         is_te=jnp.asarray(js.is_te, bool),
         gp=jnp.asarray(js.gp, jnp.int32),
+        valid=jnp.ones(len(js.submit), bool),
     )
 
 
@@ -85,7 +95,8 @@ def init_state(jobs: Jobs, n_nodes: int, node_cap, seed) -> State:
     cap = jnp.asarray(node_cap, jnp.float32)
     return State(
         t=jnp.zeros((), jnp.int32),
-        state=jnp.zeros((N,), jnp.int32),
+        # sentinel (padding) jobs are born DONE: never arrive, never run
+        state=jnp.where(jobs.valid, NOT_ARRIVED, DONE).astype(jnp.int32),
         remaining=jobs.exec_total.astype(jnp.int32),
         node=jnp.full((N,), -1, jnp.int32),
         preempt_count=jnp.zeros((N,), jnp.int32),
@@ -101,7 +112,7 @@ def init_state(jobs: Jobs, n_nodes: int, node_cap, seed) -> State:
         last_vacate=jnp.full((N,), -1, jnp.int32),
         last_resume=jnp.full((N,), -1, jnp.int32),
         awaiting_resume=jnp.zeros((N,), bool),
-        n_done=jnp.zeros((), jnp.int32),
+        n_done=jnp.sum(~jobs.valid).astype(jnp.int32),
         rng=seed if (isinstance(seed, jax.Array)
                      and jnp.issubdtype(seed.dtype, jax.dtypes.prng_key))
         else jax.random.key(seed),
@@ -440,15 +451,18 @@ def slowdown(jobs: Jobs, st: State) -> jax.Array:
 
 
 def result_summary(jobs: Jobs, st: State) -> dict:
-    """Percentile summary mirroring metrics.pooled_tables (jnp)."""
+    """Percentile summary mirroring metrics.pooled_tables (jnp).
+
+    Sentinel (padding) rows are masked out of every statistic."""
     sd = slowdown(jobs, st)
-    te = jobs.is_te
+    te = jobs.is_te & jobs.valid
+    be = ~jobs.is_te & jobs.valid
     out = {}
-    for name, m in (("TE", te), ("BE", ~te)):
+    for name, m in (("TE", te), ("BE", be)):
         vals = jnp.where(m, sd, jnp.nan)
         out[name] = {f"p{p}": jnp.nanpercentile(vals, p)
                      for p in (50, 95, 99)}
-    pre = jnp.where(~te, (st.preempt_count > 0).astype(jnp.float32), jnp.nan)
+    pre = jnp.where(be, (st.preempt_count > 0).astype(jnp.float32), jnp.nan)
     out["preempted_frac"] = jnp.nanmean(pre)
     iv = jnp.where(st.last_resume >= 0,
                    (st.last_resume - st.last_signal).astype(jnp.float32),

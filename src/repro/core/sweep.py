@@ -21,25 +21,58 @@ from repro.core import sim_jax, workload
 from repro.core.types import JobSet
 
 
+def pad_jobs(jobs: sim_jax.Jobs, n_max: int) -> sim_jax.Jobs:
+    """Pad a Jobs struct to ``n_max`` rows with sentinel jobs.
+
+    Sentinels carry zero demand, unit execution and ``valid=False``;
+    ``sim_jax.init_state`` births them DONE so they never arrive, queue,
+    run or appear as preemption candidates, and every percentile in
+    ``_trial_result`` masks them out (the sentinel-padding contract,
+    DESIGN.md §5)."""
+    pad = n_max - jobs.submit.shape[0]
+    if pad < 0:
+        raise ValueError(f"cannot pad {jobs.submit.shape[0]} jobs "
+                         f"down to {n_max}")
+    if pad == 0:
+        return jobs
+
+    def ext(x, fill):
+        tail = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
+        return jnp.concatenate([x, tail])
+
+    return sim_jax.Jobs(
+        submit=ext(jobs.submit, 0), exec_total=ext(jobs.exec_total, 1),
+        demand=ext(jobs.demand, 0.0), is_te=ext(jobs.is_te, False),
+        gp=ext(jobs.gp, 0), valid=ext(jobs.valid, False))
+
+
 def stack_jobsets(jobsets: Sequence[JobSet]) -> sim_jax.Jobs:
-    """Stack workloads over a leading trial axis (equal n required)."""
+    """Stack workloads over a leading trial axis.
+
+    Equal-``n`` jobsets stack directly (the original fast path). Ragged
+    collections — heterogeneous scenarios, trace replays — are padded to
+    the max ``n`` with masked sentinel jobs (``pad_jobs``), so one
+    vmapped/shard_mapped sweep can span them all."""
     js = [sim_jax.jobs_from_jobset(j) for j in jobsets]
+    n_max = max(j.submit.shape[0] for j in js)
+    if any(j.submit.shape[0] != n_max for j in js):
+        js = [pad_jobs(j, n_max) for j in js]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *js)
 
 
 def _trial_result(cfg: SimConfig, jobs: sim_jax.Jobs, s, P_, seed):
     st = sim_jax.run(cfg, jobs, seed=seed, s=s, P=P_)
     sd = sim_jax.slowdown(jobs, st)
-    te = jobs.is_te
+    te = jobs.is_te & jobs.valid
 
     def pct(vals, mask, ps):
         v = jnp.where(mask, vals, jnp.nan)
         return jnp.stack([jnp.nanpercentile(v, p) for p in ps])
 
     iv = (st.last_resume - st.last_signal).astype(jnp.float32)
-    iv_mask = st.last_resume >= 0
+    iv_mask = (st.last_resume >= 0) & jobs.valid
     pc = st.preempt_count
-    be = ~te
+    be = ~jobs.is_te & jobs.valid
     return {
         "te_slowdown": pct(sd, te, (50, 95, 99)),
         "be_slowdown": pct(sd, be, (50, 95, 99)),
@@ -109,3 +142,38 @@ def sensitivity_grid(cfg: SimConfig, n_jobs: int, s_vals: Sequence[float],
     seed_flat = np.tile(np.asarray(seeds, np.uint32), ns)
     out = run_sweep(base, rep, s_flat, P_flat, seed_flat, mesh=mesh)
     return jax.tree.map(lambda x: x.reshape((ns, nt) + x.shape[1:]), out)
+
+
+def scenario_sweep(cfg: SimConfig, names: Sequence[str],
+                   seeds: Sequence[int],
+                   mesh: Optional[Mesh] = None) -> Dict[str, np.ndarray]:
+    """Ragged multi-scenario grid: all (scenario, seed) trials in ONE
+    vmapped batch, even when the scenarios produce different job counts
+    (sentinel padding, ``stack_jobsets``). Gang scenarios are rejected —
+    the JAX engine models single-node jobs (DESIGN.md §6).
+
+    Returns arrays of shape (len(names), len(seeds), ...).
+    """
+    from repro import scenarios
+
+    jobsets = []
+    for name in names:
+        for sd in seeds:
+            js = scenarios.build(name, dataclasses.replace(cfg, seed=sd))
+            if (np.asarray(js.n_nodes) != 1).any():
+                raise NotImplementedError(
+                    f"scenario {name!r} produces gang (multi-node) jobs; "
+                    "sweep it through the reference engine instead")
+            jobsets.append(js)
+    stacked = stack_jobsets(jobsets)
+
+    nn, nt = len(names), len(seeds)
+    s_flat = np.full(nn * nt, cfg.s, np.float32)
+    P_flat = np.full(nn * nt, cfg.max_preemptions, np.int32)
+    seed_flat = np.tile(np.asarray(seeds, np.uint32), nn)
+    out = run_sweep(cfg, stacked, s_flat, P_flat, seed_flat, mesh=mesh)
+    return jax.tree.map(lambda x: x.reshape((nn, nt) + x.shape[1:]), out)
+
+
+# ``sweep.run`` — the one entry point callers batch everything through.
+run = run_sweep

@@ -29,18 +29,30 @@ def sample_trunc_normal(rng: np.random.Generator, d: TruncNormal,
     return np.clip(out, d.lo, d.hi)
 
 
-def _snap(x: np.ndarray, quanta) -> np.ndarray:
+def snap(x: np.ndarray, quanta) -> np.ndarray:
+    """Snap each value to the nearest allocation quantum."""
     q = np.asarray(quanta)
     return q[np.argmin(np.abs(x[:, None] - q[None, :]), axis=1)]
 
 
-def _sample_class(rng: np.random.Generator, dists: ClassDists, n: int,
-                  gpu_quanta=(0.0, 1.0, 2.0, 4.0, 8.0)):
+def sample_gang_widths(rng: np.random.Generator, wl: WorkloadSpec,
+                       n: int) -> np.ndarray:
+    """Gang widths for ``n`` jobs; the one sampler every generator uses
+    (rng stream untouched when ``multi_node_frac == 0``)."""
+    n_nodes = np.ones(n, np.int64)
+    if wl.multi_node_frac > 0:
+        gang = rng.random(n) < wl.multi_node_frac
+        n_nodes[gang] = rng.choice(wl.multi_node_widths, int(gang.sum()))
+    return n_nodes
+
+
+def sample_class(rng: np.random.Generator, dists: ClassDists, n: int,
+                 gpu_quanta=(0.0, 1.0, 2.0, 4.0, 8.0)):
     exec_min = np.maximum(sample_trunc_normal(rng, dists.exec_min, n), 1.0)
     cpu = np.round(sample_trunc_normal(rng, dists.cpu, n))
     # whole GBs: keeps resource arithmetic exact in f32 (JAX engine parity)
     ram = np.round(sample_trunc_normal(rng, dists.ram, n))
-    gpu = _snap(sample_trunc_normal(rng, dists.gpu, n), gpu_quanta)
+    gpu = snap(sample_trunc_normal(rng, dists.gpu, n), gpu_quanta)
     demand = np.stack([np.maximum(cpu, 1.0), np.maximum(ram, 1.0),
                        np.maximum(gpu, 0.0)], axis=1)
     return np.round(exec_min).astype(np.int64), demand
@@ -61,17 +73,14 @@ def generate(cfg: SimConfig, seed: int = None) -> JobSet:
     exec_total = np.zeros(n, np.int64)
     demand = np.zeros((n, 3))
     n_te = int(is_te.sum())
-    exec_total[is_te], demand[is_te] = _sample_class(
+    exec_total[is_te], demand[is_te] = sample_class(
         rng, wl.te, n_te, wl.gpu_quanta)
-    exec_total[~is_te], demand[~is_te] = _sample_class(
+    exec_total[~is_te], demand[~is_te] = sample_class(
         rng, wl.be, n - n_te, wl.gpu_quanta)
 
     gp = np.round(sample_trunc_normal(rng, wl.scaled_gp(), n)).astype(np.int64)
 
-    n_nodes = np.ones(n, np.int64)
-    if wl.multi_node_frac > 0:
-        gang = rng.random(n) < wl.multi_node_frac
-        n_nodes[gang] = rng.choice(wl.multi_node_widths, int(gang.sum()))
+    n_nodes = sample_gang_widths(rng, wl, n)
 
     node_cap = np.asarray(cfg.cluster.node.as_tuple())
     js = JobSet(submit=np.zeros(n, np.int64), exec_total=exec_total,
@@ -126,14 +135,19 @@ def generate_trace_proxy(cfg: SimConfig, seed: int = None) -> JobSet:
 
     demand = np.zeros((n, 3))
     n_te = int(is_te.sum())
-    _, demand[is_te] = _sample_class(rng, wl.te, n_te, wl.gpu_quanta)
-    _, demand[~is_te] = _sample_class(rng, wl.be, n - n_te, wl.gpu_quanta)
+    _, demand[is_te] = sample_class(rng, wl.te, n_te, wl.gpu_quanta)
+    _, demand[~is_te] = sample_class(rng, wl.be, n - n_te, wl.gpu_quanta)
 
     gp = np.round(sample_trunc_normal(rng, wl.scaled_gp(), n)).astype(np.int64)
 
+    # gang widths sampled exactly as ``generate`` does (shared sampler;
+    # its guard keeps the rng stream — and thus every existing
+    # single-node trace proxy — byte-identical when multi_node_frac == 0)
+    n_nodes = sample_gang_widths(rng, wl, n)
+
     node_cap = np.asarray(cfg.cluster.node.as_tuple())
     cluster_cap = node_cap * cfg.cluster.n_nodes
-    work = exec_total * cluster_fraction(demand, cluster_cap)
+    work = exec_total * cluster_fraction(demand, cluster_cap) * n_nodes
     lam = wl.load / work.mean()
     # bursty arrivals: rate doubles during "day", halves during "night"
     gaps = rng.exponential(1.0 / lam, n)
@@ -142,7 +156,7 @@ def generate_trace_proxy(cfg: SimConfig, seed: int = None) -> JobSet:
     submit = np.floor(np.cumsum(gaps)).astype(np.int64)
 
     js = JobSet(submit=submit, exec_total=exec_total, demand=demand,
-                is_te=is_te, gp=gp)
+                is_te=is_te, gp=gp, n_nodes=n_nodes)
     js.validate(node_cap)
     return js
 

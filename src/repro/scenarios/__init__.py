@@ -1,0 +1,28 @@
+"""Scenario & trace subsystem (DESIGN.md §5).
+
+One registry over every workload the repo can evaluate a policy on:
+the paper's own generators, a library of named synthetic stress
+scenarios, and adapters for public GPU-cluster trace formats
+(Philly-style / Alibaba-PAI-style CSV) with bundled sample fixtures.
+
+    from repro import scenarios
+    js = scenarios.build("burst-storm", cfg)     # SimConfig -> JobSet
+    scenarios.scenario_names()                   # all registered names
+
+CLI: ``PYTHONPATH=src python -m repro.scenarios list|describe|run|sweep``.
+"""
+from repro.scenarios.registry import (SYNTHETIC, TRACE, Scenario, build,
+                                      all_scenarios, get_scenario,
+                                      register_scenario, scenario_names)
+# importing these modules populates the registry
+from repro.scenarios import library as library          # noqa: F401
+from repro.scenarios import traces as traces            # noqa: F401
+from repro.scenarios.traces import (TraceStats, load_pai_csv,
+                                    load_philly_csv)
+
+__all__ = [
+    "SYNTHETIC", "TRACE", "Scenario", "TraceStats",
+    "all_scenarios", "build", "get_scenario", "library",
+    "load_pai_csv", "load_philly_csv", "register_scenario",
+    "scenario_names", "traces",
+]

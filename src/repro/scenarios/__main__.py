@@ -1,0 +1,128 @@
+"""Scenario runner CLI.
+
+    PYTHONPATH=src python -m repro.scenarios list [--kind synthetic|trace]
+    PYTHONPATH=src python -m repro.scenarios describe NAME
+    PYTHONPATH=src python -m repro.scenarios run NAME [--policy fitgpp]
+        [--n-jobs 512] [--nodes 16] [--seed 0] [--mode event|tick]
+    PYTHONPATH=src python -m repro.scenarios sweep NAME [NAME ...]
+        [--seeds 0,1] [--n-jobs 256] [--policy fitgpp]
+
+``run`` replays one scenario through the reference engine and prints
+the paper-style slowdown table; ``sweep`` batches every (scenario,
+seed) trial — ragged job counts included — into one vmapped JAX sweep.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
+from repro.core import metrics, simulator, sweep
+from repro import scenarios
+
+
+def _cfg(args, seed=None) -> SimConfig:
+    return SimConfig(
+        cluster=ClusterSpec(n_nodes=args.nodes),
+        workload=WorkloadSpec(n_jobs=args.n_jobs),
+        policy=args.policy,
+        seed=args.seed if seed is None else seed)
+
+
+def cmd_list(args) -> None:
+    rows = scenarios.all_scenarios(args.kind)
+    width = max(len(s.name) for s in rows)
+    for sc in rows:
+        print(f"{sc.name:{width}s}  [{sc.kind}]  {sc.description}")
+    n_syn = len(scenarios.scenario_names(scenarios.SYNTHETIC))
+    n_tr = len(scenarios.scenario_names(scenarios.TRACE))
+    print(f"\n{n_syn} synthetic scenarios, {n_tr} trace adapters")
+
+
+def cmd_describe(args) -> None:
+    sc = scenarios.get_scenario(args.name)
+    print(f"{sc.name} [{sc.kind}]\n  {sc.description}")
+    lines = (sc.fn.__doc__ or "").strip().splitlines()
+    if lines and lines[0].strip() == sc.description:
+        lines = lines[1:]                      # summary already printed
+    if any(ln.strip() for ln in lines):
+        print("\n" + "\n".join(f"  {ln.strip()}" for ln in lines))
+    if sc.knobs:
+        print("\n  knobs:")
+        for k, v in sc.knobs:
+            print(f"    {k:28s} {v}")
+
+
+def cmd_run(args) -> None:
+    cfg = _cfg(args)
+    js = scenarios.build(args.name, cfg)
+    gangs = int((np.asarray(js.n_nodes) > 1).sum())
+    print(f"{args.name}: {js.n} jobs ({int(js.is_te.sum())} TE, "
+          f"{gangs} gangs), horizon {int(js.submit.max())} min, "
+          f"policy={cfg.policy}, nodes={cfg.cluster.n_nodes}")
+    res = simulator.Simulator(cfg, js).run(mode=args.mode)
+    print(metrics.format_table(
+        {cfg.policy: metrics.slowdown_table(res)},
+        f"slowdown percentiles (makespan {res.makespan} min)"))
+    iv = metrics.resched_table(res)
+    print(f"resched intervals [min]: p50={iv['p50']:.1f} "
+          f"p95={iv['p95']:.1f}   preempted "
+          f"{res.preempted_fraction() * 100:.1f}% of BE jobs")
+
+
+def cmd_sweep(args) -> None:
+    seeds = [int(s) for s in args.seeds.split(",")]
+    out = sweep.scenario_sweep(_cfg(args), args.names, seeds)
+    print(f"ragged sweep: {len(args.names)} scenarios x {len(seeds)} "
+          f"seeds, policy={args.policy} (seed-averaged)")
+    hdr = f"{'scenario':22s} | {'TE p50':>8s} {'TE p95':>8s} " \
+          f"| {'BE p50':>8s} {'BE p95':>8s} | {'preempted':>9s}"
+    print(hdr + "\n" + "-" * len(hdr))
+    for i, name in enumerate(args.names):
+        te = np.nanmean(out["te_slowdown"][i], axis=0)
+        be = np.nanmean(out["be_slowdown"][i], axis=0)
+        pf = np.nanmean(out["preempted_frac"][i])
+        print(f"{name:22s} | {te[0]:8.2f} {te[1]:8.2f} "
+              f"| {be[0]:8.2f} {be[1]:8.2f} | {pf * 100:8.1f}%")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="python -m repro.scenarios",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("list", help="list registered scenarios")
+    p.add_argument("--kind", choices=(scenarios.SYNTHETIC, scenarios.TRACE),
+                   default=None)
+    p.set_defaults(fn=cmd_list)
+
+    p = sub.add_parser("describe", help="knobs + doc for one scenario")
+    p.add_argument("name")
+    p.set_defaults(fn=cmd_describe)
+
+    def sim_args(p):
+        p.add_argument("--policy", default="fitgpp",
+                       choices=("fifo", "lrtp", "rand", "fitgpp"))
+        p.add_argument("--n-jobs", type=int, default=512)
+        p.add_argument("--nodes", type=int, default=16)
+        p.add_argument("--seed", type=int, default=0)
+
+    p = sub.add_parser("run", help="replay through the reference engine")
+    p.add_argument("name")
+    sim_args(p)
+    p.add_argument("--mode", default="event", choices=("event", "tick"))
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("sweep", help="ragged multi-scenario JAX sweep")
+    p.add_argument("names", nargs="+")
+    sim_args(p)
+    p.add_argument("--seeds", default="0,1")
+    p.set_defaults(fn=cmd_sweep)
+
+    args = ap.parse_args(argv)
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

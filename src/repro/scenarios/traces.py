@@ -1,0 +1,227 @@
+"""Public GPU-cluster trace adapters -> validated :class:`JobSet`.
+
+Two CSV dialects are supported, modelled on the public traces the
+related schedulers evaluate on (DL2, arXiv:1909.06040; prediction-
+assisted scheduling, arXiv:2501.05563):
+
+* **Philly-style** (Microsoft Philly job log flattened to CSV):
+  ``jobid,vc,submit_time,start_time,end_time,gpus,status`` with
+  ISO-8601 or epoch-second timestamps and a whole-job GPU count.
+  Philly publishes no CPU/RAM requests, so those are estimated
+  pro-rata to the job's GPU share of a node (half-GPU floor).
+* **Alibaba-PAI-style** (pai_task_table):
+  ``job_name,task_name,inst_num,status,start_time,end_time,
+  plan_cpu,plan_mem,plan_gpu`` with epoch-second timestamps,
+  ``plan_cpu``/``plan_gpu`` in percent (100 = 1 core / 1 GPU),
+  ``plan_mem`` in GB and ``inst_num`` gang instances. The task table
+  records no queueing, so ``start_time`` doubles as the submit time.
+
+Shared normalization (the adapter contract, DESIGN.md §5):
+
+* rows with unparseable fields, a missing/negative runtime, or a gang
+  wider than the cluster are dropped (counted in ``TraceStats``);
+* times rebase to minute 0 at the earliest submit; ``time_scale``
+  compresses gaps (a months-long trace replays in a tractable horizon);
+* demand snaps to node quanta: GPUs to ``cfg.workload.gpu_quanta``,
+  CPU/RAM to whole units, everything clipped to the node capacity;
+* gang width: Philly jobs wider than one node split into
+  ``ceil(gpus / node.gpu)`` equal instances; PAI uses ``inst_num``;
+* TE/BE: runtime <= ``te_runtime_min`` is TE (the paper's TE class is
+  short trial runs; its §4.2 truncation, 30 min, is the default);
+* grace periods are not recorded in public traces — they are sampled
+  from ``cfg.workload.scaled_gp()`` under ``cfg.seed`` (deterministic).
+"""
+from __future__ import annotations
+
+import csv
+import math
+import os
+from dataclasses import dataclass
+from datetime import datetime, timezone
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.configs.cluster import SimConfig
+from repro.core import workload
+from repro.core.types import JobSet
+from repro.scenarios.registry import TRACE, register_scenario
+
+FIXTURE_DIR = os.path.join(os.path.dirname(__file__), "fixtures")
+PHILLY_SAMPLE = os.path.join(FIXTURE_DIR, "philly_sample.csv")
+PAI_SAMPLE = os.path.join(FIXTURE_DIR, "pai_sample.csv")
+
+
+@dataclass
+class TraceStats:
+    """What the adapter kept and why it dropped the rest."""
+    n_rows: int = 0
+    n_jobs: int = 0
+    n_malformed: int = 0
+    n_zero_runtime: int = 0
+    n_too_wide: int = 0
+    n_filtered_status: int = 0
+
+
+def _parse_ts(raw: str) -> float:
+    """Epoch seconds from an ISO-8601 or numeric timestamp."""
+    raw = raw.strip()
+    if not raw:
+        raise ValueError("empty timestamp")
+    try:
+        return float(raw)
+    except ValueError:
+        dt = datetime.fromisoformat(raw)
+        if dt.tzinfo is None:              # naive stamps read as UTC
+            dt = dt.replace(tzinfo=timezone.utc)
+        return dt.timestamp()
+
+
+def _finalize(cfg: SimConfig, submit_min, exec_min, demand, n_nodes,
+              te_runtime_min: float) -> JobSet:
+    """Shared tail: snap/clip demand, classify, sample GPs, sort."""
+    wl = cfg.workload
+    node_cap = np.asarray(cfg.cluster.node.as_tuple())
+    submit = np.asarray(submit_min, np.int64)
+    exec_total = np.maximum(np.asarray(exec_min, np.int64), 1)
+    demand = np.asarray(demand, np.float64).reshape(-1, 3)
+    n_nodes = np.asarray(n_nodes, np.int64)
+    n = len(submit)
+
+    # demand snapping: GPUs to the allocation quanta, CPU/RAM to whole
+    # units; everything clipped to a node
+    demand[:, 0] = np.clip(np.round(demand[:, 0]), 1.0, node_cap[0])
+    demand[:, 1] = np.clip(np.round(demand[:, 1]), 1.0, node_cap[1])
+    demand[:, 2] = np.clip(
+        workload.snap(demand[:, 2], wl.gpu_quanta), 0.0, node_cap[2])
+
+    is_te = exec_total <= te_runtime_min
+    rng = np.random.default_rng((cfg.seed, 0xB07))
+    gp = np.round(workload.sample_trunc_normal(
+        rng, wl.scaled_gp(), n)).astype(np.int64)
+
+    if n == 0:
+        raise ValueError(
+            "trace produced no usable jobs (every row malformed, "
+            "zero-runtime, status-filtered or wider than the cluster)")
+    order = np.argsort(submit, kind="stable")
+    submit = submit[order] - submit.min()
+    js = JobSet(submit=submit, exec_total=exec_total[order],
+                demand=demand[order], is_te=is_te[order], gp=gp[order],
+                n_nodes=n_nodes[order])
+    js.validate(node_cap)
+    return js
+
+
+def load_philly_csv(path: str, cfg: SimConfig, *,
+                    te_runtime_min: float = 30.0, time_scale: float = 1.0,
+                    statuses: Optional[Sequence[str]] = None,
+                    return_stats: bool = False):
+    """Philly-style CSV -> JobSet (see module docstring for the dialect).
+
+    ``statuses`` restricts to the given job outcomes (default: keep all
+    — Killed/Failed jobs consumed resources too). ``return_stats`` also
+    returns the :class:`TraceStats` drop accounting.
+    """
+    node = cfg.cluster.node
+    stats = TraceStats()
+    submit_min, exec_min, demand, n_nodes = [], [], [], []
+    with open(path, newline="") as f:
+        for row in csv.DictReader(f):
+            stats.n_rows += 1
+            if statuses is not None and row.get("status") not in statuses:
+                stats.n_filtered_status += 1
+                continue
+            try:
+                sub = _parse_ts(row["submit_time"])
+                start = _parse_ts(row["start_time"])
+                end = _parse_ts(row["end_time"])
+                gpus = float(row["gpus"])
+            except (KeyError, ValueError, TypeError):
+                stats.n_malformed += 1
+                continue
+            runtime_min = math.ceil((end - start) / 60.0)
+            if runtime_min <= 0 or start < sub or gpus < 0:
+                stats.n_zero_runtime += 1
+                continue
+            width = max(1, math.ceil(gpus / node.gpu))
+            if width > cfg.cluster.n_nodes:
+                stats.n_too_wide += 1
+                continue
+            gpu_pn = gpus / width
+            # Philly has no CPU/RAM requests: estimate pro-rata to the
+            # GPU share of a node, with a half-GPU floor for CPU-only
+            share = max(gpu_pn, 0.5) / node.gpu
+            submit_min.append(sub / 60.0 / time_scale)
+            exec_min.append(runtime_min)
+            demand.append((node.cpu * share, node.ram * share, gpu_pn))
+            n_nodes.append(width)
+    stats.n_jobs = len(submit_min)
+    js = _finalize(cfg, np.floor(submit_min), exec_min, demand, n_nodes,
+                   te_runtime_min)
+    return (js, stats) if return_stats else js
+
+
+def load_pai_csv(path: str, cfg: SimConfig, *,
+                 te_runtime_min: float = 30.0, time_scale: float = 1.0,
+                 statuses: Optional[Sequence[str]] = None,
+                 return_stats: bool = False):
+    """Alibaba-PAI-style CSV -> JobSet (dialect in the module docstring).
+
+    ``plan_cpu`` / ``plan_gpu`` are percentages (100 = 1 core / 1 GPU),
+    ``plan_mem`` is GB, ``inst_num`` is the gang width.
+    """
+    stats = TraceStats()
+    submit_min, exec_min, demand, n_nodes = [], [], [], []
+    with open(path, newline="") as f:
+        for row in csv.DictReader(f):
+            stats.n_rows += 1
+            if statuses is not None and row.get("status") not in statuses:
+                stats.n_filtered_status += 1
+                continue
+            try:
+                start = _parse_ts(row["start_time"])
+                end = _parse_ts(row["end_time"])
+                inst = int(float(row["inst_num"]))
+                cpu = float(row["plan_cpu"]) / 100.0
+                ram = float(row["plan_mem"])
+                gpu = float(row["plan_gpu"]) / 100.0
+            except (KeyError, ValueError, TypeError):
+                stats.n_malformed += 1
+                continue
+            runtime_min = math.ceil((end - start) / 60.0)
+            if runtime_min <= 0 or inst < 1 or min(cpu, ram, gpu) < 0:
+                stats.n_zero_runtime += 1
+                continue
+            if inst > cfg.cluster.n_nodes:
+                stats.n_too_wide += 1
+                continue
+            # the task table records no queueing: start doubles as submit
+            submit_min.append(start / 60.0 / time_scale)
+            exec_min.append(runtime_min)
+            demand.append((cpu, ram, gpu))
+            n_nodes.append(inst)
+    stats.n_jobs = len(submit_min)
+    js = _finalize(cfg, np.floor(submit_min), exec_min, demand, n_nodes,
+                   te_runtime_min)
+    return (js, stats) if return_stats else js
+
+
+@register_scenario(
+    "philly-sample", kind=TRACE,
+    knobs={"te_runtime_min": "TE/BE runtime threshold, minutes (30)",
+           "time_scale": "arrival-gap compression factor (1.0)",
+           "statuses": "job outcomes to keep (all)"})
+def philly_sample(cfg: SimConfig) -> JobSet:
+    """Bundled Microsoft-Philly-style sample trace (fixtures/, no network)."""
+    return load_philly_csv(PHILLY_SAMPLE, cfg)
+
+
+@register_scenario(
+    "pai-sample", kind=TRACE,
+    knobs={"te_runtime_min": "TE/BE runtime threshold, minutes (30)",
+           "time_scale": "arrival-gap compression factor (1.0)",
+           "statuses": "task outcomes to keep (all)"})
+def pai_sample(cfg: SimConfig) -> JobSet:
+    """Bundled Alibaba-PAI-style sample trace (fixtures/, no network)."""
+    return load_pai_csv(PAI_SAMPLE, cfg)

@@ -1,0 +1,223 @@
+"""Scenario & trace subsystem: registry, adapters, parity, ragged sweeps."""
+import dataclasses
+import io
+from contextlib import redirect_stdout
+
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
+from repro.core import metrics, sim_jax, simulator, sweep
+from repro.core.types import JobSet
+from repro.scenarios.traces import (PAI_SAMPLE, PHILLY_SAMPLE, load_pai_csv,
+                                    load_philly_csv)
+
+
+def small_cfg(n_jobs=96, n_nodes=8, policy="fitgpp", seed=0, **kw):
+    return SimConfig(cluster=ClusterSpec(n_nodes=n_nodes),
+                     workload=WorkloadSpec(n_jobs=n_jobs, **kw),
+                     policy=policy, seed=seed)
+
+
+NEW_SCENARIOS = ("diurnal", "burst-storm", "gang-heavy", "load-ramp",
+                 "te-flood", "long-tail-be", "maintenance-drain",
+                 "heterogeneous-gp")
+PAPER_SCENARIOS = ("paper-synthetic", "trace-proxy", "sparse-long-horizon")
+TRACE_SCENARIOS = ("philly-sample", "pai-sample")
+
+
+class TestRegistry:
+    def test_catalog(self):
+        """Acceptance: >= 8 scenarios beyond the paper's, the paper's
+        three generators re-registered, and two trace adapters."""
+        syn = scenarios.scenario_names(scenarios.SYNTHETIC)
+        tr = scenarios.scenario_names(scenarios.TRACE)
+        for name in NEW_SCENARIOS + PAPER_SCENARIOS:
+            assert name in syn
+        for name in TRACE_SCENARIOS:
+            assert name in tr
+        assert len(set(NEW_SCENARIOS)) >= 8 and len(tr) >= 2
+
+    def test_metadata(self):
+        for sc in scenarios.all_scenarios():
+            assert sc.description, sc.name
+            assert sc.kind in (scenarios.SYNTHETIC, scenarios.TRACE)
+            assert all(k and v for k, v in sc.knobs), sc.name
+
+    def test_unknown_name(self):
+        with pytest.raises(KeyError, match="registered:"):
+            scenarios.get_scenario("nope")
+
+    def test_duplicate_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            scenarios.register_scenario("diurnal")(lambda cfg: None)
+
+    def test_description_required(self):
+        with pytest.raises(ValueError, match="description"):
+            scenarios.register_scenario("undocumented")(lambda cfg: None)
+        assert "undocumented" not in scenarios.scenario_names()
+
+    def test_cli_list(self):
+        from repro.scenarios.__main__ import main
+        buf = io.StringIO()
+        with redirect_stdout(buf):
+            main(["list"])
+        out = buf.getvalue()
+        for name in NEW_SCENARIOS + PAPER_SCENARIOS + TRACE_SCENARIOS:
+            assert name in out
+        assert "2 trace adapters" in out
+
+
+class TestScenarioRuns:
+    @pytest.mark.parametrize("name", NEW_SCENARIOS + PAPER_SCENARIOS
+                             + TRACE_SCENARIOS)
+    def test_tick_event_parity(self, name):
+        """Acceptance: every registered scenario runs through BOTH time
+        advancement modes of the reference engine bit-identically."""
+        cfg = small_cfg()
+        js = scenarios.build(name, cfg)            # build() validates
+        res_tick = simulator.simulate(cfg, js, mode="tick")
+        res_event = simulator.simulate(cfg, js, mode="event")
+        metrics.assert_result_parity(res_tick, res_event)
+        assert (res_tick.finish > 0).all()
+        assert (res_tick.slowdown >= 1 - 1e-9).all()
+
+    @pytest.mark.parametrize("name", NEW_SCENARIOS)
+    def test_deterministic_and_scaled(self, name):
+        cfg = small_cfg(n_jobs=64)
+        a, b = scenarios.build(name, cfg), scenarios.build(name, cfg)
+        np.testing.assert_array_equal(a.submit, b.submit)
+        np.testing.assert_array_equal(a.demand, b.demand)
+        assert a.n == 64
+        c = scenarios.build(name, dataclasses.replace(cfg, seed=1))
+        assert not (np.array_equal(a.submit, c.submit)
+                    and np.array_equal(a.exec_total, c.exec_total))
+
+
+class TestTraceAdapters:
+    def test_philly_semantics(self):
+        cfg = small_cfg()
+        js, stats = load_philly_csv(PHILLY_SAMPLE, cfg, return_stats=True)
+        assert (stats.n_rows, stats.n_jobs) == (28, 26)
+        assert stats.n_malformed == 1          # empty end_time
+        assert stats.n_zero_runtime == 1       # end == start
+        # 16-GPU jobs split into 2 x 8-GPU gang instances
+        gang = np.asarray(js.n_nodes) > 1
+        assert gang.sum() == 2
+        assert (js.n_nodes[gang] == 2).all()
+        assert (js.demand[gang, 2] == 8.0).all()
+        # TE/BE by runtime threshold; demand snapped + clipped
+        np.testing.assert_array_equal(js.is_te, js.exec_total <= 30)
+        assert set(np.unique(js.demand[:, 2])) <= set(
+            cfg.workload.gpu_quanta)
+        assert js.submit[0] == 0 and (np.diff(js.submit) >= 0).all()
+
+    def test_philly_threshold_knob(self):
+        cfg = small_cfg()
+        strict = load_philly_csv(PHILLY_SAMPLE, cfg, te_runtime_min=5.0)
+        loose = load_philly_csv(PHILLY_SAMPLE, cfg, te_runtime_min=120.0)
+        assert strict.is_te.sum() < loose.is_te.sum()
+        np.testing.assert_array_equal(strict.is_te,
+                                      strict.exec_total <= 5)
+
+    def test_pai_semantics(self):
+        cfg = small_cfg()
+        js, stats = load_pai_csv(PAI_SAMPLE, cfg, return_stats=True)
+        assert (stats.n_rows, stats.n_jobs) == (30, 28)
+        assert stats.n_malformed == 1          # empty plan_cpu
+        assert stats.n_zero_runtime == 1       # end < start
+        # earliest row (j_001): plan_cpu 600 -> 6 cores, 29 GB, 1 GPU
+        np.testing.assert_array_equal(js.demand[0], [6.0, 29.0, 1.0])
+        # inst_num gangs survive intact
+        assert int(np.asarray(js.n_nodes).max()) == 8
+        assert (np.asarray(js.n_nodes) > 1).sum() == 9
+
+    def test_pai_too_wide_dropped(self):
+        cfg = small_cfg(n_nodes=4)
+        js, stats = load_pai_csv(PAI_SAMPLE, cfg, return_stats=True)
+        assert stats.n_too_wide == 1           # the 8-instance gang
+        assert int(np.asarray(js.n_nodes).max()) <= 4
+
+    def test_empty_after_filtering_raises(self):
+        with pytest.raises(ValueError, match="no usable jobs"):
+            load_philly_csv(PHILLY_SAMPLE, small_cfg(),
+                            statuses=("NoSuchStatus",))
+
+    def test_timezone_aware_timestamps(self):
+        from repro.scenarios.traces import _parse_ts
+        assert _parse_ts("2017-10-03 08:00:00+08:00") == \
+            _parse_ts("2017-10-03 00:00:00")
+        assert _parse_ts("1588000000") == 1588000000.0
+
+
+class TestRaggedBatching:
+    def test_equal_n_fast_path(self):
+        cfg = small_cfg(n_jobs=32)
+        js = [scenarios.build("te-flood", dataclasses.replace(cfg, seed=s))
+              for s in (0, 1)]
+        stacked = sweep.stack_jobsets(js)
+        assert stacked.submit.shape == (2, 32)
+        assert bool(np.asarray(stacked.valid).all())
+
+    def test_ragged_stack_regression(self):
+        """stack_jobsets used to raise on unequal n; now it pads."""
+        a = scenarios.build("te-flood", small_cfg(n_jobs=12))
+        b = scenarios.build("te-flood", small_cfg(n_jobs=20))
+        stacked = sweep.stack_jobsets([a, b])
+        assert stacked.submit.shape == (2, 20)
+        valid = np.asarray(stacked.valid)
+        assert valid[0].sum() == 12 and valid[1].all()
+        assert (np.asarray(stacked.demand)[0, 12:] == 0).all()
+
+    def test_padding_is_bit_exact(self):
+        """Sentinel contract: a padded trial reproduces the unpadded
+        run exactly — finishes, preemptions and makespan."""
+        cfg = small_cfg(n_jobs=48)
+        js = scenarios.build("burst-storm", cfg)
+        jobs = sim_jax.jobs_from_jobset(js)
+        padded = sweep.pad_jobs(jobs, js.n + 13)
+        st0 = sim_jax.run(cfg, jobs, seed=0)
+        st1 = sim_jax.run(cfg, padded, seed=0)
+        np.testing.assert_array_equal(np.asarray(st0.finish),
+                                      np.asarray(st1.finish[:js.n]))
+        np.testing.assert_array_equal(
+            np.asarray(st0.preempt_count),
+            np.asarray(st1.preempt_count[:js.n]))
+        assert int(st0.t) == int(st1.t)
+        # sentinels never ran
+        assert (np.asarray(st1.finish[js.n:]) == -1).all()
+        assert (np.asarray(st1.preempt_count[js.n:]) == 0).all()
+
+    def test_ragged_scenario_sweep(self):
+        """Acceptance: one ragged multi-scenario sweep through
+        sweep.run on CPU (different job counts per scenario)."""
+        out = sweep.scenario_sweep(
+            small_cfg(n_jobs=48), ["te-flood", "long-tail-be"],
+            seeds=[0, 1])
+        assert out["te_slowdown"].shape == (2, 2, 3)
+        assert np.isfinite(out["te_slowdown"]).all()
+        assert np.isfinite(out["be_slowdown"]).all()
+        assert (out["makespan"] > 0).all()
+
+    def test_ragged_sweep_via_public_run(self):
+        """A single-node trace slice (the Philly fixture minus its
+        gangs) padded against a synthetic scenario, straight through
+        the public ``sweep.run`` entry point."""
+        cfg = small_cfg(n_jobs=40)
+        tr = scenarios.build("philly-sample", cfg)
+        single = np.asarray(tr.n_nodes) == 1
+        tr = JobSet(submit=tr.submit[single], exec_total=tr.exec_total[single],
+                    demand=tr.demand[single], is_te=tr.is_te[single],
+                    gp=tr.gp[single], n_nodes=tr.n_nodes[single])
+        syn = scenarios.build("te-flood", cfg)
+        stacked = sweep.stack_jobsets([tr, syn])
+        assert stacked.submit.shape == (2, 40)
+        out = sweep.run(cfg, stacked, s_vals=[4.0, 4.0], P_vals=[1, 1],
+                        seeds=[0, 0])
+        assert np.isfinite(out["te_slowdown"]).all()
+
+    def test_gang_scenarios_rejected_by_jax_sweep(self):
+        with pytest.raises(NotImplementedError, match="gang"):
+            sweep.scenario_sweep(small_cfg(n_jobs=32),
+                                 ["gang-heavy"], seeds=[0])

@@ -1,0 +1,128 @@
+"""Workload-statistics coverage: closed-loop admission load, truncated
+normals, the trace-proxy gang fix, and scenario JobSet validity."""
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.configs.cluster import ClusterSpec, SimConfig, TruncNormal, \
+    WorkloadSpec
+from repro.core import simulator, workload
+
+
+class TestTruncNormal:
+    @pytest.mark.parametrize("d", [
+        TruncNormal(3.0, 3.0, 0.0, 20.0),      # the paper's GP dist
+        TruncNormal(30.0, 30.0, 3.0, 1440.0),  # BE exec
+        TruncNormal(5.0, 2.5, 0.0, 8.0),       # GPU demand
+    ])
+    def test_respects_bounds(self, d):
+        rng = np.random.default_rng(0)
+        x = workload.sample_trunc_normal(rng, d, 20_000)
+        assert x.min() >= d.lo and x.max() <= d.hi
+        # resampling keeps the bulk near the untruncated mean
+        lo_tail = max(d.lo, d.mean - 2 * d.std)
+        hi_tail = min(d.hi, d.mean + 2 * d.std)
+        assert ((x >= lo_tail) & (x <= hi_tail)).mean() > 0.8
+
+    def test_degenerate_interval(self):
+        rng = np.random.default_rng(1)
+        x = workload.sample_trunc_normal(
+            rng, TruncNormal(100.0, 1.0, 0.0, 5.0), 1000)
+        assert x.min() >= 0.0 and x.max() <= 5.0
+
+
+class TestClosedLoopAdmission:
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_backlog_holds_target(self, seed):
+        """§4.2 contract: under FIFO, the cluster-normalized backlog of
+        admitted, unfinished jobs stays pinned at cfg.workload.load."""
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=16),
+                        workload=WorkloadSpec(n_jobs=384),
+                        policy="fifo", seed=seed)
+        js = workload.generate(cfg)
+        res = simulator.simulate(cfg, js)
+        cap = np.asarray(cfg.cluster.node.as_tuple()) * cfg.cluster.n_nodes
+        frac = workload.cluster_fraction(js.demand, cap) * js.n_nodes
+        # backlog while admission is still active (before job exhaustion)
+        ts = np.arange(0, int(js.submit.max()))
+        load = np.array([frac[(js.submit <= t) & (res.finish > t)].sum()
+                         for t in ts])
+        target = cfg.workload.load
+        assert abs(np.median(load) - target) < 0.15 * target
+        assert np.percentile(load, 90) < 1.5 * target
+
+
+class TestTraceProxyGangs:
+    def test_multi_node_frac_honored(self):
+        """Regression: generate_trace_proxy silently ignored
+        multi_node_frac; it must sample gang widths like generate."""
+        wl = WorkloadSpec(n_jobs=2048, multi_node_frac=0.25,
+                          multi_node_widths=(2, 4))
+        cfg = SimConfig(workload=wl, seed=0)
+        js = workload.generate_trace_proxy(cfg)
+        gang = js.n_nodes > 1
+        assert gang.any()
+        assert abs(gang.mean() - 0.25) < 0.05
+        assert set(np.unique(js.n_nodes)) <= {1, 2, 4}
+
+    def test_single_node_default_unchanged(self):
+        cfg = SimConfig(workload=WorkloadSpec(n_jobs=256), seed=0)
+        js = workload.generate_trace_proxy(cfg)
+        assert (js.n_nodes == 1).all()
+
+    def test_gang_proxy_simulates(self):
+        wl = WorkloadSpec(n_jobs=160, multi_node_frac=0.25)
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=8),
+                        workload=wl, policy="fitgpp", seed=2)
+        js = workload.generate_trace_proxy(cfg)
+        res = simulator.simulate(cfg, js)
+        assert (res.finish > 0).all()
+
+
+class TestScenarioJobsets:
+    @pytest.mark.parametrize("name", scenarios.scenario_names())
+    def test_validates_against_cluster(self, name):
+        """Satellite: every registered scenario produces a JobSet that
+        passes validate() (build() re-validates against the node)."""
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=8),
+                        workload=WorkloadSpec(n_jobs=64), seed=0)
+        js = scenarios.build(name, cfg)
+        assert js.n > 0
+        assert (js.exec_total >= 1).all()
+        assert (np.diff(js.submit) >= 0).all()
+        assert (js.n_nodes >= 1).all()
+        assert (js.n_nodes <= cfg.cluster.n_nodes).all()
+
+    def test_scenario_class_mixes_differ(self):
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=8),
+                        workload=WorkloadSpec(n_jobs=256), seed=0)
+        flood = scenarios.build("te-flood", cfg).is_te.mean()
+        base = scenarios.build("paper-synthetic", cfg).is_te.mean()
+        assert flood > 0.6 > base
+
+    def test_heterogeneous_gp_bimodal(self):
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=8),
+                        workload=WorkloadSpec(n_jobs=512), seed=0)
+        js = scenarios.build("heterogeneous-gp", cfg)
+        zero = (js.gp == 0).mean()
+        assert 0.3 < zero < 0.7
+        assert js.gp.max() >= 5
+
+    def test_burst_storm_full_burst_fraction(self):
+        """burst_frac=1.0 keeps one background job as the time anchor
+        instead of crashing on an empty partition."""
+        from repro.scenarios.library import burst_storm
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=8),
+                        workload=WorkloadSpec(n_jobs=64), seed=0)
+        js = burst_storm(cfg, burst_frac=1.0)
+        js.validate(np.asarray(cfg.cluster.node.as_tuple()))
+        assert js.n == 64
+
+    def test_maintenance_drain_gap(self):
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=8),
+                        workload=WorkloadSpec(n_jobs=512), seed=0)
+        js = scenarios.build("maintenance-drain", cfg)
+        gaps = np.diff(np.unique(js.submit))
+        assert gaps.max() >= 200           # the drain window (240 min)
+        counts = np.bincount(js.submit - js.submit.min())
+        assert counts.max() >= 10          # the reopen flood
