@@ -6,25 +6,37 @@ mesh distribution relies on.
 ``BENCH_sim_engine.json`` — tick vs event-driven throughput (jobs
 simulated per second) on a sparse long-horizon workload, with the
 bit-exactness of the two modes re-verified in-run (DESIGN.md §4) —
-plus per-scenario event-engine timings over the full registered
-scenario suite (``repro.scenarios``, DESIGN.md §5).
+per-scenario event-engine timings over the full registered scenario
+suite (``repro.scenarios``, DESIGN.md §5), and the FitGpp score-path
+comparison on the JAX engine: jnp vs the Pallas ``fitgpp_score``
+kernel backend (``SimConfig.score_backend``, DESIGN.md §6), with
+parity re-verified in-run. Configs and sweeps go through the
+``repro.api`` facade; TIMED regions call the engines directly so the
+rows measure the engine, not jobset construction or result
+normalization, and stay comparable across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 from typing import Dict, List
 
-from repro import scenarios
+import numpy as np
+
+from repro import api, scenarios
 from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
-from repro.core import metrics, sim_jax, simulator, sweep, workload
+from repro.core import metrics, sim_jax, simulator, workload
 from repro.core.workload import sparse_long_horizon
 
 
 def bench_tick_vs_event(n_jobs: int = 512, policy: str = "fitgpp",
                         n_nodes: int = 8, seed: int = 0) -> dict:
-    cfg = SimConfig(cluster=ClusterSpec(n_nodes=n_nodes), policy=policy)
+    # Config through the facade; the TIMED region is the engine alone
+    # (no jobset build, no result-table normalization), so these rows
+    # stay comparable with the numbers from earlier PRs.
+    cfg = api.make_config(policy, n_nodes=n_nodes, seed=seed)
     js = sparse_long_horizon(n_jobs, seed=seed)
 
     t0 = time.perf_counter()
@@ -53,10 +65,10 @@ def bench_tick_vs_event(n_jobs: int = 512, policy: str = "fitgpp",
 def bench_scenario_suite(n_jobs: int = 256, n_nodes: int = 8,
                          policy: str = "fitgpp", seed: int = 0) -> Dict:
     """Event-engine timing for every registered scenario + trace adapter
-    (trace fixtures keep their native job counts)."""
-    cfg = SimConfig(cluster=ClusterSpec(n_nodes=n_nodes),
-                    workload=WorkloadSpec(n_jobs=n_jobs),
-                    policy=policy, seed=seed)
+    (trace fixtures keep their native job counts). Jobset construction
+    stays OUTSIDE the timed region — these rows measure the engine."""
+    cfg = api.make_config(policy, n_jobs=n_jobs, n_nodes=n_nodes,
+                          seed=seed)
     out = {}
     for name in scenarios.scenario_names():
         js = scenarios.build(name, cfg)
@@ -69,9 +81,39 @@ def bench_scenario_suite(n_jobs: int = 256, n_nodes: int = 8,
     return out
 
 
+def bench_fitgpp_score_backend(n_jobs: int = 192, n_nodes: int = 84,
+                               seed: int = 0) -> Dict:
+    """JAX-engine FitGpp with the Eq. 1-4 score path on jnp vs on the
+    Pallas ``fitgpp_score`` kernel (``SimConfig.score_backend``;
+    interpret mode off-TPU), compile excluded, parity re-verified."""
+    cfg = SimConfig(cluster=ClusterSpec(n_nodes=n_nodes),
+                    workload=WorkloadSpec(n_jobs=n_jobs),
+                    policy="fitgpp", seed=seed)
+    js = workload.generate(cfg)
+    jobs = sim_jax.jobs_from_jobset(js)
+    out: Dict = {"workload": {"n_jobs": n_jobs, "n_nodes": n_nodes,
+                              "seed": seed}}
+    finishes = {}
+    for backend in ("jnp", "pallas"):
+        bcfg = dataclasses.replace(cfg, score_backend=backend)
+        st = sim_jax.run_jit(bcfg, jobs, seed)     # compile
+        st.t.block_until_ready()
+        t0 = time.perf_counter()
+        st = sim_jax.run_jit(bcfg, jobs, seed)
+        st.t.block_until_ready()
+        s = time.perf_counter() - t0
+        finishes[backend] = np.asarray(st.finish)
+        out[backend] = {"seconds": s, "jobs_per_sec": n_jobs / max(s, 1e-12)}
+    if not (finishes["jnp"] == finishes["pallas"]).all():
+        raise AssertionError("score-backend parity violated: jnp vs pallas")
+    out["parity"] = True
+    return out
+
+
 def emit_json(path: str = "BENCH_sim_engine.json") -> dict:
     out = bench_tick_vs_event()
     out["scenario_suite"] = bench_scenario_suite()
+    out["fitgpp_score_backend"] = bench_fitgpp_score_backend()
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     return out
@@ -110,8 +152,8 @@ def run_all() -> List[tuple]:
                  "lax.while_loop"))
 
     t0 = time.perf_counter()
-    out = sweep.sensitivity_grid(cfg, 512, s_vals=[0.0, 2.0, 4.0, 8.0],
-                                 seeds=[0, 1])
+    out = api.sensitivity_grid(cfg, 512, s_vals=[0.0, 2.0, 4.0, 8.0],
+                               seeds=[0, 1])
     rows.append(("sim_sweep_8trials", (time.perf_counter() - t0) * 1e6,
                  "vmap(8 sims)"))
 
@@ -120,8 +162,14 @@ def run_all() -> List[tuple]:
                      f"{r['n_jobs']} jobs, {r['makespan_ticks']} ticks, "
                      f"{r['jobs_per_sec']:.0f} jobs/s"))
 
+    sb = bench_fitgpp_score_backend()
+    for backend in ("jnp", "pallas"):
+        rows.append((f"sim_jax_fitgpp_score_{backend}",
+                     sb[backend]["seconds"] * 1e6,
+                     f"{sb[backend]['jobs_per_sec']:.0f} jobs/s, parity ok"))
+
     t0 = time.perf_counter()
-    sweep.scenario_sweep(
+    api.scenario_sweep(
         SimConfig(cluster=ClusterSpec(n_nodes=8),
                   workload=WorkloadSpec(n_jobs=256), policy="fitgpp"),
         ["te-flood", "long-tail-be", "burst-storm"], seeds=[0, 1])

@@ -7,16 +7,14 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import dataclasses
 import tempfile
 
 import jax
 import numpy as np
 
-from repro import trainer
+from repro import api, trainer
 from repro.configs import get_smoke_config
-from repro.configs.cluster import SimConfig, WorkloadSpec
-from repro.core import metrics, simulator, workload
+from repro.core import metrics
 from repro.core.controller import Controller, JobSpec
 from repro.data import make_batch
 from repro.optim import AdamWConfig
@@ -25,13 +23,10 @@ from repro.optim import AdamWConfig
 def part1_scheduler():
     print("=" * 64)
     print("1) FitGpp vs FIFO on a synthetic workload (paper Table 1)")
-    cfg = SimConfig(workload=WorkloadSpec(n_jobs=2048), s=4.0,
-                    max_preemptions=1)
-    jobs = workload.generate(cfg)
-    rows = {}
-    for pol in ("fifo", "fitgpp"):
-        res = simulator.simulate(dataclasses.replace(cfg, policy=pol), jobs)
-        rows[pol] = metrics.slowdown_table(res)
+    # One facade call per (scenario, policy, engine) triple; both runs
+    # share the same generated jobset (compare_policies builds it once).
+    results = api.compare_policies(("fifo", "fitgpp"), n_jobs=2048)
+    rows = {name: r.table for name, r in results.items()}
     print(metrics.format_table(rows))
     drop = 1 - rows["fitgpp"]["TE"]["p95"] / rows["fifo"]["TE"]["p95"]
     print(f"-> TE p95 slowdown cut by {drop * 100:.1f}% "

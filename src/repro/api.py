@@ -1,0 +1,184 @@
+"""One Policy API: ``repro.api`` — the single entrypoint for running
+(scenario × policy × engine) experiments.
+
+The paper's contribution is a decision rule; the repo's job is to
+evaluate decision rules under as many workloads as possible. Both axes
+are registries (``core/policy_registry.py``, ``scenarios/registry.py``)
+and this facade is where they meet:
+
+    from repro import api
+    r = api.run_experiment(scenario="burst-storm", policy="srtp",
+                           engine="jax", n_jobs=512, n_nodes=16)
+    r.table["TE"]["p95"], r.preempted_frac, r.makespan
+
+``run_experiment`` builds the config (validated against the policy
+registry at construction), builds the scenario's ``JobSet``, runs the
+chosen engine — ``"reference"`` (numpy; tick or event time
+advancement, gangs supported) or ``"jax"`` (jit/vmap-able
+fixed-capacity engine, with ``score_backend="pallas"`` routing score
+policies through their registered kernel) — and normalizes the result
+into an :class:`ExperimentResult` with the paper-style tables, however
+it was produced.
+
+Batched studies go through the same module: :func:`sensitivity_grid`
+and :func:`scenario_sweep` re-export the mesh-distributed vmapped
+sweeps (``core/sweep.py``). The scenarios CLI, the engine benchmark
+and the examples all sit on this facade. DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from repro import scenarios
+from repro.configs.cluster import SimConfig
+from repro.core import metrics, sim_jax, simulator
+from repro.core.policy_registry import (all_policies, get_policy, make,
+                                        policy_names, score_backend_names)
+from repro.core.sweep import run_sweep, scenario_sweep, sensitivity_grid
+from repro.core.types import JobSet
+
+ENGINES = ("reference", "jax")
+DEFAULT_SCENARIO = "paper-synthetic"
+
+__all__ = [
+    "DEFAULT_SCENARIO", "ENGINES", "ExperimentResult", "all_policies",
+    "compare_policies", "get_policy", "make", "make_config",
+    "policy_names", "run_experiment", "run_sweep", "scenario_names",
+    "scenario_sweep", "score_backend_names", "sensitivity_grid",
+]
+
+scenario_names = scenarios.scenario_names
+
+
+@dataclass(frozen=True)
+class ExperimentResult:
+    """Engine-agnostic result of one (scenario, policy, engine) run.
+
+    ``table`` is the paper-style slowdown-percentile table
+    (``{"TE": {"p50": ...}, "BE": {...}}``, metrics.format_table-ready);
+    ``intervals`` the preemption→reschedule percentiles; ``raw`` the
+    engine-native result (``SimResult`` for the reference engine,
+    ``(Jobs, State)`` for JAX) for callers that need more.
+    """
+    scenario: str
+    policy: str
+    engine: str
+    cfg: SimConfig
+    table: Dict[str, Dict[str, float]]
+    intervals: Dict[str, float]
+    preempted_frac: float
+    makespan: int
+    raw: Any = field(repr=False, compare=False, default=None)
+
+
+def make_config(policy: Optional[str] = None, *,
+                base: Optional[SimConfig] = None,
+                n_jobs: Optional[int] = None, n_nodes: Optional[int] = None,
+                seed: Optional[int] = None, s: Optional[float] = None,
+                P: Optional[int] = None,
+                score_backend: Optional[str] = None,
+                backfill: Optional[bool] = None) -> SimConfig:
+    """SimConfig from the common experiment knobs (None = keep the
+    ``base`` value — including ``policy``, so a caller-configured base
+    is never silently re-pointed).
+
+    ``base`` seeds every field not overridden here; construction
+    validates ``policy`` / ``s`` / ``P`` / ``score_backend`` against
+    the policy registry.
+    """
+    cfg = base if base is not None else SimConfig()
+    repl: Dict[str, Any] = {}
+    if policy is not None:
+        repl["policy"] = policy
+    if n_nodes is not None:
+        repl["cluster"] = dataclasses.replace(cfg.cluster, n_nodes=n_nodes)
+    if n_jobs is not None:
+        repl["workload"] = dataclasses.replace(cfg.workload, n_jobs=n_jobs)
+    if seed is not None:
+        repl["seed"] = seed
+    if s is not None:
+        repl["s"] = s
+    if P is not None:
+        repl["max_preemptions"] = P
+    if score_backend is not None:
+        repl["score_backend"] = score_backend
+    if backfill is not None:
+        repl["backfill"] = backfill
+    return dataclasses.replace(cfg, **repl) if repl else cfg
+
+
+def _run_reference(cfg: SimConfig, js: JobSet, mode: str):
+    res = simulator.simulate(cfg, js, mode=mode)
+    return (metrics.slowdown_table(res), metrics.resched_table(res),
+            res.preempted_fraction(), int(res.makespan), res)
+
+
+def _run_jax(cfg: SimConfig, js: JobSet):
+    jobs = sim_jax.jobs_from_jobset(js)
+    st = sim_jax.run_jit(cfg, jobs, cfg.seed)
+    summary = sim_jax.result_summary(jobs, st)
+    table = {k: {p: float(v) for p, v in summary[k].items()}
+             for k in ("TE", "BE")}
+    intervals = {p: float(v) for p, v in summary["intervals"].items()}
+    return (table, intervals, float(summary["preempted_frac"]),
+            int(st.t), (jobs, st))
+
+
+def run_experiment(scenario: str = DEFAULT_SCENARIO,
+                   policy: Optional[str] = None,
+                   engine: str = "reference", *,
+                   cfg: Optional[SimConfig] = None,
+                   jobs: Optional[JobSet] = None,
+                   n_jobs: Optional[int] = None,
+                   n_nodes: Optional[int] = None,
+                   seed: Optional[int] = None,
+                   s: Optional[float] = None,
+                   P: Optional[int] = None,
+                   score_backend: Optional[str] = None,
+                   backfill: Optional[bool] = None,
+                   mode: str = "event") -> ExperimentResult:
+    """Run one (scenario, policy) experiment on the chosen engine.
+
+    Any registered policy runs on any registered scenario through
+    either engine with no engine edits — policies declare their
+    backends once in ``core/policies.py``. ``jobs`` short-circuits the
+    scenario build (e.g. to share one JobSet across policies);
+    ``mode`` ("event" | "tick") selects the reference engine's time
+    advancement and is ignored by the JAX engine (always tick-stepped,
+    semantics are bit-identical). Engine-native output is in ``.raw``.
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
+    cfg = make_config(policy, base=cfg, n_jobs=n_jobs, n_nodes=n_nodes,
+                      seed=seed, s=s, P=P, score_backend=score_backend,
+                      backfill=backfill)
+    js = scenarios.build(scenario, cfg) if jobs is None else jobs
+    if engine == "reference":
+        table, intervals, pf, makespan, raw = _run_reference(cfg, js, mode)
+    else:
+        table, intervals, pf, makespan, raw = _run_jax(cfg, js)
+    return ExperimentResult(
+        scenario=scenario, policy=cfg.policy, engine=engine, cfg=cfg,
+        table=table, intervals=intervals, preempted_frac=pf,
+        makespan=makespan, raw=raw)
+
+
+def compare_policies(policies, scenario: str = DEFAULT_SCENARIO,
+                     engine: str = "reference",
+                     **kw) -> Dict[str, ExperimentResult]:
+    """Run several policies on ONE shared JobSet (Table 1 shape).
+
+    The scenario is built once from the first policy's config — every
+    registered scenario derives its jobset from ``cfg.seed`` /
+    ``cfg.workload`` / ``cfg.cluster`` only, so the comparison is
+    apples-to-apples by construction.
+    """
+    policies = list(policies)
+    cfg0 = make_config(policies[0], base=kw.get("cfg"),
+                       n_jobs=kw.get("n_jobs"), n_nodes=kw.get("n_nodes"),
+                       seed=kw.get("seed"))
+    js = scenarios.build(scenario, cfg0)
+    return {p: run_experiment(scenario, p, engine, jobs=js, **kw)
+            for p in policies}

@@ -1,4 +1,5 @@
-"""Config dataclasses for models, input shapes, and parallelism plans.
+"""Config dataclasses for models, input shapes, and parallelism plans —
+plus the paper's scheduling defaults (single source).
 
 Every assigned architecture gets a ``src/repro/configs/<id>.py`` exposing
 ``CONFIG: ModelConfig`` (the exact published shape, cited) plus
@@ -9,6 +10,12 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
+
+# The paper's FitGpp defaults (§4.3). Single source of truth — SimConfig,
+# the policy classes, the live controller and the Pallas kernel wrappers
+# all take their defaults from here; do not repeat the literals.
+PAPER_S = 4.0       # Eq. 3 grace-period weight s
+PAPER_P = 1         # per-job preemption cap P (Fig. 5 sweeps it)
 
 
 @dataclass(frozen=True)

@@ -11,6 +11,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Tuple
 
+from repro.configs.base import PAPER_P, PAPER_S
+
 
 @dataclass(frozen=True)
 class NodeSpec:
@@ -101,17 +103,29 @@ class WorkloadSpec:
 class SimConfig:
     cluster: ClusterSpec = field(default_factory=ClusterSpec)
     workload: WorkloadSpec = field(default_factory=WorkloadSpec)
-    policy: str = "fitgpp"            # fifo | lrtp | rand | fitgpp
-    s: float = 4.0                    # Eq. 3 GP weight
-    max_preemptions: int = 1          # P (paper uses 1; Fig. 5 sweeps)
+    policy: str = "fitgpp"            # any registered policy name
+    s: float = PAPER_S                # Eq. 3 GP weight
+    max_preemptions: int = PAPER_P    # P (paper uses 1; Fig. 5 sweeps)
     seed: int = 0
     tick_minutes: float = 1.0
+    # Score-policy backend for the JAX engine: "jnp" runs Eq. 1-4 as
+    # plain jnp; "pallas" fuses score + masked argmin on the policy's
+    # registered TPU kernel (fitgpp only; parity-tested, needs static s).
+    score_backend: str = "jnp"
     # BEYOND-PAPER (the paper's "non-FIFO settings" future work): allow
     # queued BE jobs behind a blocked head to start when they fit
     # (first-fit backfill, bounded scan depth). FIFO arrival order is
     # still the primary key; this only relaxes head-of-line blocking.
     backfill: bool = False
     backfill_depth: int = 64
+
+    def __post_init__(self):
+        # Fail at construction time, naming the registered policies —
+        # not deep inside make_tick (lazy import: no cycle, and plain
+        # cluster/workload configs never touch the registry).
+        from repro.core.policy_registry import validate_config
+        validate_config(self.policy, self.s, self.max_preemptions,
+                        self.score_backend)
 
 
 PAPER_SIM = SimConfig()

@@ -32,8 +32,8 @@ import numpy as np
 from repro import trainer
 from repro.checkpoint import (estimate_grace_period, load_pytree,
                               save_pytree)
-from repro.configs.base import ModelConfig
-from repro.core import policies as pol
+from repro.configs.base import PAPER_P, PAPER_S, ModelConfig
+from repro.core import policy_registry
 from repro.core.engine import ClusterState, CoreHooks, SchedulerCore
 from repro.core.types import DONE, GRACE, QUEUED, RUNNING
 from repro.core.types import NOT_ARRIVED as PENDING
@@ -86,13 +86,13 @@ class Job:
 class Controller:
     def __init__(self, *, n_nodes: int = 2,
                  node_cap=(32.0, 256.0, 8.0),
-                 policy: str = "fitgpp", s: float = 4.0,
-                 max_preemptions: int = 1,
+                 policy: str = "fitgpp", s: float = PAPER_S,
+                 max_preemptions: int = PAPER_P,
                  steps_per_tick: int = 2,
                  workdir: str = "/tmp/repro_ctl",
                  seed: int = 0):
         self.node_cap = np.asarray(node_cap, float)
-        self.policy = pol.make_policy(policy, s)
+        self.policy = policy_registry.make(policy, s=s)
         self.P = max_preemptions
         self.steps_per_tick = steps_per_tick
         self.workdir = workdir

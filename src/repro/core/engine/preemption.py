@@ -61,7 +61,7 @@ def gang_select(*, policy, rng, te_demand: np.ndarray, width: int,
     order = ranked_order(policy, rng,
                          cand_demand * cand_width[:, None],
                          cand_gp, cand_remaining, under_cap, node_cap)
-    if policy.name == "fitgpp":
+    if policy.argmin_select:                 # Eq. 4-style score policies
         pool = [i for i in order if under_cap[i]] or list(order)
         for i in pool:                       # Eq. 4: min score first
             trial = free.copy()

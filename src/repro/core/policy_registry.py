@@ -1,0 +1,190 @@
+"""Backend-aware policy registry: one namespace for every decision rule.
+
+Mirrors ``scenarios/registry.py``: the paper's contribution (FitGpp,
+Eq. 1-4) is a *decision rule*, and adding or varying one used to mean
+editing three unrelated surfaces (the numpy ``Policy`` classes, a
+policy-name string chain inside ``sim_jax.make_tick``, and the Pallas
+kernel wiring). A policy now registers ONCE:
+
+    @register_policy("srtp", description="...")
+    class SrtpPolicy(Policy):
+        jax_kind = "rank"
+        def select(...): ...          # reference (numpy) victim choice
+        def rank_key(...): ...        # reference preemption-order key
+        def jax_rank(self, st, jobs): ...   # JAX engine declaration
+
+and every engine discovers it from here: the reference simulator and
+the live controller instantiate it via :func:`make`, and
+``sim_jax.make_tick`` builds its victim-selection trigger from the
+class's JAX declaration (``jax_kind`` = ``"rank"`` or ``"score"``; see
+``core/policies.Policy`` for the exact contracts). Score policies may
+additionally declare accelerated score backends (``score_backends``,
+e.g. the Pallas ``fitgpp_score`` kernel as ``"pallas"``), selectable
+per run through ``SimConfig.score_backend``.
+
+``SimConfig.__post_init__`` calls :func:`validate_config`, so an
+unknown policy (or an unknown score-backend name, or nonsense ``s`` /
+``P``) fails at construction time with the registered names in the
+error — not deep inside an engine. DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+# How a policy consumes randomness — drives the auto-generated
+# reference-vs-JAX parity matrix (tests/test_engine_parity.py):
+RNG_NONE = "none"          # deterministic: exact parity on any workload
+RNG_FALLBACK = "fallback"  # rng only on the no-eligible-victim fallback
+RNG_ALWAYS = "always"      # every selection draws (statistical parity only)
+_RNG_KINDS = (RNG_NONE, RNG_FALLBACK, RNG_ALWAYS)
+
+_JAX_KINDS = (None, "rank", "score")
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    name: str
+    cls: type                          # Policy subclass (numpy + JAX decls)
+    description: str                   # one line, shown by the CLI
+    preemptive: bool
+    jax_kind: Optional[str]            # None | "rank" | "score"
+    rng: str                           # RNG_NONE | RNG_FALLBACK | RNG_ALWAYS
+    score_backends: Tuple[str, ...]    # always includes "jnp"
+
+    @property
+    def dual_backend(self) -> bool:
+        """Runs on the JAX engine too (non-preemptive policies need no
+        victim-selection code there)."""
+        return (not self.preemptive) or self.jax_kind is not None
+
+    def make(self, s: Optional[float] = None):
+        """Instantiate the decision rule (``s`` = Eq. 3 GP weight)."""
+        from repro.configs.base import PAPER_S
+        return self.cls(PAPER_S if s is None else float(s))
+
+
+_REGISTRY: Dict[str, PolicySpec] = {}
+_populated = False
+
+
+def _ensure_populated() -> None:
+    """Importing ``core/policies`` registers the built-in policies.
+
+    The flag is set only AFTER a successful import: a failing first
+    import must surface its real error on every call, not poison the
+    registry into misleading "registered: <none>" messages."""
+    global _populated
+    if not _populated:
+        import repro.core.policies        # noqa: F401
+        _populated = True
+
+
+def register_policy(name: str, *, description: str = "",
+                    rng: str = RNG_NONE):
+    """Class decorator registering a ``Policy`` subclass as ``name``.
+
+    The class itself carries the backend declarations (``preemptive``,
+    ``jax_kind``, ``score_backends``, the ``jax_*`` methods);
+    ``description`` defaults to the first line of the docstring.
+    """
+    if rng not in _RNG_KINDS:
+        raise ValueError(f"rng must be one of {_RNG_KINDS}, got {rng!r}")
+
+    def deco(cls):
+        if name in _REGISTRY:
+            raise ValueError(f"policy {name!r} already registered")
+        jax_kind = getattr(cls, "jax_kind", None)
+        if jax_kind not in _JAX_KINDS:
+            raise ValueError(f"{name!r}: jax_kind must be one of "
+                             f"{_JAX_KINDS}, got {jax_kind!r}")
+        doc = (cls.__doc__ or "").strip().splitlines()
+        desc = description or (doc[0] if doc else "")
+        if not desc:
+            raise ValueError(f"policy {name!r} needs a description (pass "
+                             "description=... or give the class a docstring)")
+        backends = tuple(getattr(cls, "score_backends", ("jnp",)))
+        if "jnp" not in backends:
+            raise ValueError(f"{name!r}: score_backends must include 'jnp'")
+        cls.name = name
+        _REGISTRY[name] = PolicySpec(
+            name=name, cls=cls, description=desc,
+            preemptive=bool(getattr(cls, "preemptive", True)),
+            jax_kind=jax_kind, rng=rng, score_backends=backends)
+        return cls
+
+    return deco
+
+
+def get_policy(name: str) -> PolicySpec:
+    _ensure_populated()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY)) or "<none>"
+        raise KeyError(f"unknown policy {name!r}; registered: {known}") \
+            from None
+
+
+def policy_names() -> List[str]:
+    _ensure_populated()
+    return sorted(_REGISTRY)
+
+
+def all_policies() -> List[PolicySpec]:
+    return [_REGISTRY[n] for n in policy_names()]
+
+
+def score_backend_names() -> List[str]:
+    """Union of score backends over all registered policies (the CLI's
+    ``--score-backend`` choices and the validation set)."""
+    _ensure_populated()
+    return sorted({b for sp in _REGISTRY.values()
+                   for b in sp.score_backends})
+
+
+def make(name: str, s: Optional[float] = None):
+    """Instantiate the named decision rule (registry-dispatched
+    replacement for the deprecated ``policies.make_policy``)."""
+    return get_policy(name).make(s)
+
+
+def validate_config(policy: str, s, P, score_backend: str = "jnp") -> None:
+    """Fail fast (ValueError) on a config no engine could run.
+
+    Called from ``SimConfig.__post_init__`` so typos surface at
+    construction time with the registered names, instead of a KeyError
+    deep inside ``make_policy``/``make_tick``.
+    """
+    _ensure_populated()
+    if policy not in _REGISTRY:
+        raise ValueError(
+            f"unknown policy {policy!r}; known policies: "
+            f"{', '.join(sorted(_REGISTRY))}")
+    try:
+        s_ok = math.isfinite(float(s)) and float(s) >= 0.0
+    except (TypeError, ValueError):
+        s_ok = False
+    if not s_ok:
+        raise ValueError(
+            f"s (Eq. 3 grace-period weight) must be a finite float >= 0, "
+            f"got {s!r}")
+    try:
+        p_ok = int(P) == P and int(P) >= 0
+    except (TypeError, ValueError):
+        p_ok = False
+    if not p_ok:
+        raise ValueError(
+            f"max_preemptions (the paper's P cap) must be an integer >= 0, "
+            f"got {P!r}")
+    # Backend validation is name-level only: configs are re-pointed
+    # across policies all the time (dataclasses.replace(cfg, policy=...)
+    # — sweeps, workload.generate's internal FIFO admission pass), so an
+    # inert score_backend on a rank/non-preemptive policy is fine; the
+    # JAX engine falls back to "jnp" for policies without the backend.
+    known = score_backend_names()
+    if score_backend not in known:
+        raise ValueError(
+            f"unknown score backend {score_backend!r}; registered: "
+            f"{', '.join(known)}")

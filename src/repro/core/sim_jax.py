@@ -8,25 +8,31 @@ vectorized Eq. 1-4 victim selection (masked argmin). ``jit``-able and
 (see core/sweep.py).
 
 Parity: semantics mirror ``core/simulator.py`` tick-for-tick for the
-deterministic policies (fifo / lrtp / fitgpp-without-fallback); the
-random fallback and RAND use a jax PRNG and are excluded from exact
-parity (property-tested statistically instead).
+deterministic policies (fifo / lrtp / srtp / the score policies'
+main path); the random fallback and RAND use a jax PRNG and are
+excluded from exact parity (property-tested statistically instead).
 
-The per-event FitGpp scoring (Eq. 3) at large J is the hot loop this
-module exposes to the ``fitgpp_score`` Pallas kernel; here it is plain
-jnp so the engine runs anywhere.
+Victim selection is registry-dispatched (``core/policy_registry.py``,
+DESIGN.md §6): ``make_tick`` builds its preemption trigger from the
+registered policy's JAX declaration — ``jax_kind == "rank"`` policies
+feed :func:`_until_fits_select`, ``"score"`` policies feed
+:func:`_score_select` (Eq. 4 masked argmin + the paper's random
+fallback), and score policies may route the score + argmin through an
+accelerated kernel via ``SimConfig.score_backend`` (FitGpp's Pallas
+``fitgpp_score`` kernel as ``"pallas"``; parity-tested vs jnp).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import NamedTuple, Tuple
+import os
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.cluster import SimConfig
+from repro.core import policy_registry
 from repro.core.engine.placement import FIT_EPS
 from repro.core.types import JobSet
 
@@ -181,55 +187,58 @@ def _signal_one(st: State, jobs: Jobs, v: jax.Array, te: jax.Array) -> State:
 
 
 # ---------------------------------------------------------------------------
-# victim selection (Eq. 1-4 and baselines)
+# victim selection (registry-dispatched; policies declare jax_rank/jax_score)
 # ---------------------------------------------------------------------------
 
-def size_eq1(demand: jax.Array, node_cap: jax.Array) -> jax.Array:
-    return jnp.sqrt(jnp.sum((demand / node_cap) ** 2, axis=-1))
+def _score_select(st: State, jobs: Jobs, te: jax.Array, pol, node_cap, s,
+                  P, backend: str):
+    """Generic score-policy selection -> (state with advanced rng, victim).
 
-
-def fitgpp_select(st: State, jobs: Jobs, te: jax.Array, node_cap, s,
-                  P) -> Tuple[State, jax.Array]:
-    """-> (state with advanced rng, victim index).
-
-    With REPRO_SIM_KERNEL=1 the Eq. 1-4 score + masked argmin runs on
-    the Pallas ``fitgpp_score`` kernel (parity-tested vs this jnp path).
-    Note: the kernel path requires a static ``s`` (it becomes part of
-    the kernel), so it is off for vmapped s-sweeps.
+    The policy's ``jax_score`` gives per-job scores (lower = better
+    victim); this applies Eq. 2 eligibility, the P cap and the Eq. 4
+    masked argmin, with the paper's random-candidate fallback when no
+    job passes the masks. ``backend != "jnp"`` fuses score + masked
+    argmin on the policy's registered accelerated kernel
+    (``jax_score_accel``; returns -1 when nothing passes).
     """
-    import os
     cand = (st.state == RUNNING) & ~jobs.is_te
     safe_node = jnp.maximum(st.node, 0)
     node_free = st.free[safe_node]                      # (N, 3)
     under = st.preempt_count < P
-    if os.environ.get("REPRO_SIM_KERNEL") == "1" and isinstance(s, float):
-        from repro.kernels import ops as kops
-        _, main = kops.fitgpp_select(
-            jobs.demand, node_free, jobs.gp.astype(jnp.float32),
-            cand, under, jobs.demand[te], node_cap, s=s)
+    if backend != "jnp":
+        main = pol.jax_score_accel(backend, jobs, te, node_free, cand,
+                                   under, node_cap, s)
         mask_any = main >= 0
-        rng, sub = jax.random.split(st.rng)
-        p = cand.astype(jnp.float32)
-        p = p / jnp.maximum(p.sum(), 1.0)
-        rnd = jax.random.choice(sub, jobs.submit.shape[0],
-                                p=p).astype(jnp.int32)
-        return st._replace(rng=rng), jnp.where(mask_any, main, rnd)
-    sz = size_eq1(jobs.demand, node_cap)
-    max_sz = jnp.maximum(jnp.max(jnp.where(cand, sz, 0.0)), 1e-12)
-    max_gp = jnp.maximum(jnp.max(jnp.where(cand, jobs.gp, 0)), 1e-12)
-    score = sz / max_sz + s * (jobs.gp / max_gp)
-
-    elig = jnp.all(jobs.demand[te][None, :] <= jobs.demand + node_free
-                   + _EPS, axis=1)
-    mask = cand & elig & under
-    main = jnp.argmin(jnp.where(mask, score, _INF)).astype(jnp.int32)
+    else:
+        score = pol.jax_score(jobs, cand, node_cap, s)
+        elig = jnp.all(jobs.demand[te][None, :] <= jobs.demand + node_free
+                       + _EPS, axis=1)
+        mask = cand & elig & under
+        main = jnp.argmin(jnp.where(mask, score, _INF)).astype(jnp.int32)
+        mask_any = mask.any()
 
     rng, sub = jax.random.split(st.rng)
     p = cand.astype(jnp.float32)
     p = p / jnp.maximum(p.sum(), 1.0)
     rnd = jax.random.choice(sub, jobs.submit.shape[0], p=p).astype(jnp.int32)
-    victim = jnp.where(mask.any(), main, rnd)
-    return st._replace(rng=rng), victim
+    return st._replace(rng=rng), jnp.where(mask_any, main, rnd)
+
+
+def _resolve_score_backend(cfg: SimConfig, spec, s) -> str:
+    """Effective score backend: ``cfg.score_backend``, overridable by
+    the deprecated ``REPRO_SIM_KERNEL=1`` env switch. Accelerated
+    backends need a static ``s`` (it is baked into the kernel), so
+    traced-s sweeps — and policies without the backend — fall back to
+    the jnp path silently. Any static Python number counts as static
+    (an int ``s`` must not silently downgrade a requested kernel)."""
+    backend = cfg.score_backend
+    if os.environ.get("REPRO_SIM_KERNEL") == "1":
+        backend = "pallas"
+    static_s = isinstance(s, (int, float)) and not isinstance(s, bool)
+    if backend != "jnp" and (backend not in spec.score_backends
+                             or not static_s):
+        return "jnp"
+    return backend
 
 
 def _until_fits_select(st: State, jobs: Jobs, te: jax.Array, rank_val,
@@ -292,24 +301,24 @@ def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
     they default to the static values in ``cfg``."""
     node_cap = jnp.asarray(cfg.cluster.node.as_tuple(), jnp.float32)
     N = jobs.submit.shape[0]
-    preemptive = cfg.policy != "fifo"
-    policy = cfg.policy
+    spec = policy_registry.get_policy(cfg.policy)
+    preemptive = spec.preemptive
     P = cfg.max_preemptions if P is None else P
     s = cfg.s if s is None else s
+    pol = spec.make()                  # decision rule (jax declarations)
+    backend = _resolve_score_backend(cfg, spec, s)
+    if preemptive and spec.jax_kind is None:
+        raise NotImplementedError(
+            f"policy {cfg.policy!r} registers no JAX implementation "
+            "(jax_kind); run it on the reference engine")
 
     def trigger_preemption(st: State, te: jax.Array) -> State:
-        if policy == "fitgpp":
-            st, v = fitgpp_select(st, jobs, te, node_cap, s, P)
+        if spec.jax_kind == "score":
+            st, v = _score_select(st, jobs, te, pol, node_cap, s, P,
+                                  backend)
             return _signal_one(st, jobs, v, te)
-        if policy == "lrtp":
-            return _until_fits_select(st, jobs, te,
-                                      st.remaining.astype(jnp.float32), P)
-        if policy == "rand":
-            rng, sub = jax.random.split(st.rng)
-            st = st._replace(rng=rng)
-            return _until_fits_select(
-                st, jobs, te, jax.random.uniform(sub, (N,)), P)
-        return st
+        st, rank = pol.jax_rank(st, jobs)      # may consume st.rng
+        return _until_fits_select(st, jobs, te, rank, P)
 
     def te_lane(st: State) -> State:
         def cond(carry):

@@ -35,7 +35,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.configs.cluster import SimConfig
-from repro.core import policies as pol
+from repro.core import policy_registry
 from repro.core.engine import ClusterState, CoreHooks, SchedulerCore
 from repro.core.types import JobSet, PreemptionEvent, SimResult
 
@@ -55,7 +55,7 @@ class Simulator:
         self.admission_target = admission_target
         self.admit_time = np.full(jobs.n, -1, np.int64)
         self._load = 0.0
-        self.policy = pol.make_policy(cfg.policy, cfg.s)
+        self.policy = policy_registry.make(cfg.policy, s=cfg.s)
         self.node_cap = np.asarray(cfg.cluster.node.as_tuple(), np.float64)
         self.n_nodes = cfg.cluster.n_nodes
         self.rng = np.random.default_rng(cfg.seed + 104729)

@@ -2,9 +2,15 @@
 
 The sensitivity studies (Figs. 4-7) are hundreds of independent
 simulations (policy × s × P × workload seed). Each one is a pure-JAX
-program (core/sim_jax.py), so a sweep is a vmapped batch that
-``shard_map``s over the ``data`` axis of the production mesh — the
-scheduler study itself runs as a multi-pod data-parallel workload.
+program (core/sim_jax.py, victim selection registry-dispatched per
+``cfg.policy`` — any registered dual-backend policy sweeps with zero
+edits here), so a sweep is a vmapped batch that ``shard_map``s over
+the ``data`` axis of the production mesh — the scheduler study itself
+runs as a multi-pod data-parallel workload.
+
+Callers reach these through the ``repro.api`` facade
+(``api.sensitivity_grid`` / ``api.scenario_sweep`` / ``api.run_sweep``,
+DESIGN.md §6), alongside single-run ``api.run_experiment``.
 """
 from __future__ import annotations
 
@@ -150,7 +156,7 @@ def scenario_sweep(cfg: SimConfig, names: Sequence[str],
     """Ragged multi-scenario grid: all (scenario, seed) trials in ONE
     vmapped batch, even when the scenarios produce different job counts
     (sentinel padding, ``stack_jobsets``). Gang scenarios are rejected —
-    the JAX engine models single-node jobs (DESIGN.md §6).
+    the JAX engine models single-node jobs (DESIGN.md §7).
 
     Returns arrays of shape (len(names), len(seeds), ...).
     """

@@ -14,6 +14,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import PAPER_S
 from repro.kernels import fitgpp_score as _fs
 from repro.kernels import flash_attention as _fa
 from repro.kernels import lru_scan as _ls
@@ -88,7 +89,7 @@ def lru_scan(a, b, h0=None, *, block_t: int = _ls.DEFAULT_BLOCK_T,
 
 @functools.partial(jax.jit, static_argnames=("s", "block_j"))
 def fitgpp_select(demand, node_free, gp, running_be, under_cap, te_demand,
-                  node_cap, *, s: float = 4.0,
+                  node_cap, *, s: float = PAPER_S,
                   block_j: int = _fs.DEFAULT_BLOCK_J):
     """Eq. 1-4 victim selection. Returns (scores (J,), victim idx or -1)."""
     J = demand.shape[0]

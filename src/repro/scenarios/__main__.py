@@ -3,13 +3,16 @@
     PYTHONPATH=src python -m repro.scenarios list [--kind synthetic|trace]
     PYTHONPATH=src python -m repro.scenarios describe NAME
     PYTHONPATH=src python -m repro.scenarios run NAME [--policy fitgpp]
+        [--engine reference|jax] [--score-backend jnp|pallas]
         [--n-jobs 512] [--nodes 16] [--seed 0] [--mode event|tick]
     PYTHONPATH=src python -m repro.scenarios sweep NAME [NAME ...]
         [--seeds 0,1] [--n-jobs 256] [--policy fitgpp]
 
-``run`` replays one scenario through the reference engine and prints
-the paper-style slowdown table; ``sweep`` batches every (scenario,
-seed) trial — ragged job counts included — into one vmapped JAX sweep.
+``run`` replays one scenario through ``repro.api.run_experiment`` on
+either engine (any registered policy — the choices come from the
+policy registry) and prints the paper-style slowdown table; ``sweep``
+batches every (scenario, seed) trial — ragged job counts included —
+into one vmapped JAX sweep.
 """
 from __future__ import annotations
 
@@ -17,9 +20,9 @@ import argparse
 
 import numpy as np
 
+from repro import api, scenarios
 from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
-from repro.core import metrics, simulator, sweep
-from repro import scenarios
+from repro.core import metrics
 
 
 def _cfg(args, seed=None) -> SimConfig:
@@ -27,6 +30,7 @@ def _cfg(args, seed=None) -> SimConfig:
         cluster=ClusterSpec(n_nodes=args.nodes),
         workload=WorkloadSpec(n_jobs=args.n_jobs),
         policy=args.policy,
+        score_backend=getattr(args, "score_backend", "jnp"),
         seed=args.seed if seed is None else seed)
 
 
@@ -60,20 +64,21 @@ def cmd_run(args) -> None:
     gangs = int((np.asarray(js.n_nodes) > 1).sum())
     print(f"{args.name}: {js.n} jobs ({int(js.is_te.sum())} TE, "
           f"{gangs} gangs), horizon {int(js.submit.max())} min, "
-          f"policy={cfg.policy}, nodes={cfg.cluster.n_nodes}")
-    res = simulator.Simulator(cfg, js).run(mode=args.mode)
+          f"policy={cfg.policy}, engine={args.engine}, "
+          f"nodes={cfg.cluster.n_nodes}")
+    r = api.run_experiment(args.name, cfg.policy, args.engine, cfg=cfg,
+                           jobs=js, mode=args.mode)
     print(metrics.format_table(
-        {cfg.policy: metrics.slowdown_table(res)},
-        f"slowdown percentiles (makespan {res.makespan} min)"))
-    iv = metrics.resched_table(res)
-    print(f"resched intervals [min]: p50={iv['p50']:.1f} "
-          f"p95={iv['p95']:.1f}   preempted "
-          f"{res.preempted_fraction() * 100:.1f}% of BE jobs")
+        {r.policy: r.table},
+        f"slowdown percentiles (makespan {r.makespan} min)"))
+    print(f"resched intervals [min]: p50={r.intervals['p50']:.1f} "
+          f"p95={r.intervals['p95']:.1f}   preempted "
+          f"{r.preempted_frac * 100:.1f}% of BE jobs")
 
 
 def cmd_sweep(args) -> None:
     seeds = [int(s) for s in args.seeds.split(",")]
-    out = sweep.scenario_sweep(_cfg(args), args.names, seeds)
+    out = api.scenario_sweep(_cfg(args), args.names, seeds)
     print(f"ragged sweep: {len(args.names)} scenarios x {len(seeds)} "
           f"seeds, policy={args.policy} (seed-averaged)")
     hdr = f"{'scenario':22s} | {'TE p50':>8s} {'TE p95':>8s} " \
@@ -103,15 +108,21 @@ def main(argv=None) -> None:
 
     def sim_args(p):
         p.add_argument("--policy", default="fitgpp",
-                       choices=("fifo", "lrtp", "rand", "fitgpp"))
+                       choices=api.policy_names())
         p.add_argument("--n-jobs", type=int, default=512)
         p.add_argument("--nodes", type=int, default=16)
         p.add_argument("--seed", type=int, default=0)
 
-    p = sub.add_parser("run", help="replay through the reference engine")
+    p = sub.add_parser("run", help="replay through either engine "
+                                   "(repro.api.run_experiment)")
     p.add_argument("name")
     sim_args(p)
-    p.add_argument("--mode", default="event", choices=("event", "tick"))
+    p.add_argument("--engine", default="reference", choices=api.ENGINES)
+    p.add_argument("--mode", default="event", choices=("event", "tick"),
+                   help="reference-engine time advancement")
+    p.add_argument("--score-backend", default="jnp",
+                   choices=api.score_backend_names(),
+                   help="JAX-engine score path for score policies")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("sweep", help="ragged multi-scenario JAX sweep")

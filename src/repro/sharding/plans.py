@@ -7,7 +7,7 @@ used by another dim of the same tensor — otherwise it silently stays
 replicated (e.g. kv=8 heads on a model=16 axis: KV projections
 replicate, exactly like Megatron TP with kv < tp).
 
-Plans (see DESIGN.md §8):
+Plans:
   * train: batch over (pod, data); TP over model on heads/mlp/vocab/
     experts; FSDP (embed/weights over data axes too) + bf16 adam moments
     + microbatching for the >=100B archs.

@@ -2,20 +2,35 @@
 bit-exact with tick stepping for every policy; (2) the simulator and
 the controller really share one state machine — a minimal
 controller-style driver over ``SchedulerCore`` reproduces the
-simulator's results exactly."""
+simulator's results exactly; (3) the reference-vs-JAX parity matrix.
+
+The policy lists are GENERATED from the policy registry: registering a
+new dual-backend policy automatically enrolls it in the event-vs-tick
+suite and (unless it is rng-driven) in the reference-vs-JAX matrix —
+this file never needs editing for a new policy.
+"""
 import dataclasses
 
 import numpy as np
 import pytest
 
 from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
-from repro.core import metrics, simulator, workload
+from repro.core import metrics, policy_registry, simulator, workload
 from repro.core import policies as pol
 from repro.core.engine import ClusterState, CoreHooks, FIT_EPS, SchedulerCore
+from repro.core.policy_registry import RNG_ALWAYS
 from repro.core.types import JobSet
 from repro.core.workload import sparse_long_horizon
 
-POLICIES = ["fifo", "lrtp", "rand", "fitgpp"]
+POLICIES = policy_registry.policy_names()
+# Reference-vs-JAX exact parity: every dual-backend policy whose
+# victim selection is not rng-driven (RAND draws every invocation and
+# is property-tested statistically instead; the score policies' random
+# fallback does not fire on these generated workloads — asserted
+# exactly, so a silently-firing fallback would be caught as a parity
+# break, not masked).
+JAX_EXACT = [s.name for s in policy_registry.all_policies()
+             if s.dual_backend and s.rng != RNG_ALWAYS]
 
 
 def sparse_jobset(n=96, seed=0, gap=60.0):
@@ -82,6 +97,34 @@ class TestEventTickParity:
             simulator.simulate(cfg, js, mode="tick"))
 
 
+class TestReferenceVsJaxMatrix:
+    """Auto-generated from the registry: any newly registered
+    dual-backend policy is parity-tested against the JAX engine in
+    BOTH reference time-advancement modes without touching this file
+    (the paper-default 84-node cluster keeps the score policies on
+    their deterministic main path)."""
+
+    @pytest.mark.parametrize("mode", ["tick", "event"])
+    @pytest.mark.parametrize("policy", JAX_EXACT)
+    def test_generated_workload(self, policy, mode):
+        from repro.core import sim_jax
+        cfg = SimConfig(workload=WorkloadSpec(n_jobs=192), policy=policy,
+                        seed=17)
+        js = workload.generate(cfg)
+        ref = simulator.simulate(cfg, js, mode=mode)
+        st = sim_jax.run_jit(cfg, sim_jax.jobs_from_jobset(js), 17)
+        np.testing.assert_array_equal(np.asarray(st.finish), ref.finish)
+        np.testing.assert_array_equal(np.asarray(st.preempt_count),
+                                      ref.preempt_count)
+
+    def test_matrix_covers_new_policies(self):
+        """Both beyond-paper policies are dual-backend registered and
+        therefore enrolled in the matrix above."""
+        assert {"srtp", "minsize"} <= set(JAX_EXACT)
+        assert set(POLICIES) >= {"fifo", "fitgpp", "lrtp", "rand",
+                                 "srtp", "minsize"}
+
+
 class MinimalDriver:
     """Controller-shaped driver over the shared core: arrivals by
     submit tick, 'work' is decrementing a per-job step budget — no
@@ -93,7 +136,7 @@ class MinimalDriver:
         self.js = js
         self.remaining = js.exec_total.astype(np.int64).copy()
         self.finish = np.full(js.n, -1, np.int64)
-        policy = pol.make_policy(cfg.policy, cfg.s)
+        policy = policy_registry.make(cfg.policy, s=cfg.s)
         self.core = SchedulerCore(
             cluster=ClusterState(cfg.cluster.n_nodes,
                                  cfg.cluster.node.as_tuple()),

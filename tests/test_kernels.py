@@ -1,15 +1,35 @@
 """Pallas-kernel validation: shape/dtype sweeps vs the pure-jnp oracles
-(interpret mode on CPU)."""
+(interpret mode on CPU), plus the registry-wired ``score_backend``
+engine parity (which needs no dev extras and always runs)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis",
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                      # CI installs requirements-dev
+    HAS_HYPOTHESIS = False
+
+    def given(*a, **k):                  # placeholder decorators so the
+        return lambda f: f               # classes below still parse
+
+    settings = given
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+# The oracle sweeps were historically gated on the dev extras via a
+# module-level importorskip; keep exactly that behavior per class so
+# the score-backend suite below can run everywhere.
+needs_dev_deps = pytest.mark.skipif(
+    not HAS_HYPOTHESIS,
     reason="property tests need hypothesis (pip install -r "
            "requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops
 from repro.kernels import ref as kref
@@ -20,6 +40,7 @@ def rand(key, shape, dtype):
     return x.astype(dtype)
 
 
+@needs_dev_deps
 class TestFlashAttention:
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     @pytest.mark.parametrize(
@@ -63,6 +84,7 @@ class TestFlashAttention:
                                    atol=2e-5, rtol=2e-5)
 
 
+@needs_dev_deps
 class TestLruScan:
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     @pytest.mark.parametrize("B,L,R,h0", [
@@ -93,6 +115,7 @@ class TestLruScan:
                                    np.asarray(kernel), atol=1e-4)
 
 
+@needs_dev_deps
 class TestFitgppKernel:
     @settings(max_examples=20, deadline=None)
     @given(st.integers(4, 600), st.integers(0, 10_000))
@@ -147,6 +170,43 @@ class TestFitgppKernel:
             assert victims == [int(idx)]
 
 
+class TestFitgppScoreBackend:
+    """The registry-wired score-backend switch: a full JAX-engine run
+    with ``SimConfig.score_backend="pallas"`` (Eq. 1-4 score + masked
+    argmin on the Pallas kernel) is bit-identical to the jnp path."""
+
+    def test_sim_parity_jnp_vs_pallas(self):
+        import dataclasses
+        from repro.configs.cluster import SimConfig, WorkloadSpec
+        from repro.core import sim_jax, workload
+        cfg = SimConfig(workload=WorkloadSpec(n_jobs=160), policy="fitgpp",
+                        seed=5)
+        js = workload.generate(cfg)
+        jobs = sim_jax.jobs_from_jobset(js)
+        st_jnp = sim_jax.run_jit(cfg, jobs, 5)
+        st_pal = sim_jax.run_jit(
+            dataclasses.replace(cfg, score_backend="pallas"), jobs, 5)
+        np.testing.assert_array_equal(np.asarray(st_pal.finish),
+                                      np.asarray(st_jnp.finish))
+        np.testing.assert_array_equal(np.asarray(st_pal.preempt_count),
+                                      np.asarray(st_jnp.preempt_count))
+        np.testing.assert_array_equal(np.asarray(st_pal.last_vacate),
+                                      np.asarray(st_jnp.last_vacate))
+
+    def test_traced_s_falls_back_to_jnp(self):
+        """Vmapped s-sweeps cannot bake s into the kernel: the resolver
+        silently falls back to the jnp path instead of tracing-erroring."""
+        from repro.configs.cluster import SimConfig
+        from repro.core import policy_registry, sim_jax
+        cfg = SimConfig(policy="fitgpp", score_backend="pallas")
+        spec = policy_registry.get_policy("fitgpp")
+        assert sim_jax._resolve_score_backend(cfg, spec, 4.0) == "pallas"
+        assert sim_jax._resolve_score_backend(cfg, spec, 4) == "pallas"
+        assert sim_jax._resolve_score_backend(
+            cfg, spec, jnp.asarray(4.0)) == "jnp"
+
+
+@needs_dev_deps
 class TestSsdChunkKernel:
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
     @pytest.mark.parametrize("B,L,H,P,N", [

@@ -1,0 +1,146 @@
+"""One Policy API contracts (DESIGN.md §6): every registered policy —
+the 4 paper policies plus the beyond-paper ``srtp``/``minsize`` — runs
+on BOTH engines through ``repro.api.run_experiment`` with zero engine
+edits; config validation fails fast with the registered names; the
+deprecated ``make_policy`` shim still works."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
+from repro.core import policy_registry as preg
+from repro.core import policies as pol
+
+ALL_POLICIES = preg.policy_names()
+
+
+class TestRunExperimentMatrix:
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_reference_engine(self, policy):
+        r = api.run_experiment("te-flood", policy, "reference",
+                               n_jobs=64, n_nodes=4, seed=3)
+        assert r.engine == "reference" and r.policy == policy
+        assert r.makespan > 0
+        assert np.isfinite(r.table["TE"]["p95"])
+        assert (r.raw.finish > 0).all()
+
+    @pytest.mark.parametrize("policy", ALL_POLICIES)
+    def test_jax_engine(self, policy):
+        spec = preg.get_policy(policy)
+        assert spec.dual_backend, \
+            f"{policy} registered without a JAX declaration"
+        r = api.run_experiment("te-flood", policy, "jax",
+                               n_jobs=64, n_nodes=4, seed=3)
+        assert r.engine == "jax" and r.makespan > 0
+        assert np.isfinite(r.table["BE"]["p50"])
+        _, st = r.raw
+        assert (np.asarray(st.finish) > 0).all()
+
+    def test_shared_jobs_across_policies(self):
+        """compare_policies runs the non-preemptive baseline and a
+        preemptive policy on ONE jobset; preemption must help TE."""
+        out = api.compare_policies(("fifo", "fitgpp"), n_jobs=128,
+                                   n_nodes=8, seed=1)
+        assert out["fitgpp"].table["TE"]["p95"] \
+            < out["fifo"].table["TE"]["p95"]
+
+    def test_unknown_engine_and_scenario(self):
+        with pytest.raises(ValueError, match="unknown engine"):
+            api.run_experiment(policy="fifo", engine="verilog")
+        with pytest.raises(KeyError, match="registered"):
+            api.run_experiment("no-such-scenario", "fifo",
+                               n_jobs=8, n_nodes=2)
+
+    def test_base_cfg_policy_is_preserved(self):
+        """A caller-configured base cfg is never silently re-pointed to
+        the default policy."""
+        base = SimConfig(cluster=ClusterSpec(n_nodes=4),
+                         workload=WorkloadSpec(n_jobs=48), policy="srtp")
+        assert api.make_config(base=base).policy == "srtp"
+        r = api.run_experiment("te-flood", cfg=base)
+        assert r.policy == "srtp" and r.cfg.policy == "srtp"
+        assert api.make_config("lrtp", base=base).policy == "lrtp"
+
+    def test_mode_passthrough_bit_exact(self):
+        a = api.run_experiment(policy="srtp", n_jobs=96, n_nodes=4,
+                               seed=2, mode="tick")
+        b = api.run_experiment(policy="srtp", n_jobs=96, n_nodes=4,
+                               seed=2, mode="event")
+        np.testing.assert_array_equal(a.raw.finish, b.raw.finish)
+
+
+class TestConfigValidation:
+    def test_unknown_policy_names_registry(self):
+        with pytest.raises(ValueError, match="known policies: .*fitgpp"):
+            SimConfig(policy="fitgp")          # typo'd name, caught early
+
+    def test_bad_s_and_p(self):
+        with pytest.raises(ValueError, match="Eq. 3"):
+            SimConfig(s=float("inf"))
+        with pytest.raises(ValueError, match="Eq. 3"):
+            SimConfig(s=-1.0)
+        with pytest.raises(ValueError, match="max_preemptions"):
+            SimConfig(max_preemptions=-2)
+        with pytest.raises(ValueError, match="max_preemptions"):
+            SimConfig(max_preemptions=1.5)
+
+    def test_score_backend_names(self):
+        SimConfig(policy="fitgpp", score_backend="pallas")   # registered
+        # inert on non-score policies (configs are re-pointed across
+        # policies via dataclasses.replace; the engine falls back to jnp)
+        SimConfig(policy="lrtp", score_backend="pallas")
+        SimConfig(policy="fifo", score_backend="pallas")
+        with pytest.raises(ValueError, match="unknown score backend"):
+            SimConfig(policy="fitgpp", score_backend="cuda")
+
+    def test_replace_revalidates(self):
+        cfg = SimConfig()
+        with pytest.raises(ValueError, match="known policies"):
+            dataclasses.replace(cfg, policy="bogus")
+
+
+class TestRegistry:
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            preg.register_policy("fitgpp")(pol.FitGppPolicy)
+
+    def test_specs_carry_backend_declarations(self):
+        fit = preg.get_policy("fitgpp")
+        assert fit.jax_kind == "score" and "pallas" in fit.score_backends
+        assert preg.get_policy("lrtp").jax_kind == "rank"
+        assert preg.get_policy("fifo").preemptive is False
+        for spec in preg.all_policies():
+            assert "jnp" in spec.score_backends
+            assert spec.description
+
+    def test_make_applies_s(self):
+        p = preg.make("fitgpp", s=7.5)
+        assert isinstance(p, pol.FitGppPolicy) and p.s == 7.5
+        from repro.configs.base import PAPER_S
+        assert preg.make("fitgpp").s == PAPER_S
+
+    def test_deprecated_make_policy_shim(self):
+        with pytest.warns(DeprecationWarning, match="policy_registry"):
+            p = pol.make_policy("lrtp")
+        assert isinstance(p, pol.LrtpPolicy)
+
+    def test_gang_selection_uses_argmin_trait(self):
+        """preemption.gang_select dispatches on the registered
+        argmin_select trait, not on a policy-name string."""
+        import inspect
+        from repro.core.engine import preemption
+        src = inspect.getsource(preemption)
+        assert '== "fitgpp"' not in src
+        assert pol.MinSizePolicy.argmin_select \
+            and pol.FitGppPolicy.argmin_select
+
+    def test_no_string_dispatch_left_in_engines(self):
+        """Acceptance: no policy-name branching in sim_jax/simulator."""
+        import inspect
+        from repro.core import sim_jax, simulator
+        for mod in (sim_jax, simulator):
+            src = inspect.getsource(mod)
+            for name in ALL_POLICIES:
+                assert f'== "{name}"' not in src, (mod.__name__, name)
