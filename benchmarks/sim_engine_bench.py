@@ -6,8 +6,12 @@ mesh distribution relies on.
 ``BENCH_sim_engine.json`` — tick vs event-driven throughput (jobs
 simulated per second) on a sparse long-horizon workload, with the
 bit-exactness of the two modes re-verified in-run (DESIGN.md §4) —
-per-scenario event-engine timings over the full registered scenario
-suite (``repro.scenarios``, DESIGN.md §5), and the FitGpp score-path
+per-scenario timings over the full registered scenario suite
+(``repro.scenarios``, DESIGN.md §5): the reference event engine plus
+``jax_tick`` vs ``jax_event`` rows for the JAX engine's
+event-compressed ``lax.while_loop`` (``SimConfig.time_mode``,
+DESIGN.md §7; full-State bit-parity re-verified in-run across the
+deterministic policy registry), and the FitGpp score-path
 comparison on the JAX engine: jnp vs the Pallas ``fitgpp_score``
 kernel backend (``SimConfig.score_backend``, DESIGN.md §6), with
 parity re-verified in-run. Configs and sweeps go through the
@@ -27,7 +31,8 @@ import numpy as np
 
 from repro import api, scenarios
 from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
-from repro.core import metrics, sim_jax, simulator, workload
+from repro.core import metrics, policy_registry, sim_jax, simulator, workload
+from repro.core.policy_registry import RNG_ALWAYS
 from repro.core.workload import sparse_long_horizon
 
 
@@ -62,11 +67,59 @@ def bench_tick_vs_event(n_jobs: int = 512, policy: str = "fitgpp",
     }
 
 
+def _time_jax(cfg: SimConfig, jobs, seed: int, time_mode: str):
+    """Seconds for one jitted run, compile excluded."""
+    st = sim_jax.run_jit(cfg, jobs, seed, time_mode=time_mode)  # compile
+    st.t.block_until_ready()
+    t0 = time.perf_counter()
+    st = sim_jax.run_jit(cfg, jobs, seed, time_mode=time_mode)
+    st.t.block_until_ready()
+    return time.perf_counter() - t0, st
+
+
+def bench_jax_tick_vs_event(cfg: SimConfig, js, seed: int) -> Dict:
+    """JAX-engine tick vs event-compressed rows for one jobset: timing
+    under ``cfg.policy`` (compile excluded), full-State tick-vs-event
+    bit-parity re-verified in-run for EVERY registered deterministic
+    (non-rng-driven) dual-backend policy."""
+    jobs = sim_jax.jobs_from_jobset(js)
+    s_tick, st_tick = _time_jax(cfg, jobs, seed, "tick")
+    s_event, st_event = _time_jax(cfg, jobs, seed, "event")
+    if sim_jax.state_diff_fields(st_tick, st_event):
+        raise AssertionError(
+            f"jax tick-vs-event parity violated ({cfg.policy})")
+    parity_policies = [sp.name for sp in policy_registry.all_policies()
+                       if sp.dual_backend and sp.rng != RNG_ALWAYS]
+    for name in parity_policies:
+        if name == cfg.policy:
+            continue
+        pcfg = dataclasses.replace(cfg, policy=name)
+        a = sim_jax.run_jit(pcfg, jobs, seed, time_mode="tick")
+        b = sim_jax.run_jit(pcfg, jobs, seed, time_mode="event")
+        if sim_jax.state_diff_fields(a, b):
+            raise AssertionError(
+                f"jax tick-vs-event parity violated ({name})")
+    return {
+        "jax_tick": {"seconds": s_tick,
+                     "jobs_per_sec": js.n / max(s_tick, 1e-12)},
+        "jax_event": {"seconds": s_event,
+                      "jobs_per_sec": js.n / max(s_event, 1e-12)},
+        "jax_speedup": s_tick / max(s_event, 1e-12),
+        "parity": True,           # would have raised above
+        "parity_policies": parity_policies,
+    }
+
+
 def bench_scenario_suite(n_jobs: int = 256, n_nodes: int = 8,
                          policy: str = "fitgpp", seed: int = 0) -> Dict:
-    """Event-engine timing for every registered scenario + trace adapter
-    (trace fixtures keep their native job counts). Jobset construction
-    stays OUTSIDE the timed region — these rows measure the engine."""
+    """Per-scenario engine rows for every registered scenario + trace
+    adapter (trace fixtures keep their native job counts): the
+    reference event engine, plus ``jax_tick`` vs ``jax_event`` rows
+    (``SimConfig.time_mode``) with tick-vs-event bit-parity re-verified
+    across the deterministic policy registry. Gang scenarios carry
+    reference rows only (the JAX engine models single-node jobs).
+    Jobset construction stays OUTSIDE the timed regions — these rows
+    measure the engines."""
     cfg = api.make_config(policy, n_jobs=n_jobs, n_nodes=n_nodes,
                           seed=seed)
     out = {}
@@ -78,6 +131,10 @@ def bench_scenario_suite(n_jobs: int = 256, n_nodes: int = 8,
         out[name] = {"n_jobs": js.n, "seconds": s,
                      "jobs_per_sec": metrics.sim_throughput(res, s),
                      "makespan_ticks": int(res.makespan)}
+        if (np.asarray(js.n_nodes) == 1).all():
+            out[name].update(bench_jax_tick_vs_event(cfg, js, seed))
+        else:
+            out[name]["jax"] = "skipped: gang (multi-node) jobs"
     return out
 
 
@@ -161,6 +218,11 @@ def run_all() -> List[tuple]:
         rows.append((f"scenario_{name}", r["seconds"] * 1e6,
                      f"{r['n_jobs']} jobs, {r['makespan_ticks']} ticks, "
                      f"{r['jobs_per_sec']:.0f} jobs/s"))
+        if "jax_event" in r:
+            rows.append((f"scenario_{name}_jax_event",
+                         r["jax_event"]["seconds"] * 1e6,
+                         f"{r['jax_event']['jobs_per_sec']:.0f} jobs/s, "
+                         f"{r['jax_speedup']:.1f}x vs jax_tick, parity ok"))
 
     sb = bench_fitgpp_score_backend()
     for backend in ("jnp", "pallas"):

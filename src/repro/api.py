@@ -15,7 +15,8 @@ and this facade is where they meet:
 registry at construction), builds the scenario's ``JobSet``, runs the
 chosen engine — ``"reference"`` (numpy; tick or event time
 advancement, gangs supported) or ``"jax"`` (jit/vmap-able
-fixed-capacity engine, with ``score_backend="pallas"`` routing score
+fixed-capacity engine with the same tick/event mode switch
+(``SimConfig.time_mode``), ``score_backend="pallas"`` routing score
 policies through their registered kernel) — and normalizes the result
 into an :class:`ExperimentResult` with the paper-style tables, however
 it was produced.
@@ -115,9 +116,9 @@ def _run_reference(cfg: SimConfig, js: JobSet, mode: str):
             res.preempted_fraction(), int(res.makespan), res)
 
 
-def _run_jax(cfg: SimConfig, js: JobSet):
+def _run_jax(cfg: SimConfig, js: JobSet, mode: str):
     jobs = sim_jax.jobs_from_jobset(js)
-    st = sim_jax.run_jit(cfg, jobs, cfg.seed)
+    st = sim_jax.run_jit(cfg, jobs, cfg.seed, time_mode=mode)
     summary = sim_jax.result_summary(jobs, st)
     table = {k: {p: float(v) for p, v in summary[k].items()}
              for k in ("TE", "BE")}
@@ -145,12 +146,15 @@ def run_experiment(scenario: str = DEFAULT_SCENARIO,
     either engine with no engine edits — policies declare their
     backends once in ``core/policies.py``. ``jobs`` short-circuits the
     scenario build (e.g. to share one JobSet across policies);
-    ``mode`` ("event" | "tick") selects the reference engine's time
-    advancement and is ignored by the JAX engine (always tick-stepped,
-    semantics are bit-identical). Engine-native output is in ``.raw``.
+    ``mode`` ("event" | "tick") selects the time advancement on BOTH
+    engines (results are bit-identical either way; "event" compresses
+    no-op ticks — reference DESIGN.md §4, JAX §7). Engine-native
+    output is in ``.raw``.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
+    if mode not in ("event", "tick"):
+        raise ValueError(f"unknown mode {mode!r}; one of ('event', 'tick')")
     cfg = make_config(policy, base=cfg, n_jobs=n_jobs, n_nodes=n_nodes,
                       seed=seed, s=s, P=P, score_backend=score_backend,
                       backfill=backfill)
@@ -158,7 +162,7 @@ def run_experiment(scenario: str = DEFAULT_SCENARIO,
     if engine == "reference":
         table, intervals, pf, makespan, raw = _run_reference(cfg, js, mode)
     else:
-        table, intervals, pf, makespan, raw = _run_jax(cfg, js)
+        table, intervals, pf, makespan, raw = _run_jax(cfg, js, mode)
     return ExperimentResult(
         scenario=scenario, policy=cfg.policy, engine=engine, cfg=cfg,
         table=table, intervals=intervals, preempted_frac=pf,

@@ -108,6 +108,11 @@ class SimConfig:
     max_preemptions: int = PAPER_P    # P (paper uses 1; Fig. 5 sweeps)
     seed: int = 0
     tick_minutes: float = 1.0
+    # Time advancement for BOTH engines: "event" (default) jumps the
+    # clock over provably no-op ticks (bit-exact with "tick"; reference
+    # engine DESIGN.md §4, JAX engine §7). The JAX engine's jump is
+    # per-lane under vmap, so ragged/heterogeneous sweeps stay exact.
+    time_mode: str = "event"
     # Score-policy backend for the JAX engine: "jnp" runs Eq. 1-4 as
     # plain jnp; "pallas" fuses score + masked argmin on the policy's
     # registered TPU kernel (fitgpp only; parity-tested, needs static s).
@@ -126,6 +131,9 @@ class SimConfig:
         from repro.core.policy_registry import validate_config
         validate_config(self.policy, self.s, self.max_preemptions,
                         self.score_backend)
+        if self.time_mode not in ("tick", "event"):
+            raise ValueError(f"unknown time_mode {self.time_mode!r}; "
+                             "one of ('tick', 'event')")
 
 
 PAPER_SIM = SimConfig()

@@ -66,14 +66,19 @@ def merge_results(results: Iterable[SimResult]) -> Dict[str, np.ndarray]:
 
 
 def pooled_tables(pool: Dict[str, np.ndarray]) -> Dict:
+    """Empty classes (an all-TE or all-BE pool) yield explicit ``nan``
+    entries — the same NaN-safety contract as the vmapped sweeps
+    (``sweep._masked_pct``): nan-aware consumers drop them instead of
+    averaging garbage."""
     sd, te = pool["slowdown"], pool["is_te"]
     pc = pool["preempt_count"][~te]
-    n_be = max(len(pc), 1)
+    n_be = len(pc) if len(pc) else float("nan")
     return {
         "TE": percentiles(sd[te]),
         "BE": percentiles(sd[~te]),
         "intervals": percentiles(pool["intervals"], ps=(50, 75, 95, 99)),
-        "preempted_frac": float((pc > 0).mean()) if len(pc) else 0.0,
+        "preempted_frac": float((pc > 0).mean()) if len(pc)
+        else float("nan"),
         "preempt_counts": {
             "1": float((pc == 1).sum()) / n_be,
             "2": float((pc == 2).sum()) / n_be,

@@ -20,6 +20,22 @@ feed :func:`_until_fits_select`, ``"score"`` policies feed
 fallback), and score policies may route the score + argmin through an
 accelerated kernel via ``SimConfig.score_backend`` (FitGpp's Pallas
 ``fitgpp_score`` kernel as ``"pallas"``; parity-tested vs jnp).
+
+Time advancement (``SimConfig.time_mode``, DESIGN.md §7): the default
+``"event"`` mode compresses runs of provably no-op ticks inside the
+jitted ``while_loop`` — after a tick whose schedule pass could not act,
+the body jumps ``dt`` quanta straight to the next event (the masked
+minimum over the next valid arrival, ``t + remaining`` of running
+jobs and ``t + grace_left`` of GRACE jobs), bulk-decrementing
+``remaining``/``grace_left`` by the same ``dt``. The jump is gated by
+:func:`_make_would_act` — the vectorized mirror of the reference
+engine's ``SchedulerCore.schedule_would_act`` — so any tick on which
+the policy would be (re-)invoked still executes and the rng stream,
+every metric timestamp and the full State agree bit-for-bit with
+``"tick"`` mode at every event boundary. All of it is plain array
+math, so under ``vmap`` the jump ``dt`` is per-lane: ragged
+sentinel-padded batches and heterogeneous per-trial horizons each
+fast-forward at their own pace.
 """
 from __future__ import annotations
 
@@ -79,6 +95,12 @@ class State(NamedTuple):
     awaiting_resume: jax.Array   # (N,) bool
     n_done: jax.Array
     rng: jax.Array
+    # () i32: victim selections that fell back past the main masked
+    # path (score policies' random fallback, rank policies' over-P-cap
+    # last resort). Observability for the invariant suite: when 0, the
+    # paper's P cap is exact — sum(max(preempt_count - P, 0)) never
+    # exceeds this counter.
+    fallback_count: jax.Array
 
 
 def jobs_from_jobset(js: JobSet) -> Jobs:
@@ -122,6 +144,7 @@ def init_state(jobs: Jobs, n_nodes: int, node_cap, seed) -> State:
         rng=seed if (isinstance(seed, jax.Array)
                      and jnp.issubdtype(seed.dtype, jax.dtypes.prng_key))
         else jax.random.key(seed),
+        fallback_count=jnp.zeros((), jnp.int32),
     )
 
 
@@ -221,7 +244,10 @@ def _score_select(st: State, jobs: Jobs, te: jax.Array, pol, node_cap, s,
     p = cand.astype(jnp.float32)
     p = p / jnp.maximum(p.sum(), 1.0)
     rnd = jax.random.choice(sub, jobs.submit.shape[0], p=p).astype(jnp.int32)
-    return st._replace(rng=rng), jnp.where(mask_any, main, rnd)
+    st = st._replace(
+        rng=rng,
+        fallback_count=st.fallback_count + (~mask_any).astype(jnp.int32))
+    return st, jnp.where(mask_any, main, rnd)
 
 
 def _resolve_score_backend(cfg: SimConfig, spec, s) -> str:
@@ -267,6 +293,8 @@ def _until_fits_select(st: State, jobs: Jobs, te: jax.Array, rank_val,
         v = jnp.argmax(jnp.where(pick_from, rank_val, -_INF)).astype(jnp.int32)
         node = st.node[v]
         gp0 = jobs.gp[v] == 0
+        st = st._replace(
+            fallback_count=st.fallback_count + (~m1.any()).astype(jnp.int32))
         st = _signal_one(st, jobs, v, te)
         # Count only THIS selection's signalled demand as incoming supply
         # (other TEs' in-flight grace periods are already spoken for) —
@@ -295,12 +323,110 @@ def _scatter_free(free, node, demand, mask):
     return free.at[safe].add(w)
 
 
+# ---------------------------------------------------------------------------
+# event-compressed time advancement (SimConfig.time_mode, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def _fits_anywhere(free: jax.Array, demand: jax.Array) -> jax.Array:
+    """Per-job first-fit feasibility: (N,) bool, True where any node's
+    ``free`` vector covers ``demand[j]`` (the vectorized form of
+    ``_first_fit(...) >= 0`` over every job at once)."""
+    return jnp.any(jnp.all(free[None, :, :] >= demand[:, None, :] - _EPS,
+                           axis=2), axis=1)
+
+
+def _make_would_act(jobs: Jobs, preemptive: bool):
+    """Vectorized mirror of ``SchedulerCore.schedule_would_act``.
+
+    True whenever a schedule pass on this State could start a job or
+    (re-)invoke victim selection: a queued TE fits, a queued TE's
+    preemption trigger is armed (``te_pending == 0``, does not fit even
+    counting ``pending_free``, running BE candidates exist), or the BE
+    head fits. Deliberately conservative in the same way as the
+    reference: a fruitless policy invocation still counts, because RAND
+    and the score policies' random fallback consume rng on every
+    invocation — this is what keeps the event jump bit-exact for the
+    stochastic paths too (DESIGN.md §4/§7).
+    """
+
+    def would_act(st: State) -> jax.Array:
+        queued = st.state == QUEUED
+        be_q = queued & ~jobs.is_te if preemptive else queued
+        head = jnp.argmin(jnp.where(be_q, st.queue_key, _INF))
+        act = be_q.any() & (_first_fit(st.free, jobs.demand[head]) >= 0)
+        if preemptive:
+            te_q = queued & jobs.is_te
+            fits_now = _fits_anywhere(st.free, jobs.demand)
+            fits_pend = _fits_anywhere(st.free + st.pending_free,
+                                       jobs.demand)
+            has_cand = ((st.state == RUNNING) & ~jobs.is_te).any()
+            trigger = (st.te_pending == 0) & ~fits_pend & has_cand
+            act = act | (te_q & (fits_now | trigger)).any()
+        return act
+
+    return would_act
+
+
+def _make_event_advance(jobs: Jobs, preemptive: bool, n_jobs: int,
+                        max_ticks: int):
+    """Build the post-tick event jump: advance ``dt`` quanta in one
+    step, where ``dt`` is the gap to the next event — the masked
+    minimum over (next valid arrival, ``t + remaining`` of running
+    jobs, ``t + grace_left`` of GRACE jobs) — and every skipped tick is
+    a pure countdown (``would_act`` False, so free vectors, queues and
+    the rng stream provably cannot change before the event).
+    ``remaining``/``grace_left`` are bulk-decremented by the same
+    ``dt``; ``last_signal``/``last_vacate``/``last_resume`` need no
+    adjustment because every tick that records them still executes.
+    Plain array math: under ``vmap`` the jump is per-lane.
+    """
+    would_act = _make_would_act(jobs, preemptive)
+    big = jnp.int32(max_ticks)
+
+    def advance(st: State) -> State:
+        t1 = st.t                       # the tick just executed is t1 - 1
+        running = st.state == RUNNING
+        in_grace = st.state == GRACE
+        # Deltas from t1 to each next event (all masked mins; >= 0):
+        # a NOT_ARRIVED job enters the queue at the top of tick submit;
+        # a running job with remaining r finishes during tick t1 + r - 1;
+        # a GRACE job with grace_left g vacates at the top of tick t1 + g.
+        d_arr = jnp.min(jnp.where(st.state == NOT_ARRIVED,
+                                  jobs.submit - t1, big))
+        d_fin = jnp.min(jnp.where(running, st.remaining - 1, big))
+        d_vac = jnp.min(jnp.where(in_grace, st.grace_left, big))
+        dt = jnp.minimum(jnp.minimum(d_arr, d_fin), d_vac)
+        # No events pending at all -> jump to max_ticks (the tick loop's
+        # stall terminal, same as tick mode reaching its bound); never
+        # jump while the schedule could still act or everything is done.
+        dt = jnp.clip(dt, 0, jnp.maximum(big - t1, 0))
+        hold = would_act(st) | (st.n_done >= n_jobs)
+        dt = jnp.where(hold, 0, dt).astype(jnp.int32)
+        return st._replace(
+            t=t1 + dt,
+            remaining=st.remaining - dt * running.astype(jnp.int32),
+            grace_left=st.grace_left - dt * in_grace.astype(jnp.int32),
+        )
+
+    return advance
+
+
 def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
-              s=None, P=None):
-    """``s`` and ``P`` may be traced scalars (for vmapped sweeps);
-    they default to the static values in ``cfg``."""
+              s=None, P=None, time_mode: str = None,
+              max_ticks: int = 1 << 22):
+    """Build the while-loop body: one scheduling tick, plus — in
+    ``"event"`` time mode — the event jump that compresses the
+    following run of provably no-op ticks into a single ``dt`` step
+    (bit-exact either way; see module docstring). ``time_mode``
+    defaults to ``cfg.time_mode``; ``s`` and ``P`` may be traced
+    scalars (for vmapped sweeps); ``max_ticks`` bounds the stall jump
+    and must match the driving loop's bound."""
     node_cap = jnp.asarray(cfg.cluster.node.as_tuple(), jnp.float32)
     N = jobs.submit.shape[0]
+    time_mode = cfg.time_mode if time_mode is None else time_mode
+    if time_mode not in ("tick", "event"):
+        raise ValueError(f"unknown time_mode {time_mode!r}; "
+                         "one of ('tick', 'event')")
     spec = policy_registry.get_policy(cfg.policy)
     preemptive = spec.preemptive
     P = cfg.max_preemptions if P is None else P
@@ -431,27 +557,57 @@ def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
         )
         return st
 
-    return tick
+    if time_mode == "tick":
+        return tick
+    advance = _make_event_advance(jobs, preemptive, N, max_ticks)
+
+    def event_step(st: State) -> State:
+        return advance(tick(st))
+
+    return event_step
 
 
 def run(cfg: SimConfig, jobs: Jobs, seed=0,
-        max_ticks: int = 1 << 22, s=None, P=None) -> State:
-    """Run the full simulation; returns the final state."""
+        max_ticks: int = 1 << 22, s=None, P=None,
+        time_mode: str = None) -> State:
+    """Run the full simulation; returns the final state.
+
+    ``time_mode`` ("tick" | "event", default ``cfg.time_mode``) selects
+    per-quantum stepping vs the event-compressed jump — bit-identical
+    States, wall-clock proportional to events instead of makespan."""
     n_nodes = cfg.cluster.n_nodes
     node_cap = cfg.cluster.node.as_tuple()
-    tick = make_tick(cfg, jobs, n_nodes, s=s, P=P)
+    step = make_tick(cfg, jobs, n_nodes, s=s, P=P, time_mode=time_mode,
+                     max_ticks=max_ticks)
     st = init_state(jobs, n_nodes, node_cap, seed)
     N = jobs.submit.shape[0]
 
     def cond(st):
         return (st.n_done < N) & (st.t < max_ticks)
 
-    return jax.lax.while_loop(cond, tick, st)
+    return jax.lax.while_loop(cond, step, st)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def run_jit(cfg: SimConfig, jobs: Jobs, seed: int = 0) -> State:
-    return run(cfg, jobs, seed)
+@functools.partial(jax.jit, static_argnames=("cfg", "time_mode"))
+def run_jit(cfg: SimConfig, jobs: Jobs, seed: int = 0,
+            time_mode: str = None) -> State:
+    return run(cfg, jobs, seed, time_mode=time_mode)
+
+
+def state_diff_fields(a: State, b: State) -> list:
+    """Names of State fields that differ bitwise — rng keys compared by
+    key data. Empty list == full-State bit equality, THE tick-vs-event
+    parity contract; the engine benchmark and the parity/property
+    suites all share this one definition so a new State field is
+    covered everywhere at once."""
+    diff = []
+    for f in a._fields:
+        x, y = getattr(a, f), getattr(b, f)
+        if f == "rng":
+            x, y = jax.random.key_data(x), jax.random.key_data(y)
+        if not bool((np.asarray(x) == np.asarray(y)).all()):
+            diff.append(f)
+    return diff
 
 
 def slowdown(jobs: Jobs, st: State) -> jax.Array:
@@ -459,23 +615,34 @@ def slowdown(jobs: Jobs, st: State) -> jax.Array:
     return 1.0 + waiting / jobs.exec_total
 
 
+def masked_percentiles(vals, mask, ps) -> dict:
+    """``{f"p{p}": percentile of vals[mask]}`` — NaN-safe: when the
+    mask selects nothing (a trial with zero valid TE or BE jobs after
+    sentinel padding, or no preemption ever resumed), every entry is an
+    EXPLICIT ``nan`` rather than whatever a reduction over an all-NaN
+    slice happens to produce; nan-aware poolers then exclude the trial
+    (DESIGN.md §5)."""
+    v = jnp.where(mask, vals, jnp.nan)
+    some = mask.any()
+    return {f"p{p}": jnp.where(some, jnp.nanpercentile(v, p), jnp.nan)
+            for p in ps}
+
+
 def result_summary(jobs: Jobs, st: State) -> dict:
     """Percentile summary mirroring metrics.pooled_tables (jnp).
 
-    Sentinel (padding) rows are masked out of every statistic."""
+    Sentinel (padding) rows are masked out of every statistic; empty
+    classes (all-BE / all-TE jobsets) yield explicit ``nan`` rows."""
     sd = slowdown(jobs, st)
     te = jobs.is_te & jobs.valid
     be = ~jobs.is_te & jobs.valid
     out = {}
     for name, m in (("TE", te), ("BE", be)):
-        vals = jnp.where(m, sd, jnp.nan)
-        out[name] = {f"p{p}": jnp.nanpercentile(vals, p)
-                     for p in (50, 95, 99)}
+        out[name] = masked_percentiles(sd, m, (50, 95, 99))
     pre = jnp.where(be, (st.preempt_count > 0).astype(jnp.float32), jnp.nan)
-    out["preempted_frac"] = jnp.nanmean(pre)
-    iv = jnp.where(st.last_resume >= 0,
-                   (st.last_resume - st.last_signal).astype(jnp.float32),
-                   jnp.nan)
-    out["intervals"] = {f"p{p}": jnp.nanpercentile(iv, p)
-                        for p in (50, 75, 95, 99)}
+    out["preempted_frac"] = jnp.where(be.any(), jnp.nanmean(pre), jnp.nan)
+    iv_mask = (st.last_resume >= 0) & jobs.valid
+    out["intervals"] = masked_percentiles(
+        (st.last_resume - st.last_signal).astype(jnp.float32),
+        iv_mask, (50, 75, 95, 99))
     return out

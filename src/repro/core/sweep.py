@@ -66,50 +66,68 @@ def stack_jobsets(jobsets: Sequence[JobSet]) -> sim_jax.Jobs:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *js)
 
 
-def _trial_result(cfg: SimConfig, jobs: sim_jax.Jobs, s, P_, seed):
-    st = sim_jax.run(cfg, jobs, seed=seed, s=s, P=P_)
+def _masked_pct(vals, mask, ps):
+    """Stacked percentiles of ``vals[mask]`` — explicit ``nan`` when
+    the mask selects nothing (a trial with zero valid TE or BE jobs
+    after sentinel padding): the trial then drops out of every
+    nan-aware pooled table instead of contributing garbage."""
+    v = jnp.where(mask, vals, jnp.nan)
+    some = mask.any()
+    return jnp.stack([jnp.where(some, jnp.nanpercentile(v, p), jnp.nan)
+                      for p in ps])
+
+
+def _masked_frac(mask, hit):
+    """Fraction of ``mask`` rows with ``hit`` set; nan for an empty
+    class (same NaN-safety contract as :func:`_masked_pct`)."""
+    frac = jnp.nanmean(jnp.where(mask, hit.astype(jnp.float32), jnp.nan))
+    return jnp.where(mask.any(), frac, jnp.nan)
+
+
+def _trial_result(cfg: SimConfig, jobs: sim_jax.Jobs, s, P_, seed,
+                  time_mode: Optional[str] = None):
+    st = sim_jax.run(cfg, jobs, seed=seed, s=s, P=P_, time_mode=time_mode)
     sd = sim_jax.slowdown(jobs, st)
     te = jobs.is_te & jobs.valid
-
-    def pct(vals, mask, ps):
-        v = jnp.where(mask, vals, jnp.nan)
-        return jnp.stack([jnp.nanpercentile(v, p) for p in ps])
 
     iv = (st.last_resume - st.last_signal).astype(jnp.float32)
     iv_mask = (st.last_resume >= 0) & jobs.valid
     pc = st.preempt_count
     be = ~jobs.is_te & jobs.valid
     return {
-        "te_slowdown": pct(sd, te, (50, 95, 99)),
-        "be_slowdown": pct(sd, be, (50, 95, 99)),
-        "intervals": pct(iv, iv_mask, (50, 75, 95, 99)),
-        "preempted_frac": jnp.nanmean(
-            jnp.where(be, (pc > 0).astype(jnp.float32), jnp.nan)),
-        "preempt_1": jnp.nanmean(
-            jnp.where(be, (pc == 1).astype(jnp.float32), jnp.nan)),
-        "preempt_2": jnp.nanmean(
-            jnp.where(be, (pc == 2).astype(jnp.float32), jnp.nan)),
-        "preempt_3plus": jnp.nanmean(
-            jnp.where(be, (pc >= 3).astype(jnp.float32), jnp.nan)),
+        "te_slowdown": _masked_pct(sd, te, (50, 95, 99)),
+        "be_slowdown": _masked_pct(sd, be, (50, 95, 99)),
+        "intervals": _masked_pct(iv, iv_mask, (50, 75, 95, 99)),
+        "preempted_frac": _masked_frac(be, pc > 0),
+        "preempt_1": _masked_frac(be, pc == 1),
+        "preempt_2": _masked_frac(be, pc == 2),
+        "preempt_3plus": _masked_frac(be, pc >= 3),
         "makespan": st.t,
     }
 
 
 def run_sweep(cfg: SimConfig, jobs: sim_jax.Jobs, s_vals, P_vals, seeds,
               mesh: Optional[Mesh] = None,
-              trial_axes: Sequence[str] = ("data",)) -> Dict[str, np.ndarray]:
+              trial_axes: Sequence[str] = ("data",),
+              time_mode: Optional[str] = None) -> Dict[str, np.ndarray]:
     """Run T independent trials; trial t uses jobs[t], s_vals[t], ...
 
     With ``mesh``, trials are sharded over ``trial_axes`` via device_put
     of the batched inputs (pjit partitions the vmapped program); without,
     they run locally. T must be a multiple of the mesh axis size.
+    ``time_mode`` (default ``cfg.time_mode``) selects tick-stepped vs
+    event-compressed advancement; the event jump is computed inside the
+    vmapped program, so each trial lane fast-forwards at its own pace
+    (ragged padding and heterogeneous horizons included) with results
+    bit-identical to tick mode.
     """
     s_vals = jnp.asarray(s_vals, jnp.float32)
     P_vals = jnp.asarray(P_vals, jnp.int32)
     seeds = jnp.asarray(seeds, jnp.uint32)
 
     def one(jobs_t, s, P_, seed):
-        return _trial_result(cfg, jobs_t, s, P_, jax.random.key(seed))
+        return _trial_result(cfg, jobs_t, s, P_, jax.random.key(seed),
+                             time_mode=time_mode)
 
     batched = jax.vmap(one)
     if mesh is not None:
@@ -130,7 +148,9 @@ def run_sweep(cfg: SimConfig, jobs: sim_jax.Jobs, s_vals, P_vals, seeds,
 
 def sensitivity_grid(cfg: SimConfig, n_jobs: int, s_vals: Sequence[float],
                      seeds: Sequence[int],
-                     mesh: Optional[Mesh] = None) -> Dict[str, np.ndarray]:
+                     mesh: Optional[Mesh] = None,
+                     time_mode: Optional[str] = None
+                     ) -> Dict[str, np.ndarray]:
     """Fig. 4-style grid: all (s, seed) pairs on shared per-seed workloads.
 
     Returns arrays of shape (len(s_vals), len(seeds), ...).
@@ -146,13 +166,16 @@ def sensitivity_grid(cfg: SimConfig, n_jobs: int, s_vals: Sequence[float],
     s_flat = np.repeat(np.asarray(s_vals, np.float32), nt)
     P_flat = np.full(ns * nt, base.max_preemptions, np.int32)
     seed_flat = np.tile(np.asarray(seeds, np.uint32), ns)
-    out = run_sweep(base, rep, s_flat, P_flat, seed_flat, mesh=mesh)
+    out = run_sweep(base, rep, s_flat, P_flat, seed_flat, mesh=mesh,
+                    time_mode=time_mode)
     return jax.tree.map(lambda x: x.reshape((ns, nt) + x.shape[1:]), out)
 
 
 def scenario_sweep(cfg: SimConfig, names: Sequence[str],
                    seeds: Sequence[int],
-                   mesh: Optional[Mesh] = None) -> Dict[str, np.ndarray]:
+                   mesh: Optional[Mesh] = None,
+                   time_mode: Optional[str] = None
+                   ) -> Dict[str, np.ndarray]:
     """Ragged multi-scenario grid: all (scenario, seed) trials in ONE
     vmapped batch, even when the scenarios produce different job counts
     (sentinel padding, ``stack_jobsets``). Gang scenarios are rejected —
@@ -177,7 +200,8 @@ def scenario_sweep(cfg: SimConfig, names: Sequence[str],
     s_flat = np.full(nn * nt, cfg.s, np.float32)
     P_flat = np.full(nn * nt, cfg.max_preemptions, np.int32)
     seed_flat = np.tile(np.asarray(seeds, np.uint32), nn)
-    out = run_sweep(cfg, stacked, s_flat, P_flat, seed_flat, mesh=mesh)
+    out = run_sweep(cfg, stacked, s_flat, P_flat, seed_flat, mesh=mesh,
+                    time_mode=time_mode)
     return jax.tree.map(lambda x: x.reshape((nn, nt) + x.shape[1:]), out)
 
 

@@ -98,8 +98,12 @@ class SimResult:
         return np.asarray(iv, dtype=np.float64)
 
     def preempted_fraction(self) -> float:
-        """Proportion of jobs preempted at least once (Table 3)."""
+        """Proportion of BE jobs preempted at least once (Table 3);
+        explicit ``nan`` (not a numpy empty-slice warning) for an
+        all-TE jobset."""
         be = ~self.is_te
+        if not be.any():
+            return float("nan")
         return float((self.preempt_count[be] > 0).mean())
 
     def preempt_count_fractions(self) -> Dict[str, float]:

@@ -7,6 +7,7 @@
         [--n-jobs 512] [--nodes 16] [--seed 0] [--mode event|tick]
     PYTHONPATH=src python -m repro.scenarios sweep NAME [NAME ...]
         [--seeds 0,1] [--n-jobs 256] [--policy fitgpp]
+        [--mode event|tick]
 
 ``run`` replays one scenario through ``repro.api.run_experiment`` on
 either engine (any registered policy — the choices come from the
@@ -31,6 +32,7 @@ def _cfg(args, seed=None) -> SimConfig:
         workload=WorkloadSpec(n_jobs=args.n_jobs),
         policy=args.policy,
         score_backend=getattr(args, "score_backend", "jnp"),
+        time_mode=getattr(args, "mode", "event"),
         seed=args.seed if seed is None else seed)
 
 
@@ -119,7 +121,8 @@ def main(argv=None) -> None:
     sim_args(p)
     p.add_argument("--engine", default="reference", choices=api.ENGINES)
     p.add_argument("--mode", default="event", choices=("event", "tick"),
-                   help="reference-engine time advancement")
+                   help="time advancement, either engine (bit-identical; "
+                        "event skips no-op ticks)")
     p.add_argument("--score-backend", default="jnp",
                    choices=api.score_backend_names(),
                    help="JAX-engine score path for score policies")
@@ -129,6 +132,9 @@ def main(argv=None) -> None:
     p.add_argument("names", nargs="+")
     sim_args(p)
     p.add_argument("--seeds", default="0,1")
+    p.add_argument("--mode", default="event", choices=("event", "tick"),
+                   help="JAX-engine time advancement inside the vmapped "
+                        "sweep (per-lane event jumps)")
     p.set_defaults(fn=cmd_sweep)
 
     args = ap.parse_args(argv)

@@ -1,12 +1,14 @@
 """Engine-refactor contracts: (1) event-driven time advancement is
-bit-exact with tick stepping for every policy; (2) the simulator and
-the controller really share one state machine — a minimal
+bit-exact with tick stepping for every policy — on the reference
+engine AND on the JAX engine (``SimConfig.time_mode``, under jit,
+vmap and ragged sentinel padding); (2) the simulator and the
+controller really share one state machine — a minimal
 controller-style driver over ``SchedulerCore`` reproduces the
 simulator's results exactly; (3) the reference-vs-JAX parity matrix.
 
 The policy lists are GENERATED from the policy registry: registering a
-new dual-backend policy automatically enrolls it in the event-vs-tick
-suite and (unless it is rng-driven) in the reference-vs-JAX matrix —
+new dual-backend policy automatically enrolls it in both event-vs-tick
+suites and (unless it is rng-driven) in the reference-vs-JAX matrix —
 this file never needs editing for a new policy.
 """
 import dataclasses
@@ -31,6 +33,11 @@ POLICIES = policy_registry.policy_names()
 # break, not masked).
 JAX_EXACT = [s.name for s in policy_registry.all_policies()
              if s.dual_backend and s.rng != RNG_ALWAYS]
+# JAX tick-vs-event parity covers EVERY dual-backend policy, rng-driven
+# ones included: the event jump executes every tick on which the policy
+# would be invoked, so the rng stream itself is mode-invariant.
+JAX_ALL = [s.name for s in policy_registry.all_policies()
+           if s.dual_backend]
 
 
 def sparse_jobset(n=96, seed=0, gap=60.0):
@@ -123,6 +130,107 @@ class TestReferenceVsJaxMatrix:
         assert {"srtp", "minsize"} <= set(JAX_EXACT)
         assert set(POLICIES) >= {"fifo", "fitgpp", "lrtp", "rand",
                                  "srtp", "minsize"}
+
+
+def _assert_states_equal(a, b, context=""):
+    """Full-State bit equality (one shared contract:
+    ``sim_jax.state_diff_fields``)."""
+    from repro.core import sim_jax
+    diff = sim_jax.state_diff_fields(a, b)
+    assert not diff, f"{context}: State differs in {diff}"
+
+
+class TestJaxTickVsEventParity:
+    """The JAX engine's tick-vs-event axis of the matrix, generated
+    from the registry: every dual-backend policy — rand and the
+    fallback paths INCLUDED, because the event jump never skips a tick
+    on which the policy (and thus the PRNG) would be invoked — must
+    produce a bit-identical final State in both time modes, under jit,
+    under vmap, and under ragged sentinel padding."""
+
+    @pytest.mark.parametrize("policy", JAX_ALL)
+    def test_generated_workload(self, policy):
+        """Closed-loop-derived workload (submit times recorded by the
+        FIFO admission pass): full-State parity under jit."""
+        from repro.core import sim_jax
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=4), policy=policy,
+                        workload=WorkloadSpec(n_jobs=128), seed=23)
+        jobs = sim_jax.jobs_from_jobset(workload.generate(cfg))
+        a = sim_jax.run_jit(cfg, jobs, 23, time_mode="tick")
+        b = sim_jax.run_jit(cfg, jobs, 23, time_mode="event")
+        _assert_states_equal(a, b, f"jax tick/event {policy}")
+
+    @pytest.mark.parametrize("policy", JAX_ALL)
+    def test_sparse_long_horizon(self, policy):
+        """The regime the event jump exists for: almost every tick is
+        dead time."""
+        from repro.core import sim_jax
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=4), policy=policy)
+        jobs = sim_jax.jobs_from_jobset(sparse_jobset(n=96, seed=31))
+        a = sim_jax.run_jit(cfg, jobs, 31, time_mode="tick")
+        b = sim_jax.run_jit(cfg, jobs, 31, time_mode="event")
+        _assert_states_equal(a, b, f"jax sparse tick/event {policy}")
+
+    def test_vmapped_ragged_sweep(self):
+        """Per-lane event jumps under vmap: a ragged (sentinel-padded)
+        multi-workload sweep with heterogeneous horizons must match
+        tick mode bitwise in every pooled statistic."""
+        from repro.core import sweep
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=4), policy="fitgpp",
+                        workload=WorkloadSpec(n_jobs=64))
+        jobsets = [workload.generate(dataclasses.replace(
+            cfg, workload=WorkloadSpec(n_jobs=n), seed=sd))
+            for n, sd in ((40, 0), (64, 1), (52, 2))]
+        stacked = sweep.stack_jobsets(jobsets)
+        s_vals, p_vals, seeds = np.full(3, 4.0), np.full(3, 1), range(3)
+        out = {tm: sweep.run_sweep(cfg, stacked, s_vals, p_vals, seeds,
+                                   time_mode=tm)
+               for tm in ("tick", "event")}
+        for key in out["tick"]:
+            assert np.array_equal(out["tick"][key], out["event"][key],
+                                  equal_nan=True), key
+
+    def test_default_time_mode_is_event(self):
+        """SimConfig defaults to event mode on the JAX engine too, and
+        the mode threads through run_experiment for both engines."""
+        from repro import api
+        assert SimConfig().time_mode == "event"
+        r_ev = api.run_experiment(policy="fitgpp", engine="jax",
+                                  n_jobs=64, n_nodes=4, mode="event")
+        r_tk = api.run_experiment(policy="fitgpp", engine="jax",
+                                  n_jobs=64, n_nodes=4, mode="tick")
+        assert r_ev.table == r_tk.table
+        assert r_ev.makespan == r_tk.makespan
+
+    def test_rng_paths_statistical(self):
+        """Distribution-level lock for the rng-driven paths (RAND's
+        per-selection draws; fitgpp's fallback, forced here with P=0 so
+        every selection falls back): pooled over DISJOINT PRNG seed
+        sets — where runs are not pairwise comparable — the two time
+        modes must still agree on the aggregate picture. Catches any
+        future change that makes rng consumption tick-dependent."""
+        from repro.core import sim_jax
+        for policy, P in (("rand", 1), ("fitgpp", 0)):
+            cfg = SimConfig(cluster=ClusterSpec(n_nodes=4), policy=policy,
+                            workload=WorkloadSpec(n_jobs=128), seed=3,
+                            max_preemptions=P)
+            jobs = sim_jax.jobs_from_jobset(workload.generate(cfg))
+            pooled = {}
+            for tm, seed0 in (("tick", 0), ("event", 100)):
+                sds, pre = [], []
+                for k in range(4):
+                    st = sim_jax.run_jit(cfg, jobs, seed0 + k,
+                                         time_mode=tm)
+                    sds.append(np.asarray(
+                        sim_jax.slowdown(jobs, st)).mean())
+                    pre.append(int(st.fallback_count) if P == 0
+                               else np.asarray(st.preempt_count).sum())
+                pooled[tm] = (np.mean(sds), np.mean(pre))
+            sd_ratio = pooled["event"][0] / pooled["tick"][0]
+            assert 0.8 < sd_ratio < 1.25, (policy, pooled)
+            if pooled["tick"][1] or pooled["event"][1]:
+                ct_ratio = (pooled["event"][1] + 1) / (pooled["tick"][1] + 1)
+                assert 0.5 < ct_ratio < 2.0, (policy, pooled)
 
 
 class MinimalDriver:

@@ -25,11 +25,16 @@ except ImportError:                      # CI installs requirements-dev
 
 # The oracle sweeps were historically gated on the dev extras via a
 # module-level importorskip; keep exactly that behavior per class so
-# the score-backend suite below can run everywhere.
-needs_dev_deps = pytest.mark.skipif(
+# the score-backend suite below can run everywhere. The registered
+# ``hypothesis`` marker (pytest.ini) makes the gated subset selectable.
+_skip_without_hypothesis = pytest.mark.skipif(
     not HAS_HYPOTHESIS,
     reason="property tests need hypothesis (pip install -r "
            "requirements-dev.txt)")
+
+
+def needs_dev_deps(cls):
+    return _skip_without_hypothesis(pytest.mark.hypothesis(cls))
 
 from repro.kernels import ops
 from repro.kernels import ref as kref

@@ -1,0 +1,114 @@
+"""NaN-safety of the masked percentile/summary helpers (DESIGN.md §5).
+
+A trial can legitimately have ZERO valid TE jobs (an all-BE jobset, or
+a padded lane whose few TE rows are sentinels) or zero valid BE jobs.
+Every summary surface — ``sim_jax.result_summary``, the vmapped
+``sweep._trial_result``, the reference-engine tables — must then
+return an EXPLICIT ``nan`` for the empty class (no empty-slice
+warnings, no garbage values leaking out of an all-NaN reduction), and
+nan-aware pooling must exclude the trial instead of poisoning the
+aggregate.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
+from repro.core import metrics, sim_jax, sweep
+from repro.core.types import JobSet
+
+
+def one_class_jobset(n: int, te: bool, seed: int = 0) -> JobSet:
+    rng = np.random.default_rng(seed)
+    return JobSet(
+        submit=np.cumsum(rng.integers(0, 3, n)).astype(np.int64),
+        exec_total=rng.integers(1, 20, n).astype(np.int64),
+        demand=np.stack([rng.integers(1, 16, n).astype(float),
+                         rng.integers(1, 64, n).astype(float),
+                         rng.choice([0.0, 1.0, 2.0], n)], axis=1),
+        is_te=np.full(n, te),
+        gp=rng.integers(0, 5, n).astype(np.int64))
+
+
+CFG = SimConfig(cluster=ClusterSpec(n_nodes=2), policy="fitgpp",
+                workload=WorkloadSpec(n_jobs=24))
+
+
+class TestJaxSummaries:
+    @pytest.mark.parametrize("te", [False, True])
+    def test_result_summary_empty_class(self, te):
+        js = one_class_jobset(24, te=te)
+        jobs = sim_jax.jobs_from_jobset(js)
+        st = sim_jax.run_jit(CFG, jobs, 0)
+        out = sim_jax.result_summary(jobs, st)
+        empty, full = ("BE", "TE") if te else ("TE", "BE")
+        assert all(np.isnan(float(v)) for v in out[empty].values())
+        assert all(np.isfinite(float(v)) for v in out[full].values())
+        if te:     # no BE jobs -> preempted fraction is nan, not 0/0
+            assert np.isnan(float(out["preempted_frac"]))
+        else:      # no TE jobs -> nothing ever preempted: intervals nan
+            assert all(np.isnan(float(v))
+                       for v in out["intervals"].values())
+
+    def test_vmapped_sweep_excludes_nan_trials(self):
+        """Ragged batch of [all-BE, all-TE, mixed] trials: the empty
+        classes come back as explicit nan rows and nan-aware pooling
+        sees only the populated trials."""
+        from repro.core import workload
+        mixed = workload.generate(CFG)
+        jobsets = [one_class_jobset(20, te=False),
+                   one_class_jobset(28, te=True), mixed]
+        stacked = sweep.stack_jobsets(jobsets)
+        out = sweep.run_sweep(CFG, stacked, np.full(3, 4.0),
+                              np.full(3, 1), range(3))
+        te_p95 = out["te_slowdown"][:, 1]
+        be_p50 = out["be_slowdown"][:, 0]
+        assert np.isnan(te_p95[0]) and np.isfinite(be_p50[0])
+        assert np.isnan(be_p50[1]) and np.isfinite(te_p95[1])
+        assert np.isfinite(te_p95[2]) and np.isfinite(be_p50[2])
+        assert np.isnan(out["preempted_frac"][1])
+        # pooling: the all-BE trial drops out of the TE aggregate
+        pooled = np.nanmean(te_p95)
+        assert np.isfinite(pooled)
+        assert pooled == pytest.approx(np.nanmean(te_p95[1:]))
+
+    def test_padded_empty_class_matches_unpadded(self):
+        """Sentinel padding must not resurrect an empty class: an
+        all-BE jobset padded with sentinel rows reports the same nan/
+        finite split as its unpadded run."""
+        js = one_class_jobset(20, te=False)
+        jobs = sim_jax.jobs_from_jobset(js)
+        padded = sweep.pad_jobs(jobs, 32)
+        a = sim_jax.result_summary(jobs, sim_jax.run_jit(CFG, jobs, 0))
+        st_p = sim_jax.run(CFG, padded, seed=0)
+        b = sim_jax.result_summary(padded, st_p)
+        for grp in ("TE", "BE"):
+            for p, v in a[grp].items():
+                np.testing.assert_equal(float(v), float(b[grp][p]))
+
+
+class TestReferenceSummaries:
+    @pytest.mark.parametrize("te", [False, True])
+    def test_run_experiment_empty_class(self, te):
+        js = one_class_jobset(24, te=te)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")     # no empty-slice warnings
+            r = api.run_experiment(policy="fitgpp", engine="reference",
+                                   cfg=CFG, jobs=js)
+        empty, full = ("BE", "TE") if te else ("TE", "BE")
+        assert all(np.isnan(v) for v in r.table[empty].values())
+        assert all(np.isfinite(v) for v in r.table[full].values())
+        if te:
+            assert np.isnan(r.preempted_frac)
+
+    def test_pooled_tables_empty_class(self):
+        res = api.run_experiment(policy="fitgpp", engine="reference",
+                                 cfg=CFG,
+                                 jobs=one_class_jobset(24, te=True)).raw
+        pooled = metrics.pooled_tables(metrics.merge_results([res]))
+        assert np.isnan(pooled["preempted_frac"])
+        assert all(np.isnan(v) for v in pooled["preempt_counts"].values())
+        assert all(np.isnan(v) for v in pooled["BE"].values())
+        assert all(np.isfinite(v) for v in pooled["TE"].values())

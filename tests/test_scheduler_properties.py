@@ -4,6 +4,8 @@ import dataclasses
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.hypothesis
+
 pytest.importorskip(
     "hypothesis",
     reason="property tests need hypothesis (pip install -r "

@@ -1,0 +1,254 @@
+"""Engine-wide invariants of the JAX engine, observed at every event
+boundary in BOTH time modes (``SimConfig.time_mode``, DESIGN.md §7).
+
+The step function from ``sim_jax.make_tick`` is iterated from Python
+(one jitted call per executed tick / event jump), so every intermediate
+``State`` is inspectable:
+
+  * resource safety — ``free >= -FIT_EPS`` on every node, never above
+    capacity, and conservation: free + demand of RUNNING/GRACE jobs on
+    a node == capacity;
+  * the paper's P cap — ``sum(max(preempt_count - P, 0))`` never
+    exceeds ``State.fallback_count`` (the count of selections that fell
+    back past the main masked path), so with no fallback firings
+    ``preempt_count <= P`` exactly;
+  * TE jobs never enter GRACE (only BE jobs are preempted);
+  * ``n_done`` is monotone, always equals the DONE count, and
+    terminally covers every valid job;
+  * queue keys respect the requeue-on-top rule: victims re-enter with
+    negative (strictly decreasing) keys that sort before every arrival
+    key, arrivals keep their submission index;
+  * sentinel padding stays inert (born DONE, never placed).
+
+A seeded-random class runs everywhere; a hypothesis class (skipped
+cleanly without the dev extras, like the other property suites) drives
+the same checker over drawn jobsets padded to a fixed shape — which
+also exercises the sentinel-padding contract.
+
+Cross-mode: every event-mode boundary State must equal the tick-mode
+State at the same ``t``, bit for bit — the "same State at every event
+boundary" guarantee that makes ``"event"`` a pure wall-clock change.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
+from repro.core import policy_registry, sim_jax, sweep
+from repro.core.engine.placement import FIT_EPS
+from repro.core.sim_jax import DONE, GRACE, QUEUED, RUNNING
+from repro.core.types import JobSet
+
+MODES = ("tick", "event")
+JAX_POLICIES = [s.name for s in policy_registry.all_policies()
+                if s.dual_backend]
+
+
+def random_jobset(seed: int, n: int = 32) -> JobSet:
+    """Adversarially small cluster-sized random workload: whole-node
+    demands appear, so preemption, the P cap and the random fallback
+    all fire."""
+    rng = np.random.default_rng(seed)
+    submit = np.cumsum(rng.integers(0, 4, n))
+    is_te = rng.random(n) < 0.4
+    exec_total = rng.integers(1, 25, n)
+    demand = np.stack([
+        rng.integers(1, 33, n).astype(float),
+        rng.integers(1, 257, n).astype(float),
+        rng.choice([0.0, 1.0, 2.0, 4.0, 8.0], n)], axis=1)
+    gp = rng.integers(0, 6, n)
+    return JobSet(submit=submit.astype(np.int64),
+                  exec_total=exec_total.astype(np.int64),
+                  demand=demand, is_te=is_te,
+                  gp=gp.astype(np.int64))
+
+
+def iterate_states(cfg, jobs: sim_jax.Jobs, seed: int, time_mode: str,
+                   max_steps: int = 50_000):
+    """Run step-by-step; returns every State from init to terminal."""
+    n_nodes = cfg.cluster.n_nodes
+    step = jax.jit(sim_jax.make_tick(cfg, jobs, n_nodes,
+                                     time_mode=time_mode))
+    st = sim_jax.init_state(jobs, n_nodes, cfg.cluster.node.as_tuple(),
+                            seed)
+    N = jobs.submit.shape[0]
+    states = [st]
+    while int(st.n_done) < N and int(st.t) < (1 << 22):
+        st = step(st)
+        states.append(st)
+        assert len(states) < max_steps, "simulation did not converge"
+    return states
+
+
+def check_invariants(cfg, jobs: sim_jax.Jobs, states) -> None:
+    cap = np.asarray(cfg.cluster.node.as_tuple())
+    P = cfg.max_preemptions
+    valid = np.asarray(jobs.valid)
+    is_te = np.asarray(jobs.is_te)
+    demand = np.asarray(jobs.demand)
+    n_idx = np.arange(len(valid))
+    prev_done = -1
+    for st in states:
+        t = int(st.t)
+        state = np.asarray(st.state)
+        free = np.asarray(st.free)
+        node = np.asarray(st.node)
+        pc = np.asarray(st.preempt_count)
+        qk = np.asarray(st.queue_key)
+
+        # resource safety + conservation
+        assert (free >= -FIT_EPS).all(), f"over-allocated at t={t}"
+        assert (free <= cap[None] + FIT_EPS).all(), \
+            f"free above capacity at t={t}"
+        used = np.zeros_like(free)
+        occupies = (state == RUNNING) | (state == GRACE)
+        for j in n_idx[occupies]:
+            used[node[j]] += demand[j]
+        assert np.allclose(used + free, cap[None]), \
+            f"conservation violated at t={t}"
+
+        # the P cap, exact modulo counted fallback firings
+        fallback = int(st.fallback_count)
+        over = np.maximum(pc - P, 0).sum()
+        assert over <= fallback, \
+            f"P cap broken beyond fallback allowance at t={t}: " \
+            f"{over} > {fallback}"
+        if fallback == 0:
+            assert (pc <= P).all(), f"P cap exceeded at t={t}"
+
+        # TE jobs are never preempted into GRACE
+        assert not (is_te & (state == GRACE)).any(), f"TE in GRACE at t={t}"
+        assert (pc[is_te] == 0).all(), f"TE preempted at t={t}"
+
+        # grace clocks never go negative at a boundary
+        assert (np.asarray(st.grace_left)[state == GRACE] >= 0).all()
+
+        # n_done: monotone, equals the DONE count
+        n_done = int(st.n_done)
+        assert n_done >= prev_done, f"n_done regressed at t={t}"
+        assert n_done == (state == DONE).sum(), f"n_done drifted at t={t}"
+        prev_done = n_done
+
+        # queue keys: arrivals keep their submission index; victims
+        # requeue on TOP with negative keys (strictly before arrivals)
+        queued = state == QUEUED
+        fresh = queued & (pc == 0)
+        assert (qk[fresh] == n_idx[fresh]).all(), \
+            f"arrival key drifted at t={t}"
+        requeued = queued & (pc > 0)
+        assert (qk[requeued] < 0).all(), f"victim not on top at t={t}"
+        assert len(set(qk[requeued])) == requeued.sum(), \
+            f"duplicate requeue keys at t={t}"
+
+        # sentinel padding stays inert
+        assert (state[~valid] == DONE).all(), f"sentinel woke up at t={t}"
+        assert (node[~valid] == -1).all()
+
+    # terminal: every valid job is done exactly once, after its arrival
+    last = states[-1]
+    state = np.asarray(last.state)
+    finish = np.asarray(last.finish)
+    assert int(last.n_done) == len(valid)
+    assert (state[valid] == DONE).all()
+    submit = np.asarray(jobs.submit)
+    exec_total = np.asarray(jobs.exec_total)
+    assert (finish[valid] >= submit[valid] + exec_total[valid]).all()
+
+
+def run_and_check(cfg, js: JobSet, seed: int = 0, pad_to: int = 0):
+    jobs = sim_jax.jobs_from_jobset(js)
+    if pad_to:
+        jobs = sweep.pad_jobs(jobs, pad_to)
+    per_t = {}
+    for mode in MODES:
+        states = iterate_states(cfg, jobs, seed, mode)
+        check_invariants(cfg, jobs, states)
+        per_t[mode] = {int(st.t): st for st in states}
+    # every event boundary matches the tick-mode State bit-for-bit
+    missing = set(per_t["event"]) - set(per_t["tick"])
+    assert not missing, f"event boundaries unknown to tick mode: {missing}"
+    for t, st_e in per_t["event"].items():
+        diff = sim_jax.state_diff_fields(per_t["tick"][t], st_e)
+        assert not diff, f"tick/event State diverges at t={t} in {diff}"
+
+
+def small_cfg(policy: str, n_nodes: int = 2, P: int = 1) -> SimConfig:
+    return SimConfig(cluster=ClusterSpec(n_nodes=n_nodes), policy=policy,
+                     workload=WorkloadSpec(n_jobs=32), max_preemptions=P)
+
+
+class TestInvariantsSeeded:
+    """Seeded-random invariant matrix (runs without dev extras)."""
+
+    @pytest.mark.parametrize("policy", JAX_POLICIES)
+    def test_policy_matrix(self, policy):
+        run_and_check(small_cfg(policy), random_jobset(seed=1), seed=1)
+
+    @pytest.mark.parametrize("seed", [2, 3, 4])
+    def test_fitgpp_seeds(self, seed):
+        run_and_check(small_cfg("fitgpp", P=seed % 3 + 1),
+                      random_jobset(seed=seed), seed=seed)
+
+    def test_ragged_padding(self):
+        """Same invariants with sentinel rows appended (the vmapped
+        ragged-sweep shape)."""
+        run_and_check(small_cfg("fitgpp"), random_jobset(seed=5, n=24),
+                      seed=5, pad_to=32)
+
+    @pytest.mark.parametrize("name", ["te-flood", "sparse-long-horizon"])
+    def test_registered_scenarios(self, name):
+        from repro import scenarios
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=3), policy="fitgpp",
+                        workload=WorkloadSpec(n_jobs=48), seed=6)
+        run_and_check(cfg, scenarios.build(name, cfg), seed=6)
+
+
+class TestInvariantsHypothesis:
+    """Hypothesis-driven jobsets, padded to one fixed shape so the
+    engine compiles once per (policy, mode)."""
+
+    @classmethod
+    def setup_class(cls):
+        pytest.importorskip(
+            "hypothesis",
+            reason="property tests need hypothesis (pip install -r "
+                   "requirements-dev.txt)")
+
+    pytestmark = pytest.mark.hypothesis
+
+    def test_drawn_jobsets(self):
+        from hypothesis import HealthCheck, given, settings, strategies as st
+
+        @st.composite
+        def jobsets(draw, max_jobs=28):
+            n = draw(st.integers(4, max_jobs))
+            submit = np.cumsum(draw(st.lists(
+                st.integers(0, 3), min_size=n, max_size=n)))
+            execs = draw(st.lists(st.integers(1, 15), min_size=n,
+                                  max_size=n))
+            cpus = draw(st.lists(st.integers(1, 32), min_size=n,
+                                 max_size=n))
+            rams = draw(st.lists(st.integers(1, 256), min_size=n,
+                                 max_size=n))
+            gpus = draw(st.lists(st.sampled_from([0, 1, 2, 4, 8]),
+                                 min_size=n, max_size=n))
+            te = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+            gp = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+            return JobSet(
+                submit=np.asarray(submit, np.int64),
+                exec_total=np.asarray(execs, np.int64),
+                demand=np.stack([np.asarray(cpus, float),
+                                 np.asarray(rams, float),
+                                 np.asarray(gpus, float)], 1),
+                is_te=np.asarray(te, bool),
+                gp=np.asarray(gp, np.int64))
+
+        @settings(max_examples=12, deadline=None,
+                  suppress_health_check=[HealthCheck.too_slow])
+        @given(jobsets(), st.sampled_from(["fifo", "lrtp", "fitgpp"]),
+               st.integers(1, 3))
+        def inner(js, policy, P):
+            run_and_check(small_cfg(policy, P=P), js, seed=0, pad_to=28)
+
+        inner()
