@@ -54,27 +54,33 @@ def bench_lru_scan() -> List[tuple]:
 
 
 def bench_fitgpp_score() -> List[tuple]:
-    J = 4096
-    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    J, M = 4096, 84                    # candidates x nodes (paper cluster)
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
     demand = jax.random.uniform(ks[0], (J, 3), minval=1.0, maxval=8.0)
-    free = jax.random.uniform(ks[1], (J, 3), minval=0.0, maxval=8.0)
+    free = jax.random.uniform(ks[1], (M, 3), minval=0.0, maxval=8.0)
     gp = jax.random.uniform(ks[2], (J,), maxval=20.0)
     run = jax.random.bernoulli(ks[3], 0.8, (J,))
+    # mostly single-node candidates, some 2-node gangs
+    node = jax.random.randint(ks[4], (J,), 0, M)
+    assign = jax.nn.one_hot(node, M, dtype=bool) \
+        | jax.nn.one_hot((node + 1) % M, M, dtype=bool) \
+        & jax.random.bernoulli(ks[5], 0.15, (J,))[:, None]
     under = jnp.ones((J,), bool)
     te = jnp.array([4.0, 16.0, 4.0])
     cap = jnp.array([32.0, 256.0, 8.0])
 
-    def oracle(demand, free, gp, run, under):
-        return kref.fitgpp_score_ref(demand, gp, free, te, run, under,
-                                     cap, 4.0)
+    def oracle(demand, assign, free, gp, run, under):
+        return kref.fitgpp_score_ref(demand, gp, assign, free, te, run,
+                                     under, cap, 4.0)
 
     j_oracle = jax.jit(oracle)
     return [
-        ("fitgpp_score_oracle_4k", _time(j_oracle, demand, free, gp, run,
-                                         under), f"J={J}"),
+        ("fitgpp_score_oracle_4k", _time(j_oracle, demand, assign, free,
+                                         gp, run, under), f"J={J};M={M}"),
         ("fitgpp_score_kernel_4k", _time(
-            lambda d, f, g, r, u: ops.fitgpp_select(d, f, g, r, u, te, cap),
-            demand, free, gp, run, under), "interpret-mode"),
+            lambda d, a, f, g, r, u: ops.fitgpp_select(d, a, f, g, r, u,
+                                                       te, cap),
+            demand, assign, free, gp, run, under), "interpret-mode"),
     ]
 
 

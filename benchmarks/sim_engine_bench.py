@@ -85,7 +85,8 @@ def bench_jax_tick_vs_event(cfg: SimConfig, js, seed: int) -> Dict:
     jobs = sim_jax.jobs_from_jobset(js)
     s_tick, st_tick = _time_jax(cfg, jobs, seed, "tick")
     s_event, st_event = _time_jax(cfg, jobs, seed, "event")
-    if sim_jax.state_diff_fields(st_tick, st_event):
+    parity = not sim_jax.state_diff_fields(st_tick, st_event)
+    if not parity:
         raise AssertionError(
             f"jax tick-vs-event parity violated ({cfg.policy})")
     parity_policies = [sp.name for sp in policy_registry.all_policies()
@@ -96,7 +97,8 @@ def bench_jax_tick_vs_event(cfg: SimConfig, js, seed: int) -> Dict:
         pcfg = dataclasses.replace(cfg, policy=name)
         a = sim_jax.run_jit(pcfg, jobs, seed, time_mode="tick")
         b = sim_jax.run_jit(pcfg, jobs, seed, time_mode="event")
-        if sim_jax.state_diff_fields(a, b):
+        parity = parity and not sim_jax.state_diff_fields(a, b)
+        if not parity:
             raise AssertionError(
                 f"jax tick-vs-event parity violated ({name})")
     return {
@@ -105,7 +107,7 @@ def bench_jax_tick_vs_event(cfg: SimConfig, js, seed: int) -> Dict:
         "jax_event": {"seconds": s_event,
                       "jobs_per_sec": js.n / max(s_event, 1e-12)},
         "jax_speedup": s_tick / max(s_event, 1e-12),
-        "parity": True,           # would have raised above
+        "parity": parity,         # computed; False never reaches here
         "parity_policies": parity_policies,
     }
 
@@ -116,10 +118,10 @@ def bench_scenario_suite(n_jobs: int = 256, n_nodes: int = 8,
     adapter (trace fixtures keep their native job counts): the
     reference event engine, plus ``jax_tick`` vs ``jax_event`` rows
     (``SimConfig.time_mode``) with tick-vs-event bit-parity re-verified
-    across the deterministic policy registry. Gang scenarios carry
-    reference rows only (the JAX engine models single-node jobs).
-    Jobset construction stays OUTSIDE the timed regions — these rows
-    measure the engines."""
+    across the deterministic policy registry. Gang scenarios
+    (gang-heavy, gang-trace-mix, the trace adapters) run the JAX
+    engine like everything else. Jobset construction stays OUTSIDE
+    the timed regions — these rows measure the engines."""
     cfg = api.make_config(policy, n_jobs=n_jobs, n_nodes=n_nodes,
                           seed=seed)
     out = {}
@@ -129,12 +131,10 @@ def bench_scenario_suite(n_jobs: int = 256, n_nodes: int = 8,
         res = simulator.simulate(cfg, js, mode="event")
         s = time.perf_counter() - t0
         out[name] = {"n_jobs": js.n, "seconds": s,
+                     "n_gangs": int((np.asarray(js.n_nodes) > 1).sum()),
                      "jobs_per_sec": metrics.sim_throughput(res, s),
                      "makespan_ticks": int(res.makespan)}
-        if (np.asarray(js.n_nodes) == 1).all():
-            out[name].update(bench_jax_tick_vs_event(cfg, js, seed))
-        else:
-            out[name]["jax"] = "skipped: gang (multi-node) jobs"
+        out[name].update(bench_jax_tick_vs_event(cfg, js, seed))
     return out
 
 
@@ -161,16 +161,54 @@ def bench_fitgpp_score_backend(n_jobs: int = 192, n_nodes: int = 84,
         s = time.perf_counter() - t0
         finishes[backend] = np.asarray(st.finish)
         out[backend] = {"seconds": s, "jobs_per_sec": n_jobs / max(s, 1e-12)}
-    if not (finishes["jnp"] == finishes["pallas"]).all():
+    parity = bool((finishes["jnp"] == finishes["pallas"]).all())
+    if not parity:
         raise AssertionError("score-backend parity violated: jnp vs pallas")
-    out["parity"] = True
+    out["parity"] = parity
     return out
+
+
+def _falsy_parity(obj, path: str = "") -> List[str]:
+    bad = []
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            here = f"{path}.{k}" if path else str(k)
+            if k == "parity" and not v:
+                bad.append(here)
+            bad.extend(_falsy_parity(v, here))
+    return bad
+
+
+def check_parity_rows(out: dict) -> List[str]:
+    """Problems with the artifact's parity rows: any falsy value, AND
+    any row where the expected ``parity`` key is missing entirely.
+
+    The benchmark raises in-run when a comparison fails, so a false
+    value should never be emitted — the real hazard is a refactor that
+    stops RUNNING a check and drops (or never writes) the key. The CI
+    gate therefore requires the key to be present on the tick-vs-event
+    row, on every scenario-suite row, and on the score-backend row."""
+    bad = _falsy_parity(out)
+    if "parity" not in out:
+        bad.append("missing: parity (reference tick-vs-event)")
+    suite = out.get("scenario_suite")
+    if not suite:
+        bad.append("missing: scenario_suite")
+    else:
+        bad.extend(f"missing: scenario_suite.{name}.parity"
+                   for name, row in suite.items() if "parity" not in row)
+    if "parity" not in out.get("fitgpp_score_backend", {}):
+        bad.append("missing: fitgpp_score_backend.parity")
+    return bad
 
 
 def emit_json(path: str = "BENCH_sim_engine.json") -> dict:
     out = bench_tick_vs_event()
     out["scenario_suite"] = bench_scenario_suite()
     out["fitgpp_score_backend"] = bench_fitgpp_score_backend()
+    bad = check_parity_rows(out)
+    if bad:
+        raise AssertionError(f"parity rows recorded False: {bad}")
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     return out
@@ -245,7 +283,18 @@ def main(argv=None) -> None:
     ap.add_argument("--json", action="store_true",
                     help="emit BENCH_sim_engine.json (tick vs event)")
     ap.add_argument("--out", default="BENCH_sim_engine.json")
+    ap.add_argument("--check-parity", metavar="PATH",
+                    help="validate an existing BENCH json: exit nonzero "
+                         "if any in-run parity row is false (CI gate)")
     args = ap.parse_args(argv)
+    if args.check_parity:
+        with open(args.check_parity) as f:
+            bad = check_parity_rows(json.load(f))
+        if bad:
+            raise SystemExit(f"parity rows false in {args.check_parity}: "
+                             f"{bad}")
+        print(f"{args.check_parity}: all parity rows true")
+        return
     if args.json:
         out = emit_json(args.out)
         print(json.dumps(out, indent=2))

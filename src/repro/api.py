@@ -13,13 +13,13 @@ and this facade is where they meet:
 
 ``run_experiment`` builds the config (validated against the policy
 registry at construction), builds the scenario's ``JobSet``, runs the
-chosen engine — ``"reference"`` (numpy; tick or event time
-advancement, gangs supported) or ``"jax"`` (jit/vmap-able
-fixed-capacity engine with the same tick/event mode switch
-(``SimConfig.time_mode``), ``score_backend="pallas"`` routing score
-policies through their registered kernel) — and normalizes the result
-into an :class:`ExperimentResult` with the paper-style tables, however
-it was produced.
+chosen engine — ``"reference"`` (numpy) or ``"jax"`` (jit/vmap-able
+fixed-capacity engine) — and normalizes the result into an
+:class:`ExperimentResult` with the paper-style tables, however it was
+produced. Both engines share the tick/event mode switch
+(``SimConfig.time_mode``), gang (multi-node) jobs and
+``SimConfig.backfill``; ``score_backend="pallas"`` routes score
+policies through their registered kernel on the JAX engine.
 
 Batched studies go through the same module: :func:`sensitivity_grid`
 and :func:`scenario_sweep` re-export the mesh-distributed vmapped
@@ -139,25 +139,28 @@ def run_experiment(scenario: str = DEFAULT_SCENARIO,
                    P: Optional[int] = None,
                    score_backend: Optional[str] = None,
                    backfill: Optional[bool] = None,
-                   mode: str = "event") -> ExperimentResult:
+                   mode: Optional[str] = None) -> ExperimentResult:
     """Run one (scenario, policy) experiment on the chosen engine.
 
     Any registered policy runs on any registered scenario through
     either engine with no engine edits — policies declare their
     backends once in ``core/policies.py``. ``jobs`` short-circuits the
     scenario build (e.g. to share one JobSet across policies);
-    ``mode`` ("event" | "tick") selects the time advancement on BOTH
-    engines (results are bit-identical either way; "event" compresses
-    no-op ticks — reference DESIGN.md §4, JAX §7). Engine-native
-    output is in ``.raw``.
+    ``mode`` ("event" | "tick", default ``cfg.time_mode`` — like every
+    other entry point) selects the time advancement on BOTH engines
+    (results are bit-identical either way; "event" compresses no-op
+    ticks — reference DESIGN.md §4, JAX §7). Engine-native output is
+    in ``.raw``.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
-    if mode not in ("event", "tick"):
+    if mode not in (None, "event", "tick"):
         raise ValueError(f"unknown mode {mode!r}; one of ('event', 'tick')")
     cfg = make_config(policy, base=cfg, n_jobs=n_jobs, n_nodes=n_nodes,
                       seed=seed, s=s, P=P, score_backend=score_backend,
                       backfill=backfill)
+    if mode is None:
+        mode = cfg.time_mode
     js = scenarios.build(scenario, cfg) if jobs is None else jobs
     if engine == "reference":
         table, intervals, pf, makespan, raw = _run_reference(cfg, js, mode)

@@ -94,11 +94,16 @@ class Policy:
     * ``jax_kind = "score"`` → ``jax_score(jobs, cand, node_cap, s)
       -> (N,)`` scores, LOWER = better victim (``cand`` masks running
       BE jobs for any normalizers). The engine applies Eq. 2
-      eligibility, the P cap, the masked argmin and the paper's
-      random fallback.
+      eligibility (against each victim's BEST assigned node — the
+      gang-aware ``best_victim_node`` reduction), the P cap, the
+      masked argmin and the paper's random fallback. For gang TEs the
+      engine re-evaluates the score over TOTAL gang demand
+      (``demand * width``) and runs the gang-select strategy instead.
     * extra ``score_backends`` → ``jax_score_accel(backend, jobs, te,
-      node_free, cand, under, node_cap, s) -> victim index or -1``
-      (score + masked argmin fused on an accelerated kernel).
+      free, assign, cand, under, node_cap, s) -> victim index or -1``
+      (score + best-node Eq. 2 reduction + masked argmin fused on an
+      accelerated kernel; ``free`` is the (nodes, 3) cluster free
+      matrix and ``assign`` the (jobs, nodes) placement-mask tile).
     """
     name = "base"
     preemptive = True
@@ -134,8 +139,8 @@ class Policy:
     def jax_score(self, jobs, cand, node_cap, s):
         raise NotImplementedError(f"{self.name}: no jax_score declared")
 
-    def jax_score_accel(self, backend, jobs, te, node_free, cand, under,
-                        node_cap, s):
+    def jax_score_accel(self, backend, jobs, te, free, assign, cand,
+                        under, node_cap, s):
         raise NotImplementedError(
             f"{self.name}: no accelerated score backend {backend!r}")
 
@@ -191,16 +196,17 @@ class FitGppPolicy(Policy):
         max_gp = jnp.maximum(jnp.max(jnp.where(cand, jobs.gp, 0)), 1e-12)
         return sz / max_sz + s * (jobs.gp / max_gp)
 
-    def jax_score_accel(self, backend, jobs, te, node_free, cand, under,
-                        node_cap, s):
-        """Eq. 1-4 score + masked argmin on the Pallas ``fitgpp_score``
-        kernel (bit-parity-tested vs ``jax_score``; requires static
-        ``s`` — it is baked into the kernel)."""
+    def jax_score_accel(self, backend, jobs, te, free, assign, cand,
+                        under, node_cap, s):
+        """Eq. 1-4 score + best-node Eq. 2 reduction + masked argmin on
+        the Pallas ``fitgpp_score`` kernel over the (jobs, nodes)
+        assignment tile (bit-parity-tested vs ``jax_score``; requires
+        static ``s`` — it is baked into the kernel)."""
         assert backend == "pallas", backend
         import jax.numpy as jnp
         from repro.kernels import ops as kops
         _, victim = kops.fitgpp_select(
-            jobs.demand, node_free, jobs.gp.astype(jnp.float32),
+            jobs.demand, assign, free, jobs.gp.astype(jnp.float32),
             cand, under, jobs.demand[te], node_cap, s=s)
         return victim
 

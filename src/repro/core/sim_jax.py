@@ -12,6 +12,20 @@ deterministic policies (fifo / lrtp / srtp / the score policies'
 main path); the random fallback and RAND use a jax PRNG and are
 excluded from exact parity (property-tested statistically instead).
 
+Gang (multi-node) jobs: placement state is an ``(n_jobs, n_nodes)``
+boolean assignment mask (``State.assign``) instead of a scalar node
+index, and every job carries its gang width (``Jobs.width``).
+Placement is all-or-nothing first-fit — the first ``width`` nodes
+whose free vector covers the PER-NODE demand — the vectorized mirror
+of ``engine/placement.ClusterState.fits_job``. Victims vacate and
+requeue all their nodes at once, Eq. 2 is evaluated against a
+multi-node victim's BEST node (the ``engine/preemption.
+best_victim_node`` reduction), and a blocked gang TE selects victims
+with the ``engine/preemption.gang_select`` strategy: the min-score
+single victim whose eviction alone frees enough nodes, falling back
+to accumulation in policy order (and signalling nothing when even
+preempting everyone would not suffice).
+
 Victim selection is registry-dispatched (``core/policy_registry.py``,
 DESIGN.md §6): ``make_tick`` builds its preemption trigger from the
 registered policy's JAX declaration — ``jax_kind == "rank"`` policies
@@ -19,7 +33,15 @@ feed :func:`_until_fits_select`, ``"score"`` policies feed
 :func:`_score_select` (Eq. 4 masked argmin + the paper's random
 fallback), and score policies may route the score + argmin through an
 accelerated kernel via ``SimConfig.score_backend`` (FitGpp's Pallas
-``fitgpp_score`` kernel as ``"pallas"``; parity-tested vs jnp).
+``fitgpp_score`` kernel as ``"pallas"``; it takes the (jobs, nodes)
+assignment tile and does the best-node Eq. 2 reduction in-kernel;
+parity-tested vs jnp). Gang TEs dispatch to :func:`_gang_select` on
+either contract.
+
+The BE queue is strict FIFO (head-of-line blocking) by default;
+``SimConfig.backfill`` enables the same bounded first-fit backfill
+scan as the reference ``SchedulerCore.schedule`` (skip up to
+``backfill_depth`` blocked jobs per pass, FIFO order otherwise).
 
 Time advancement (``SimConfig.time_mode``, DESIGN.md §7): the default
 ``"event"`` mode compresses runs of provably no-op ticks inside the
@@ -29,13 +51,14 @@ minimum over the next valid arrival, ``t + remaining`` of running
 jobs and ``t + grace_left`` of GRACE jobs), bulk-decrementing
 ``remaining``/``grace_left`` by the same ``dt``. The jump is gated by
 :func:`_make_would_act` — the vectorized mirror of the reference
-engine's ``SchedulerCore.schedule_would_act`` — so any tick on which
-the policy would be (re-)invoked still executes and the rng stream,
-every metric timestamp and the full State agree bit-for-bit with
-``"tick"`` mode at every event boundary. All of it is plain array
-math, so under ``vmap`` the jump ``dt`` is per-lane: ragged
-sentinel-padded batches and heterogeneous per-trial horizons each
-fast-forward at their own pace.
+engine's ``SchedulerCore.schedule_would_act``, gang fits and the
+backfill scan included — so any tick on which the policy would be
+(re-)invoked still executes and the rng stream, every metric
+timestamp and the full State agree bit-for-bit with ``"tick"`` mode
+at every event boundary. All of it is plain array math, so under
+``vmap`` the jump ``dt`` is per-lane: ragged sentinel-padded batches
+and heterogeneous per-trial horizons each fast-forward at their own
+pace.
 """
 from __future__ import annotations
 
@@ -60,18 +83,24 @@ _EPS = FIT_EPS    # one epsilon for every fit check, engine-wide
 class Jobs(NamedTuple):
     """Static workload arrays (device-resident).
 
+    ``demand`` is PER NODE; ``width`` is the gang width (1 for the
+    paper's single-task jobs) and the job needs ``width`` nodes
+    simultaneously (all-or-nothing gang placement).
+
     ``valid`` marks real jobs; False rows are sentinel padding added by
     ``sweep.stack_jobsets`` so jobsets of unequal ``n`` can share one
     vmapped batch. Sentinels are born DONE (``init_state``) — they never
     arrive, queue, run or get preempted — and are masked out of every
     percentile/mean in ``sweep`` and ``result_summary``, so a padded
     trial is bit-identical to its unpadded run (DESIGN.md §5).
+    Sentinels keep ``width == 1``.
     """
     submit: jax.Array        # (N,) i32
     exec_total: jax.Array    # (N,) i32
-    demand: jax.Array        # (N, 3) f32
+    demand: jax.Array        # (N, 3) f32, per node
     is_te: jax.Array         # (N,) bool
     gp: jax.Array            # (N,) i32
+    width: jax.Array         # (N,) i32 gang width (>= 1)
     valid: jax.Array         # (N,) bool
 
 
@@ -79,7 +108,7 @@ class State(NamedTuple):
     t: jax.Array
     state: jax.Array         # (N,) i32
     remaining: jax.Array     # (N,) i32
-    node: jax.Array          # (N,) i32
+    assign: jax.Array        # (N, n_nodes) bool placement mask
     preempt_count: jax.Array
     grace_left: jax.Array
     queue_key: jax.Array     # (N,) f32, +inf when not queued
@@ -96,24 +125,21 @@ class State(NamedTuple):
     n_done: jax.Array
     rng: jax.Array
     # () i32: victim selections that fell back past the main masked
-    # path (score policies' random fallback, rank policies' over-P-cap
-    # last resort). Observability for the invariant suite: when 0, the
-    # paper's P cap is exact — sum(max(preempt_count - P, 0)) never
-    # exceeds this counter.
+    # path (score policies' random fallback, rank/gang selections'
+    # over-P-cap last resort). Observability for the invariant suite:
+    # when 0, the paper's P cap is exact — sum(max(preempt_count - P,
+    # 0)) never exceeds this counter.
     fallback_count: jax.Array
 
 
 def jobs_from_jobset(js: JobSet) -> Jobs:
-    if js.n_nodes is not None and (np.asarray(js.n_nodes) != 1).any():
-        raise NotImplementedError(
-            "the JAX engine models single-node jobs; gang scheduling "
-            "(multi-node, paper future work) lives in core/simulator.py")
     return Jobs(
         submit=jnp.asarray(js.submit, jnp.int32),
         exec_total=jnp.asarray(js.exec_total, jnp.int32),
         demand=jnp.asarray(js.demand, jnp.float32),
         is_te=jnp.asarray(js.is_te, bool),
         gp=jnp.asarray(js.gp, jnp.int32),
+        width=jnp.asarray(js.n_nodes, jnp.int32),
         valid=jnp.ones(len(js.submit), bool),
     )
 
@@ -126,7 +152,7 @@ def init_state(jobs: Jobs, n_nodes: int, node_cap, seed) -> State:
         # sentinel (padding) jobs are born DONE: never arrive, never run
         state=jnp.where(jobs.valid, NOT_ARRIVED, DONE).astype(jnp.int32),
         remaining=jobs.exec_total.astype(jnp.int32),
-        node=jnp.full((N,), -1, jnp.int32),
+        assign=jnp.zeros((N, n_nodes), bool),
         preempt_count=jnp.zeros((N,), jnp.int32),
         grace_left=jnp.zeros((N,), jnp.int32),
         queue_key=jnp.full((N,), _INF, jnp.float32),
@@ -152,37 +178,75 @@ def init_state(jobs: Jobs, n_nodes: int, node_cap, seed) -> State:
 # primitives
 # ---------------------------------------------------------------------------
 
-def _first_fit(free: jax.Array, d: jax.Array) -> jax.Array:
+def _gang_fit(free: jax.Array, d: jax.Array, w: jax.Array):
+    """All-or-nothing first fit: (ok, node mask of the FIRST ``w``
+    nodes whose free vector covers the per-node demand ``d``). The
+    vectorized mirror of ``ClusterState.fits_job``; ``w == 1`` is
+    plain first-fit. The mask is all-False when the gang does not fit."""
     fits = jnp.all(free >= d[None, :] - _EPS, axis=1)
-    return jnp.where(fits.any(), jnp.argmax(fits), -1).astype(jnp.int32)
+    ok = jnp.sum(fits) >= w
+    mask = fits & (jnp.cumsum(fits) <= w) & ok
+    return ok, mask
+
+
+def _gang_fits(free: jax.Array, demand: jax.Array,
+               width: jax.Array) -> jax.Array:
+    """Per-job gang feasibility: (N,) bool, True where at least
+    ``width[j]`` nodes of ``free`` each cover ``demand[j]`` (the
+    vectorized form of ``_gang_fit(...)[0]`` over every job at once)."""
+    fits = jnp.all(free[None, :, :] >= demand[:, None, :] - _EPS, axis=2)
+    return jnp.sum(fits, axis=1) >= width
+
+
+def _best_victim_node(free: jax.Array, assign: jax.Array,
+                      demand: jax.Array, te_d: jax.Array):
+    """Eq. 2 glue (``engine/preemption.best_victim_node``): for every
+    job, the min-slack of ``free + own demand - te_demand`` per node
+    masked to the job's assigned nodes, and the argmax node — the node
+    a multi-node victim is evaluated (and accounted) against. Rows
+    with no assignment get ``-inf`` slack (never eligible)."""
+    slack = jnp.min(free[None, :, :] + demand[:, None, :]
+                    - te_d[None, None, :], axis=2)          # (N, nodes)
+    slack = jnp.where(assign, slack, -_INF)
+    return jnp.max(slack, axis=1), jnp.argmax(slack, axis=1)
 
 
 def _onehot(N: int, j: jax.Array) -> jax.Array:
     return jnp.arange(N) == j
 
 
-def _place(st: State, jobs: Jobs, j: jax.Array, node: jax.Array) -> State:
-    """Start job j on node (both scalars; assumes it fits)."""
+def _gang_release(assign: jax.Array, demand: jax.Array,
+                  mask: jax.Array) -> jax.Array:
+    """Summed per-node demand of the ``mask``-selected jobs over their
+    assigned nodes: (nodes, 3). One matmul replaces the scalar-node
+    scatter-add (exact for the integer/quantized demands)."""
+    sel = (assign & mask[:, None]).astype(demand.dtype)
+    return sel.T @ demand
+
+
+def _place(st: State, jobs: Jobs, j: jax.Array, nodes: jax.Array) -> State:
+    """Start job j on the ``nodes`` mask (assumes the gang fits)."""
     N = jobs.submit.shape[0]
     oh = _onehot(N, j)
     resumed = st.awaiting_resume[j]
     return st._replace(
         state=jnp.where(oh, RUNNING, st.state),
-        node=jnp.where(oh, node, st.node),
+        assign=jnp.where(oh[:, None], nodes[None, :], st.assign),
         queue_key=jnp.where(oh, _INF, st.queue_key),
-        free=st.free.at[node].add(-jobs.demand[j]),
+        free=st.free - jobs.demand[j][None, :]
+        * nodes[:, None].astype(jnp.float32),
         last_resume=jnp.where(oh & resumed, st.t, st.last_resume),
         awaiting_resume=st.awaiting_resume & ~oh,
     )
 
 
 def _signal_one(st: State, jobs: Jobs, v: jax.Array, te: jax.Array) -> State:
-    """Signal preemption of running BE job v for TE job te (scalars)."""
+    """Signal preemption of running BE job v for TE job te (scalars).
+    Gang victims promise / vacate ALL their nodes at once."""
     N = jobs.submit.shape[0]
     oh = _onehot(N, v)
     gp0 = jobs.gp[v] == 0
-    node = st.node[v]
-    d = jobs.demand[v]
+    d = jobs.demand[v][None, :] * st.assign[v][:, None].astype(jnp.float32)
     te_oh = _onehot(N, te)
     st = st._replace(
         preempt_count=st.preempt_count + oh.astype(jnp.int32),
@@ -192,10 +256,10 @@ def _signal_one(st: State, jobs: Jobs, v: jax.Array, te: jax.Array) -> State:
     # GP == 0: vacate inline (same tick), matching the reference.
     vac = st._replace(
         state=jnp.where(oh, QUEUED, st.state),
-        node=jnp.where(oh, -1, st.node),
+        assign=st.assign & ~oh[:, None],
         queue_key=jnp.where(oh, st.top_key, st.queue_key),
         top_key=st.top_key - 1.0,
-        free=st.free.at[node].add(d),
+        free=st.free + d,
         last_vacate=jnp.where(oh, st.t, st.last_vacate),
     )
     # GP > 0: enter grace; resources become "pending".
@@ -204,7 +268,7 @@ def _signal_one(st: State, jobs: Jobs, v: jax.Array, te: jax.Array) -> State:
         grace_left=jnp.where(oh, jobs.gp[v], st.grace_left),
         victim_of=jnp.where(oh, te, st.victim_of),
         te_pending=st.te_pending + te_oh.astype(jnp.int32),
-        pending_free=st.pending_free.at[node].add(d),
+        pending_free=st.pending_free + d,
     )
     return jax.tree.map(lambda a, b: jnp.where(gp0, a, b), vac, grc)
 
@@ -218,24 +282,25 @@ def _score_select(st: State, jobs: Jobs, te: jax.Array, pol, node_cap, s,
     """Generic score-policy selection -> (state with advanced rng, victim).
 
     The policy's ``jax_score`` gives per-job scores (lower = better
-    victim); this applies Eq. 2 eligibility, the P cap and the Eq. 4
+    victim); this applies Eq. 2 eligibility — evaluated against each
+    victim's BEST node (``_best_victim_node``), so gang victims are
+    judged where they have the most slack — the P cap and the Eq. 4
     masked argmin, with the paper's random-candidate fallback when no
-    job passes the masks. ``backend != "jnp"`` fuses score + masked
-    argmin on the policy's registered accelerated kernel
-    (``jax_score_accel``; returns -1 when nothing passes).
+    job passes the masks. ``backend != "jnp"`` fuses score, best-node
+    reduction and masked argmin on the policy's registered accelerated
+    kernel (``jax_score_accel``; returns -1 when nothing passes).
     """
     cand = (st.state == RUNNING) & ~jobs.is_te
-    safe_node = jnp.maximum(st.node, 0)
-    node_free = st.free[safe_node]                      # (N, 3)
     under = st.preempt_count < P
     if backend != "jnp":
-        main = pol.jax_score_accel(backend, jobs, te, node_free, cand,
-                                   under, node_cap, s)
+        main = pol.jax_score_accel(backend, jobs, te, st.free, st.assign,
+                                   cand, under, node_cap, s)
         mask_any = main >= 0
     else:
         score = pol.jax_score(jobs, cand, node_cap, s)
-        elig = jnp.all(jobs.demand[te][None, :] <= jobs.demand + node_free
-                       + _EPS, axis=1)
+        best_slack, _ = _best_victim_node(st.free, st.assign, jobs.demand,
+                                          jobs.demand[te])
+        elig = best_slack >= -_EPS
         mask = cand & elig & under
         main = jnp.argmin(jnp.where(mask, score, _INF)).astype(jnp.int32)
         mask_any = mask.any()
@@ -251,15 +316,17 @@ def _score_select(st: State, jobs: Jobs, te: jax.Array, pol, node_cap, s,
 
 
 def _resolve_score_backend(cfg: SimConfig, spec, s) -> str:
-    """Effective score backend: ``cfg.score_backend``, overridable by
-    the deprecated ``REPRO_SIM_KERNEL=1`` env switch. Accelerated
+    """Effective score backend: ``cfg.score_backend``. Accelerated
     backends need a static ``s`` (it is baked into the kernel), so
     traced-s sweeps — and policies without the backend — fall back to
     the jnp path silently. Any static Python number counts as static
     (an int ``s`` must not silently downgrade a requested kernel)."""
+    if os.environ.get("REPRO_SIM_KERNEL") is not None:
+        raise RuntimeError(
+            "the REPRO_SIM_KERNEL env override was removed; select the "
+            "accelerated score path with SimConfig(score_backend='pallas') "
+            "(or --score-backend on the scenarios CLI) instead")
     backend = cfg.score_backend
-    if os.environ.get("REPRO_SIM_KERNEL") == "1":
-        backend = "pallas"
     static_s = isinstance(s, (int, float)) and not isinstance(s, bool)
     if backend != "jnp" and (backend not in spec.score_backends
                              or not static_s):
@@ -270,19 +337,25 @@ def _resolve_score_backend(cfg: SimConfig, spec, s) -> str:
 def _until_fits_select(st: State, jobs: Jobs, te: jax.Array, rank_val,
                        P) -> State:
     """LRTP/RAND: keep signalling victims (best ``rank_val`` first,
-    under-P-cap first) until the TE fits on the last victim's node,
-    counting that node's free + signalled demand."""
+    under-P-cap first) until the TE fits on the last victim's BEST
+    node, counting the demand signalled there so far. Mirrors
+    ``policies._preempt_until_fits`` over the invocation snapshot:
+    victims are accounted at the node ``engine/preemption.
+    best_victim_node`` would pick (their only node when single-node),
+    chosen once from the free vectors at trigger time."""
     N = jobs.submit.shape[0]
     te_d = jobs.demand[te]
     n_nodes = st.free.shape[0]
+    free0 = st.free                                # invocation snapshot
+    _, best_node = _best_victim_node(free0, st.assign, jobs.demand, te_d)
 
     def cond(carry):
-        st, taken, own_pending, satisfied = carry
+        st, taken, pending, satisfied = carry
         cand = (st.state == RUNNING) & ~jobs.is_te & ~taken
         return (~satisfied) & cand.any()
 
     def body(carry):
-        st, taken, own_pending, _ = carry
+        st, taken, pending, _ = carry
         cand = (st.state == RUNNING) & ~jobs.is_te & ~taken
         under = st.preempt_count < P
         # under-cap candidates first, then by rank_val descending
@@ -291,20 +364,18 @@ def _until_fits_select(st: State, jobs: Jobs, te: jax.Array, rank_val,
         m1 = cand & under
         pick_from = jnp.where(m1.any(), m1, cand)
         v = jnp.argmax(jnp.where(pick_from, rank_val, -_INF)).astype(jnp.int32)
-        node = st.node[v]
-        gp0 = jobs.gp[v] == 0
+        node = best_node[v]
         st = st._replace(
             fallback_count=st.fallback_count + (~m1.any()).astype(jnp.int32))
         st = _signal_one(st, jobs, v, te)
-        # Count only THIS selection's signalled demand as incoming supply
-        # (other TEs' in-flight grace periods are already spoken for) —
-        # mirrors policies._preempt_until_fits. GP=0 victims vacate
-        # inline, so their demand lands in st.free directly.
-        own_pending = own_pending.at[node].add(
-            jobs.demand[v] * (~gp0).astype(jnp.float32))
-        avail = st.free[node] + own_pending[node]
-        satisfied = jnp.all(te_d <= avail + _EPS)
-        return st, taken | _onehot(N, v), own_pending, satisfied
+        # Accumulate each selection's demand at its best node and test
+        # the TE there against the snapshot — mirrors
+        # policies._preempt_until_fits (pending starts at free, adds
+        # every victim regardless of GP; GP=0 inline vacates are part
+        # of that same accounting).
+        pending = pending.at[node].add(jobs.demand[v])
+        satisfied = jnp.all(te_d <= free0[node] + pending[node] + _EPS)
+        return st, taken | _onehot(N, v), pending, satisfied
 
     st, _, _, _ = jax.lax.while_loop(
         cond, body, (st, jnp.zeros((N,), bool),
@@ -313,52 +384,131 @@ def _until_fits_select(st: State, jobs: Jobs, te: jax.Array, rank_val,
     return st
 
 
-# ---------------------------------------------------------------------------
-# one tick
-# ---------------------------------------------------------------------------
+def _gang_select(st: State, jobs: Jobs, te: jax.Array, rank_val, P,
+                 score=None) -> State:
+    """Multi-node TE: the vectorized mirror of
+    ``engine/preemption.gang_select``. With ``score`` (Eq. 4-style
+    argmin policies; LOWER = better victim, computed over TOTAL gang
+    demand), prefer the min-score SINGLE victim whose eviction alone
+    yields >= width satisfying nodes — restricted to under-P-cap
+    candidates when any exist; otherwise accumulate victims in policy
+    order (``rank_val`` HIGHER = preempt first, under-cap first) until
+    the gang fits, and signal NOTHING when even preempting every
+    candidate would not suffice (signalling then would burn preemption
+    budget for no gain). Over-P-cap signals count into
+    ``fallback_count`` (the P-cap invariant's allowance)."""
+    N = jobs.submit.shape[0]
+    te_d = jobs.demand[te]
+    w = jobs.width[te]
+    free0 = st.free
+    cand0 = (st.state == RUNNING) & ~jobs.is_te
+    under0 = st.preempt_count < P
 
-def _scatter_free(free, node, demand, mask):
-    safe = jnp.where(mask, node, 0)
-    w = demand * mask[:, None].astype(demand.dtype)
-    return free.at[safe].add(w)
+    def n_fit(fr):
+        return jnp.sum(jnp.all(fr >= te_d[None, :] - _EPS, axis=1))
+
+    if score is not None:
+        # single-eviction sufficiency: free + the victim's demand on
+        # each of its nodes must yield >= width fitting nodes
+        trial = free0[None, :, :] + jobs.demand[:, None, :] \
+            * st.assign[:, :, None].astype(jnp.float32)
+        nfit1 = jnp.sum(jnp.all(trial >= te_d[None, None, :] - _EPS,
+                                axis=2), axis=1)
+        pool = cand0 & jnp.where((cand0 & under0).any(), under0, True)
+        single = pool & (nfit1 >= w)
+        v1 = jnp.argmin(jnp.where(single, score, _INF)).astype(jnp.int32)
+        have_single = single.any()
+    else:
+        v1 = jnp.int32(0)
+        have_single = jnp.asarray(False)
+
+    # accumulation (pure — no signals until the whole set is known to
+    # suffice): walk candidates in policy order, recording selection
+    # sequence numbers, until >= width nodes fit the TE
+    def acc_cond(carry):
+        taken, pending, satisfied, nsel, seq = carry
+        return (~satisfied) & (cand0 & ~taken).any()
+
+    def acc_body(carry):
+        taken, pending, satisfied, nsel, seq = carry
+        c = cand0 & ~taken
+        m1 = c & under0
+        pick = jnp.where(m1.any(), m1, c)
+        v = jnp.argmax(jnp.where(pick, rank_val, -_INF)).astype(jnp.int32)
+        pending = pending + jobs.demand[v][None, :] \
+            * st.assign[v][:, None].astype(jnp.float32)
+        return (taken | _onehot(N, v), pending, n_fit(pending) >= w,
+                nsel + 1, seq.at[v].set(nsel))
+
+    taken, pending, satisfied, nsel, seq = jax.lax.while_loop(
+        acc_cond, acc_body,
+        (jnp.zeros((N,), bool), free0, n_fit(free0) >= w,
+         jnp.int32(0), jnp.full((N,), -1, jnp.int32)))
+
+    def signal_single(st):
+        st = st._replace(fallback_count=st.fallback_count
+                         + (~under0[v1]).astype(jnp.int32))
+        return _signal_one(st, jobs, v1, te)
+
+    def signal_accum(st):
+        n_sig = jnp.where(satisfied, nsel, 0)   # insufficient -> nothing
+
+        def sig_cond(carry):
+            return carry[1] < n_sig
+
+        def sig_body(carry):
+            st, k = carry
+            v = jnp.argmax(seq == k).astype(jnp.int32)
+            st = st._replace(fallback_count=st.fallback_count
+                             + (~under0[v]).astype(jnp.int32))
+            return _signal_one(st, jobs, v, te), k + 1
+
+        st, _ = jax.lax.while_loop(sig_cond, sig_body, (st, jnp.int32(0)))
+        return st
+
+    return jax.lax.cond(have_single, signal_single, signal_accum, st)
 
 
 # ---------------------------------------------------------------------------
 # event-compressed time advancement (SimConfig.time_mode, DESIGN.md §7)
 # ---------------------------------------------------------------------------
 
-def _fits_anywhere(free: jax.Array, demand: jax.Array) -> jax.Array:
-    """Per-job first-fit feasibility: (N,) bool, True where any node's
-    ``free`` vector covers ``demand[j]`` (the vectorized form of
-    ``_first_fit(...) >= 0`` over every job at once)."""
-    return jnp.any(jnp.all(free[None, :, :] >= demand[:, None, :] - _EPS,
-                           axis=2), axis=1)
-
-
-def _make_would_act(jobs: Jobs, preemptive: bool):
+def _make_would_act(jobs: Jobs, preemptive: bool, backfill: bool = False,
+                    backfill_depth: int = 64):
     """Vectorized mirror of ``SchedulerCore.schedule_would_act``.
 
     True whenever a schedule pass on this State could start a job or
-    (re-)invoke victim selection: a queued TE fits, a queued TE's
-    preemption trigger is armed (``te_pending == 0``, does not fit even
-    counting ``pending_free``, running BE candidates exist), or the BE
-    head fits. Deliberately conservative in the same way as the
-    reference: a fruitless policy invocation still counts, because RAND
-    and the score policies' random fallback consume rng on every
-    invocation — this is what keeps the event jump bit-exact for the
-    stochastic paths too (DESIGN.md §4/§7).
+    (re-)invoke victim selection: a queued TE's gang fits, a queued
+    TE's preemption trigger is armed (``te_pending == 0``, does not fit
+    even counting ``pending_free``, running BE candidates exist), the
+    BE head fits — or, under backfill, any of the first
+    ``backfill_depth`` queued BE jobs (queue order) fits. Deliberately
+    conservative in the same way as the reference: a fruitless policy
+    invocation still counts, because RAND and the score policies'
+    random fallback consume rng on every invocation — this is what
+    keeps the event jump bit-exact for the stochastic paths too
+    (DESIGN.md §4/§7).
     """
+    N = jobs.submit.shape[0]
+    depth = min(int(backfill_depth), N)
 
     def would_act(st: State) -> jax.Array:
         queued = st.state == QUEUED
         be_q = queued & ~jobs.is_te if preemptive else queued
-        head = jnp.argmin(jnp.where(be_q, st.queue_key, _INF))
-        act = be_q.any() & (_first_fit(st.free, jobs.demand[head]) >= 0)
+        fits_now = _gang_fits(st.free, jobs.demand, jobs.width)
+        if not backfill:
+            head = jnp.argmin(jnp.where(be_q, st.queue_key, _INF))
+            act = be_q.any() & fits_now[head]
+        else:
+            # the reference scan examines the first `depth` jobs in
+            # queue order and acts iff any of them fits
+            order = jnp.argsort(jnp.where(be_q, st.queue_key, _INF))
+            scan = order[:depth]
+            act = (be_q[scan] & fits_now[scan]).any()
         if preemptive:
             te_q = queued & jobs.is_te
-            fits_now = _fits_anywhere(st.free, jobs.demand)
-            fits_pend = _fits_anywhere(st.free + st.pending_free,
-                                       jobs.demand)
+            fits_pend = _gang_fits(st.free + st.pending_free,
+                                   jobs.demand, jobs.width)
             has_cand = ((st.state == RUNNING) & ~jobs.is_te).any()
             trigger = (st.te_pending == 0) & ~fits_pend & has_cand
             act = act | (te_q & (fits_now | trigger)).any()
@@ -368,7 +518,8 @@ def _make_would_act(jobs: Jobs, preemptive: bool):
 
 
 def _make_event_advance(jobs: Jobs, preemptive: bool, n_jobs: int,
-                        max_ticks: int):
+                        max_ticks: int, backfill: bool,
+                        backfill_depth: int):
     """Build the post-tick event jump: advance ``dt`` quanta in one
     step, where ``dt`` is the gap to the next event — the masked
     minimum over (next valid arrival, ``t + remaining`` of running
@@ -380,7 +531,7 @@ def _make_event_advance(jobs: Jobs, preemptive: bool, n_jobs: int,
     adjustment because every tick that records them still executes.
     Plain array math: under ``vmap`` the jump is per-lane.
     """
-    would_act = _make_would_act(jobs, preemptive)
+    would_act = _make_would_act(jobs, preemptive, backfill, backfill_depth)
     big = jnp.int32(max_ticks)
 
     def advance(st: State) -> State:
@@ -440,11 +591,34 @@ def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
 
     def trigger_preemption(st: State, te: jax.Array) -> State:
         if spec.jax_kind == "score":
-            st, v = _score_select(st, jobs, te, pol, node_cap, s, P,
-                                  backend)
-            return _signal_one(st, jobs, v, te)
-        st, rank = pol.jax_rank(st, jobs)      # may consume st.rng
-        return _until_fits_select(st, jobs, te, rank, P)
+            def width1(s_):
+                s_, v = _score_select(s_, jobs, te, pol, node_cap, s, P,
+                                      backend)
+                return _signal_one(s_, jobs, v, te)
+
+            def gang(s_):
+                # gang ordering keys on the score of the TOTAL gang
+                # demand (mirror of gang_select's rank_key call on
+                # cand_demand * cand_width); no rng — the gang path
+                # has no random fallback, matching the reference
+                cand = (s_.state == RUNNING) & ~jobs.is_te
+                total = jobs._replace(
+                    demand=jobs.demand * jobs.width[:, None]
+                    .astype(jnp.float32))
+                gscore = pol.jax_score(total, cand, node_cap, s)
+                return _gang_select(s_, jobs, te, -gscore, P, score=gscore)
+
+            return jax.lax.cond(jobs.width[te] == 1, width1, gang, st)
+
+        def width1(s_):
+            s_, rank = pol.jax_rank(s_, jobs)      # may consume s_.rng
+            return _until_fits_select(s_, jobs, te, rank, P)
+
+        def gang(s_):
+            s_, rank = pol.jax_rank(s_, jobs)      # may consume s_.rng
+            return _gang_select(s_, jobs, te, rank, P)
+
+        return jax.lax.cond(jobs.width[te] == 1, width1, gang, st)
 
     def te_lane(st: State) -> State:
         def cond(carry):
@@ -456,42 +630,44 @@ def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
             st, processed = carry
             q = (st.state == QUEUED) & jobs.is_te & ~processed
             j = jnp.argmin(jnp.where(q, st.queue_key, _INF)).astype(jnp.int32)
-            node = _first_fit(st.free, jobs.demand[j])
+            ok, nodes = _gang_fit(st.free, jobs.demand[j], jobs.width[j])
 
             def place(st):
-                return st if False else _place(st, jobs, j, node)
+                return _place(st, jobs, j, nodes)
 
             def blocked(st):
                 promised = st.free + st.pending_free
-                fits_pending = jnp.all(
-                    promised >= jobs.demand[j][None, :] - _EPS, axis=1).any()
+                fits_pending = jnp.sum(jnp.all(
+                    promised >= jobs.demand[j][None, :] - _EPS,
+                    axis=1)) >= jobs.width[j]
                 has_cand = ((st.state == RUNNING) & ~jobs.is_te).any()
                 do = (st.te_pending[j] == 0) & ~fits_pending & has_cand
                 st = jax.lax.cond(do,
                                   lambda s_: trigger_preemption(s_, j),
                                   lambda s_: s_, st)
                 # GP=0 victims vacate inline: place the TE NOW, before
-                # the BE pass can reclaim the freed node (mirrors the
+                # the BE pass can reclaim the freed nodes (mirrors the
                 # reference).
-                node2 = _first_fit(st.free, jobs.demand[j])
-                return jax.lax.cond(do & (node2 >= 0),
-                                    lambda s_: _place(s_, jobs, j, node2),
+                ok2, nodes2 = _gang_fit(st.free, jobs.demand[j],
+                                        jobs.width[j])
+                return jax.lax.cond(do & ok2,
+                                    lambda s_: _place(s_, jobs, j, nodes2),
                                     lambda s_: s_, st)
 
-            st = jax.lax.cond(node >= 0, place, blocked, st)
+            st = jax.lax.cond(ok, place, blocked, st)
             return st, processed | _onehot(N, j)
 
         st, _ = jax.lax.while_loop(cond, body,
                                    (st, jnp.zeros((N,), bool)))
         return st
 
-    def be_queue(st: State) -> State:
-        def head_mask(st):
-            q = st.state == QUEUED
-            if preemptive:
-                q = q & ~jobs.is_te
-            return q
+    def head_mask(st):
+        q = st.state == QUEUED
+        if preemptive:
+            q = q & ~jobs.is_te
+        return q
 
+    def be_queue(st: State) -> State:
         def cond(carry):
             st, blocked = carry
             return (~blocked) & head_mask(st).any()
@@ -500,13 +676,41 @@ def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
             st, _ = carry
             q = head_mask(st)
             j = jnp.argmin(jnp.where(q, st.queue_key, _INF)).astype(jnp.int32)
-            node = _first_fit(st.free, jobs.demand[j])
-            st = jax.lax.cond(node >= 0,
-                              lambda s_: _place(s_, jobs, j, node),
+            ok, nodes = _gang_fit(st.free, jobs.demand[j], jobs.width[j])
+            st = jax.lax.cond(ok,
+                              lambda s_: _place(s_, jobs, j, nodes),
                               lambda s_: s_, st)
-            return st, node < 0
+            return st, ~ok
 
         st, _ = jax.lax.while_loop(cond, body, (st, jnp.asarray(False)))
+        return st
+
+    def be_queue_backfill(st: State) -> State:
+        """Bounded first-fit backfill (``SchedulerCore.schedule``'s
+        beyond-paper branch): walk the BE queue in FIFO order, start
+        whatever fits, skip (at most ``backfill_depth``) whatever does
+        not — skipped jobs keep their keys and are not revisited this
+        pass."""
+        depth = jnp.int32(cfg.backfill_depth)
+
+        def cond(carry):
+            st, skipped, scanned = carry
+            q = head_mask(st) & ~skipped
+            return q.any() & (scanned < depth)
+
+        def body(carry):
+            st, skipped, scanned = carry
+            q = head_mask(st) & ~skipped
+            j = jnp.argmin(jnp.where(q, st.queue_key, _INF)).astype(jnp.int32)
+            ok, nodes = _gang_fit(st.free, jobs.demand[j], jobs.width[j])
+            st = jax.lax.cond(ok,
+                              lambda s_: _place(s_, jobs, j, nodes),
+                              lambda s_: s_, st)
+            return (st, skipped | (~ok & _onehot(N, j)),
+                    scanned + (~ok).astype(jnp.int32))
+
+        st, _, _ = jax.lax.while_loop(
+            cond, body, (st, jnp.zeros((N,), bool), jnp.int32(0)))
         return st
 
     def tick(st: State) -> State:
@@ -524,31 +728,31 @@ def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
         n_vac = jnp.sum(vac)
         te_dec = jnp.zeros((N,), jnp.int32).at[
             jnp.where(vac, st.victim_of, N)].add(1, mode="drop")
+        freed = _gang_release(st.assign, jobs.demand, vac)
         st = st._replace(
             queue_key=jnp.where(vac, st.top_key - rank.astype(jnp.float32),
                                 st.queue_key),
             top_key=st.top_key - n_vac.astype(jnp.float32),
-            free=_scatter_free(st.free, st.node, jobs.demand, vac),
-            pending_free=_scatter_free(st.pending_free, st.node,
-                                       -jobs.demand, vac),
+            free=st.free + freed,
+            pending_free=st.pending_free - freed,
             last_vacate=jnp.where(vac, t, st.last_vacate),
             te_pending=st.te_pending - te_dec,
             victim_of=jnp.where(vac, -1, st.victim_of),
-            node=jnp.where(vac, -1, st.node),
+            assign=st.assign & ~vac[:, None],
             state=jnp.where(vac, QUEUED, st.state),
         )
         # schedule
         if preemptive:
             st = te_lane(st)
-        st = be_queue(st)
+        st = be_queue_backfill(st) if cfg.backfill else be_queue(st)
         # run one minute
         running = st.state == RUNNING
         remaining = st.remaining - running.astype(jnp.int32)
         fin = running & (remaining <= 0)
         st = st._replace(
             remaining=remaining,
-            free=_scatter_free(st.free, st.node, jobs.demand, fin),
-            node=jnp.where(fin, -1, st.node),
+            free=st.free + _gang_release(st.assign, jobs.demand, fin),
+            assign=st.assign & ~fin[:, None],
             state=jnp.where(fin, DONE, st.state),
             finish=jnp.where(fin, t + 1, st.finish),
             n_done=st.n_done + jnp.sum(fin),
@@ -559,7 +763,8 @@ def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
 
     if time_mode == "tick":
         return tick
-    advance = _make_event_advance(jobs, preemptive, N, max_ticks)
+    advance = _make_event_advance(jobs, preemptive, N, max_ticks,
+                                  cfg.backfill, cfg.backfill_depth)
 
     def event_step(st: State) -> State:
         return advance(tick(st))

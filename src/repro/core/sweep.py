@@ -30,11 +30,12 @@ from repro.core.types import JobSet
 def pad_jobs(jobs: sim_jax.Jobs, n_max: int) -> sim_jax.Jobs:
     """Pad a Jobs struct to ``n_max`` rows with sentinel jobs.
 
-    Sentinels carry zero demand, unit execution and ``valid=False``;
-    ``sim_jax.init_state`` births them DONE so they never arrive, queue,
-    run or appear as preemption candidates, and every percentile in
-    ``_trial_result`` masks them out (the sentinel-padding contract,
-    DESIGN.md §5)."""
+    Sentinels carry zero demand, unit execution, ``width=1`` and
+    ``valid=False``; ``sim_jax.init_state`` births them DONE so they
+    never arrive, queue, run or appear as preemption candidates, and
+    every percentile in ``_trial_result`` masks them out (the
+    sentinel-padding contract, DESIGN.md §5). Real rows keep their
+    gang widths through the padding."""
     pad = n_max - jobs.submit.shape[0]
     if pad < 0:
         raise ValueError(f"cannot pad {jobs.submit.shape[0]} jobs "
@@ -49,7 +50,8 @@ def pad_jobs(jobs: sim_jax.Jobs, n_max: int) -> sim_jax.Jobs:
     return sim_jax.Jobs(
         submit=ext(jobs.submit, 0), exec_total=ext(jobs.exec_total, 1),
         demand=ext(jobs.demand, 0.0), is_te=ext(jobs.is_te, False),
-        gp=ext(jobs.gp, 0), valid=ext(jobs.valid, False))
+        gp=ext(jobs.gp, 0), width=ext(jobs.width, 1),
+        valid=ext(jobs.valid, False))
 
 
 def stack_jobsets(jobsets: Sequence[JobSet]) -> sim_jax.Jobs:
@@ -58,7 +60,9 @@ def stack_jobsets(jobsets: Sequence[JobSet]) -> sim_jax.Jobs:
     Equal-``n`` jobsets stack directly (the original fast path). Ragged
     collections — heterogeneous scenarios, trace replays — are padded to
     the max ``n`` with masked sentinel jobs (``pad_jobs``), so one
-    vmapped/shard_mapped sweep can span them all."""
+    vmapped/shard_mapped sweep can span them all. Gang widths
+    (``JobSet.n_nodes`` → ``Jobs.width``) ride through both paths;
+    sentinel rows stay width-1."""
     js = [sim_jax.jobs_from_jobset(j) for j in jobsets]
     n_max = max(j.submit.shape[0] for j in js)
     if any(j.submit.shape[0] != n_max for j in js):
@@ -178,22 +182,15 @@ def scenario_sweep(cfg: SimConfig, names: Sequence[str],
                    ) -> Dict[str, np.ndarray]:
     """Ragged multi-scenario grid: all (scenario, seed) trials in ONE
     vmapped batch, even when the scenarios produce different job counts
-    (sentinel padding, ``stack_jobsets``). Gang scenarios are rejected —
-    the JAX engine models single-node jobs (DESIGN.md §7).
+    (sentinel padding, ``stack_jobsets``) or gang (multi-node) jobs —
+    widths ride through the padding (DESIGN.md §7).
 
     Returns arrays of shape (len(names), len(seeds), ...).
     """
     from repro import scenarios
 
-    jobsets = []
-    for name in names:
-        for sd in seeds:
-            js = scenarios.build(name, dataclasses.replace(cfg, seed=sd))
-            if (np.asarray(js.n_nodes) != 1).any():
-                raise NotImplementedError(
-                    f"scenario {name!r} produces gang (multi-node) jobs; "
-                    "sweep it through the reference engine instead")
-            jobsets.append(js)
+    jobsets = [scenarios.build(name, dataclasses.replace(cfg, seed=sd))
+               for name in names for sd in seeds]
     stacked = stack_jobsets(jobsets)
 
     nn, nt = len(names), len(seeds)

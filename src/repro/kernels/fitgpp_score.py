@@ -1,11 +1,15 @@
 """FitGpp victim selection (Eq. 1-4) — Pallas TPU kernel.
 
 The scheduler's per-event hot loop at cluster scale: for J running BE
-jobs, compute the Eq. 3 score, apply the Eq. 2 eligibility + P-cap masks,
-and take the masked argmin — in one sweep over J with jobs on the vector
-lanes. Inputs are struct-of-arrays (J,) vectors; the Eq. 3 normalizers
-(max Size, max GP over running BE jobs) are cheap global reductions done
-by XLA outside and passed in as scalars.
+jobs over M nodes, compute the Eq. 3 score, apply the Eq. 2
+eligibility — evaluated against each candidate's BEST assigned node
+(the gang-aware ``engine/preemption.best_victim_node`` reduction,
+done in-kernel over the (jobs, nodes) assignment tile) — and the
+P-cap mask, and take the masked argmin — in one sweep over J with
+jobs on the vector lanes. Inputs are struct-of-arrays (J,) vectors
+plus the (J, M) assignment tile and the (M, 3) cluster free matrix;
+the Eq. 3 normalizers (max Size, max GP over running BE jobs) are
+cheap global reductions done by XLA outside and passed in as scalars.
 
 Outputs: per-job scores (for introspection) and the victim index
 (-1 when no job passes the masks — the caller falls back to the paper's
@@ -20,13 +24,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.engine.placement import FIT_EPS
 from repro.kernels.pltpu_compat import CompilerParams
 
 DEFAULT_BLOCK_J = 512
 _INF = jnp.inf
 
 
-def _kernel(scal_ref, dem_ref, free_ref, gp_ref, mask_ref,
+def _kernel(scal_ref, dem_ref, free_ref, asg_ref, gp_ref, mask_ref,
             score_ref, idx_ref, best_scr, *, block_j: int):
     ji = pl.program_id(0)
     nj = pl.num_programs(0)
@@ -37,18 +42,25 @@ def _kernel(scal_ref, dem_ref, free_ref, gp_ref, mask_ref,
         best_scr[0, 1] = -1.0          # best index
 
     s_par = scal_ref[0]                # (8,): te_c te_r te_g  cap_c cap_r
-    te = s_par[0:3]                    # cap_g  max_sz*? ...
+    te = s_par[0:3]                    # cap_g  max_sz max_gp
     cap = s_par[3:6]
     max_sz, max_gp = s_par[6], s_par[7]
     s_w = scal_ref[1, 0]               # Eq. 3 s parameter
     dem = dem_ref[0].astype(jnp.float32)     # (bj, 3)
-    free = free_ref[0].astype(jnp.float32)   # (bj, 3)
+    free = free_ref[0].astype(jnp.float32)   # (M, 3) cluster free
+    asg = asg_ref[0] > 0                     # (bj, M) assignment tile
     gp = gp_ref[0].astype(jnp.float32)       # (bj,)
     ok = mask_ref[0] > 0                     # running BE & under P cap
 
     size = jnp.sqrt(jnp.sum(jnp.square(dem / cap[None, :]), axis=1))
     score = size / max_sz + s_w * (gp / max_gp)
-    elig = jnp.all(te[None, :] <= dem + free, axis=1)
+    # Eq. 2 against the candidate's BEST node: the per-node min-slack
+    # of free + own demand - te demand, maximized over assigned nodes
+    # (rows with no assignment stay -inf and are never eligible)
+    slack = jnp.min(free[None, :, :] + dem[:, None, :]
+                    - te[None, None, :], axis=2)        # (bj, M)
+    best = jnp.max(jnp.where(asg, slack, -_INF), axis=1)
+    elig = best >= -FIT_EPS
     allowed = ok & elig
     val = jnp.where(allowed, score, _INF)
 
@@ -67,13 +79,15 @@ def _kernel(scal_ref, dem_ref, free_ref, gp_ref, mask_ref,
             .astype(jnp.int32)
 
 
-def fitgpp_score(demand: jax.Array, node_free: jax.Array, gp: jax.Array,
-                 mask: jax.Array, te_demand: jax.Array,
+def fitgpp_score(demand: jax.Array, free: jax.Array, assign: jax.Array,
+                 gp: jax.Array, mask: jax.Array, te_demand: jax.Array,
                  node_cap: jax.Array, max_sz: jax.Array, max_gp: jax.Array,
                  s: float, *, block_j: int = DEFAULT_BLOCK_J,
                  interpret: bool = False):
-    """demand/node_free (J, 3); gp/mask (J,). Returns (scores (J,), idx ())."""
+    """demand (J, 3); free (M, 3); assign (J, M); gp/mask (J,).
+    Returns (scores (J,), victim idx () or -1)."""
     J = demand.shape[0]
+    M = free.shape[0]
     bj = min(block_j, J)
     assert J % bj == 0, (J, bj)
     scalars = jnp.stack([
@@ -90,7 +104,8 @@ def fitgpp_score(demand: jax.Array, node_free: jax.Array, gp: jax.Array,
         in_specs=[
             pl.BlockSpec((2, 8), lambda ji: (0, 0)),
             pl.BlockSpec((1, bj, 3), lambda ji: (0, ji, 0)),
-            pl.BlockSpec((1, bj, 3), lambda ji: (0, ji, 0)),
+            pl.BlockSpec((1, M, 3), lambda ji: (0, 0, 0)),
+            pl.BlockSpec((1, bj, M), lambda ji: (0, ji, 0)),
             pl.BlockSpec((1, bj), lambda ji: (0, ji)),
             pl.BlockSpec((1, bj), lambda ji: (0, ji)),
         ],
@@ -107,7 +122,8 @@ def fitgpp_score(demand: jax.Array, node_free: jax.Array, gp: jax.Array,
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(scalars, demand[None].astype(jnp.float32),
-      node_free[None].astype(jnp.float32),
+      free[None].astype(jnp.float32),
+      assign[None].astype(jnp.float32),
       gp[None].astype(jnp.float32),
       mask[None].astype(jnp.float32))
     return scores[0], idx[0, 0]

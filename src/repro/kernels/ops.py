@@ -88,10 +88,15 @@ def lru_scan(a, b, h0=None, *, block_t: int = _ls.DEFAULT_BLOCK_T,
 
 
 @functools.partial(jax.jit, static_argnames=("s", "block_j"))
-def fitgpp_select(demand, node_free, gp, running_be, under_cap, te_demand,
-                  node_cap, *, s: float = PAPER_S,
+def fitgpp_select(demand, assign, free, gp, running_be, under_cap,
+                  te_demand, node_cap, *, s: float = PAPER_S,
                   block_j: int = _fs.DEFAULT_BLOCK_J):
-    """Eq. 1-4 victim selection. Returns (scores (J,), victim idx or -1)."""
+    """Eq. 1-4 victim selection over the (jobs, nodes) assignment tile.
+
+    ``demand`` (J, 3) per-node demand; ``assign`` (J, M) placement
+    mask; ``free`` (M, 3) cluster free matrix. Eligibility (Eq. 2) is
+    evaluated against each candidate's best assigned node, in-kernel.
+    Returns (scores (J,), victim idx or -1)."""
     J = demand.shape[0]
     sz = jnp.sqrt(jnp.sum(jnp.square(
         demand.astype(jnp.float32) / node_cap.astype(jnp.float32)), -1))
@@ -100,11 +105,11 @@ def fitgpp_select(demand, node_free, gp, running_be, under_cap, te_demand,
     mask = running_be & under_cap
 
     dp, _ = _pad_to(demand, 0, block_j)
-    fp, _ = _pad_to(node_free, 0, block_j, value=-1.0)  # ineligible padding
+    ap, _ = _pad_to(assign, 0, block_j, value=False)  # no nodes: ineligible
     gpp, _ = _pad_to(gp.astype(jnp.float32), 0, block_j)
     mp, _ = _pad_to(mask, 0, block_j, value=False)
     scores, idx = _fs.fitgpp_score(
-        dp, fp, gpp, mp, te_demand, node_cap, max_sz, max_gp, s,
+        dp, free, ap, gpp, mp, te_demand, node_cap, max_sz, max_gp, s,
         block_j=min(block_j, dp.shape[0]), interpret=_interpret())
     return scores[:J], idx
 

@@ -70,17 +70,22 @@ def ssd_chunk_ref(xdt: jax.Array, loga: jax.Array, Bm: jax.Array,
     return y.astype(xdt.dtype)
 
 
-def fitgpp_score_ref(demand: jax.Array, gp: jax.Array, node_free: jax.Array,
-                     te_demand: jax.Array, running_be: jax.Array,
-                     under_cap: jax.Array, node_cap: jax.Array,
-                     s: float):
-    """Eq. 1-4 oracle. demand (J,3); node_free (J,3) = free vector of each
-    candidate's node; returns (victim_idx or -1, scores (J,))."""
+def fitgpp_score_ref(demand: jax.Array, gp: jax.Array, assign: jax.Array,
+                     free: jax.Array, te_demand: jax.Array,
+                     running_be: jax.Array, under_cap: jax.Array,
+                     node_cap: jax.Array, s: float, eps: float = 1e-9):
+    """Eq. 1-4 oracle over the (jobs, nodes) tile. demand (J,3) per
+    node; assign (J,M) placement mask; free (M,3). Eq. 2 is evaluated
+    against each candidate's BEST assigned node (max min-slack);
+    returns (victim_idx or -1, scores (J,))."""
     sz = jnp.sqrt(jnp.sum((demand / node_cap) ** 2, axis=-1))
     max_sz = jnp.maximum(jnp.max(jnp.where(running_be, sz, 0.0)), 1e-12)
     max_gp = jnp.maximum(jnp.max(jnp.where(running_be, gp, 0.0)), 1e-12)
     score = sz / max_sz + s * (gp / max_gp)
-    elig = jnp.all(te_demand[None, :] <= demand + node_free, axis=1)
+    slack = jnp.min(free[None, :, :] + demand[:, None, :]
+                    - te_demand[None, None, :], axis=2)       # (J, M)
+    best = jnp.max(jnp.where(assign, slack, -jnp.inf), axis=1)
+    elig = best >= -eps
     mask = running_be & elig & under_cap
     idx = jnp.argmin(jnp.where(mask, score, jnp.inf))
     return jnp.where(mask.any(), idx, -1).astype(jnp.int32), score

@@ -187,12 +187,42 @@ def gang_heavy(cfg: SimConfig, gang_frac: float = 0.5,
 
     Reuses the paper generator (closed-loop admission) with the
     beyond-paper gang knobs turned up; stresses all-or-nothing
-    placement and gang victim selection. Reference engines only —
-    the JAX engine models single-node jobs."""
+    placement and gang victim selection on both engines."""
     widths = tuple(w for w in widths if w <= cfg.cluster.n_nodes)
     wl = dataclasses.replace(cfg.workload, multi_node_frac=gang_frac,
                              multi_node_widths=widths or (2,))
     return workload.generate(dataclasses.replace(cfg, workload=wl))
+
+
+@register_scenario(
+    "gang-trace-mix", kind=SYNTHETIC,
+    knobs={"gang_frac": "fraction of jobs that are gangs (0.35)",
+           "widths": "empirical inst_num widths from the PAI fixture"})
+def gang_trace_mix(cfg: SimConfig, gang_frac: float = 0.35) -> JobSet:
+    """Synthetic arrivals with gang widths resampled from the PAI
+    fixture's empirical ``inst_num`` distribution.
+
+    The dedicated stress workload for gang-aware placement and victim
+    selection: unlike ``gang-heavy``'s uniform widths, the width mix
+    here is the one a real task table reports (mostly 1, a long-ish
+    tail of 2/4/8-instance workers), over an open-loop arrival
+    process — wide gangs must be packed around a churning single-node
+    background on BOTH engines."""
+    from repro.scenarios.traces import PAI_SAMPLE, load_pai_csv
+
+    rng = _rng(cfg, 108)
+    n = cfg.workload.n_jobs
+    is_te, exec_total, demand, gp = _class_samples(cfg, rng, n)
+    pai_widths = np.asarray(load_pai_csv(PAI_SAMPLE, cfg).n_nodes)
+    pai_widths = pai_widths[pai_widths <= cfg.cluster.n_nodes]
+    if len(pai_widths) == 0:
+        pai_widths = np.ones(1, np.int64)
+    gang = rng.random(n) < gang_frac
+    n_nodes = np.where(gang, rng.choice(pai_widths, n), 1).astype(np.int64)
+    lam = _rate(cfg, exec_total, demand, n_nodes=n_nodes)
+    gaps = rng.exponential(1.0 / lam, n)
+    return _sorted_jobset(_submit_from_gaps(gaps), exec_total, demand,
+                          is_te, gp, n_nodes=n_nodes)
 
 
 @register_scenario(

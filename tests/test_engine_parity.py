@@ -233,6 +233,83 @@ class TestJaxTickVsEventParity:
                 assert 0.5 < ct_ratio < 2.0, (policy, pooled)
 
 
+GANG_SCENARIOS = ("gang-heavy", "gang-trace-mix",
+                  "philly-sample", "pai-sample")
+
+
+class TestGangScenarioJaxMatrix:
+    """Acceptance for the gang-capable JAX engine: the gang scenarios
+    — gang-heavy, gang-trace-mix and BOTH trace adapters (whose gang
+    widths come from GPU counts / inst_num) — run ``engine="jax"`` in
+    both time modes with (1) reference-vs-JAX result parity for every
+    deterministic registered policy and (2) full-State tick-vs-event
+    bit-parity for every dual-backend policy, rng-driven ones
+    included. Policy lists are generated from the registry; the
+    paper-default 84-node cluster keeps the score policies on their
+    deterministic main path (asserted via ``fallback_count``)."""
+
+    _jobsets = {}
+
+    @classmethod
+    def _jobset(cls, scenario):
+        from repro import scenarios
+        if scenario not in cls._jobsets:
+            cls._jobsets[scenario] = scenarios.build(scenario, cls._cfg())
+        return cls._jobsets[scenario]
+
+    @staticmethod
+    def _cfg(policy="fitgpp"):
+        return SimConfig(workload=WorkloadSpec(n_jobs=96), policy=policy,
+                         seed=0)
+
+    @pytest.mark.parametrize("mode", ["tick", "event"])
+    @pytest.mark.parametrize("scenario", GANG_SCENARIOS)
+    @pytest.mark.parametrize("policy", JAX_EXACT)
+    def test_reference_vs_jax(self, scenario, policy, mode):
+        from repro import api
+        js = self._jobset(scenario)
+        cfg = self._cfg(policy)
+        ref = api.run_experiment(scenario, policy, "reference", cfg=cfg,
+                                 jobs=js, mode=mode)
+        jx = api.run_experiment(scenario, policy, "jax", cfg=cfg,
+                                jobs=js, mode=mode)
+        _, st = jx.raw
+        spec = policy_registry.get_policy(policy)
+        if spec.jax_kind == "score":
+            assert int(st.fallback_count) == 0, \
+                "random fallback fired; pick a quieter config"
+        np.testing.assert_array_equal(np.asarray(st.finish),
+                                      ref.raw.finish)
+        np.testing.assert_array_equal(np.asarray(st.preempt_count),
+                                      ref.raw.preempt_count)
+
+    @pytest.mark.parametrize("scenario", GANG_SCENARIOS)
+    @pytest.mark.parametrize("policy", JAX_ALL)
+    def test_jax_tick_vs_event(self, scenario, policy):
+        from repro.core import sim_jax
+        js = self._jobset(scenario)
+        jobs = sim_jax.jobs_from_jobset(js)
+        cfg = self._cfg(policy)
+        a = sim_jax.run_jit(cfg, jobs, 0, time_mode="tick")
+        b = sim_jax.run_jit(cfg, jobs, 0, time_mode="event")
+        _assert_states_equal(a, b, f"jax gang {scenario} {policy}")
+
+    def test_gang_backfill_both_axes(self):
+        """backfill x gangs: dual-engine result parity AND tick/event
+        full-State parity (srtp: deterministic even past the P cap)."""
+        from repro.core import sim_jax
+        cfg = dataclasses.replace(self._cfg("srtp"), backfill=True)
+        js = self._jobset("gang-heavy")
+        jobs = sim_jax.jobs_from_jobset(js)
+        ref = simulator.simulate(cfg, js, mode="tick")
+        a = sim_jax.run_jit(cfg, jobs, 0, time_mode="tick")
+        b = sim_jax.run_jit(cfg, jobs, 0, time_mode="event")
+        _assert_states_equal(a, b, "gang backfill tick/event")
+        np.testing.assert_array_equal(np.asarray(a.finish), ref.finish)
+        np.testing.assert_array_equal(np.asarray(a.preempt_count),
+                                      ref.preempt_count)
+
+
 class MinimalDriver:
     """Controller-shaped driver over the shared core: arrivals by
     submit tick, 'work' is decrementing a per-job step budget — no

@@ -125,55 +125,68 @@ class TestFitgppKernel:
     @settings(max_examples=20, deadline=None)
     @given(st.integers(4, 600), st.integers(0, 10_000))
     def test_vs_oracle_random(self, J, seed):
+        """Gang-shaped kernel vs the jnp oracle over the (jobs, nodes)
+        tile: random single-node and 2-node-gang assignments."""
+        M = 8
         ks = jax.random.split(jax.random.PRNGKey(seed), 6)
         demand = jnp.stack([
             jax.random.randint(ks[0], (J,), 1, 33).astype(jnp.float32),
             jax.random.randint(ks[1], (J,), 1, 257).astype(jnp.float32),
             jax.random.randint(ks[2], (J,), 0, 9).astype(jnp.float32)], 1)
         free = jnp.stack([
-            jax.random.randint(ks[3], (J,), 0, 16).astype(jnp.float32),
-            jax.random.randint(ks[4], (J,), 0, 128).astype(jnp.float32),
-            jax.random.randint(ks[5], (J,), 0, 5).astype(jnp.float32)], 1)
+            jax.random.randint(ks[3], (M,), 0, 16).astype(jnp.float32),
+            jax.random.randint(ks[4], (M,), 0, 128).astype(jnp.float32),
+            jax.random.randint(ks[5], (M,), 0, 5).astype(jnp.float32)], 1)
+        node = jax.random.randint(ks[5], (J,), 0, M)
+        gang = jax.random.bernoulli(ks[3], 0.3, (J,))
+        assign = (jax.nn.one_hot(node, M, dtype=bool)
+                  | (jax.nn.one_hot((node + 1) % M, M, dtype=bool)
+                     & gang[:, None]))
         gp = jax.random.randint(ks[0], (J,), 0, 21).astype(jnp.float32)
         running = jax.random.bernoulli(ks[1], 0.7, (J,))
         under = jax.random.bernoulli(ks[2], 0.9, (J,))
         te = jnp.array([4.0, 16.0, 4.0])
         cap = jnp.array([32.0, 256.0, 8.0])
-        scores, idx = ops.fitgpp_select(demand, free, gp, running, under,
-                                        te, cap, s=4.0)
-        ridx, rscores = kref.fitgpp_score_ref(demand, gp, free, te,
+        scores, idx = ops.fitgpp_select(demand, assign, free, gp, running,
+                                        under, te, cap, s=4.0)
+        ridx, rscores = kref.fitgpp_score_ref(demand, gp, assign, free, te,
                                               running, under, cap, 4.0)
         np.testing.assert_allclose(np.asarray(scores), np.asarray(rscores),
                                    atol=1e-5)
         assert int(idx) == int(ridx)
 
     def test_matches_numpy_policy(self):
-        """Kernel argmin == policies.FitGppPolicy main path."""
+        """Kernel argmin == policies.FitGppPolicy main path (each
+        candidate on its own node, Eq. 2 free vector taken from that
+        node — exactly what the reference engine passes)."""
         from repro.core import policies as pol
         rng = np.random.default_rng(0)
-        J = 64
+        J, M = 64, 4
         demand = np.stack([rng.integers(1, 33, J), rng.integers(1, 257, J),
                            rng.integers(0, 9, J)], 1).astype(float)
-        free = np.zeros((J, 3))
+        free = np.zeros((M, 3))
+        cand_node = (np.arange(J) % M).astype(np.int64)
+        assign = np.zeros((J, M), bool)
+        assign[np.arange(J), cand_node] = True
         gp = rng.integers(0, 21, J).astype(float)
         te = np.array([4.0, 16.0, 2.0])
         cap = np.array([32.0, 256.0, 8.0])
         p = pol.FitGppPolicy(s=4.0)
         victims = p.select(
             rng=rng, te_demand=te, cand_ids=np.arange(J),
-            cand_demand=demand, cand_node_free=free, cand_gp=gp,
+            cand_demand=demand, cand_node_free=free[cand_node], cand_gp=gp,
             cand_remaining=np.ones(J), under_cap=np.ones(J, bool),
             all_run_demand=demand, all_run_gp=gp, node_cap=cap,
-            free_by_node=np.zeros((4, 3)), cand_node=np.zeros(J, np.int64))
+            free_by_node=free, cand_node=cand_node)
         _, idx = ops.fitgpp_select(
-            jnp.asarray(demand, jnp.float32), jnp.asarray(free, jnp.float32),
+            jnp.asarray(demand, jnp.float32), jnp.asarray(assign),
+            jnp.asarray(free, jnp.float32),
             jnp.asarray(gp, jnp.float32), jnp.ones(J, bool),
             jnp.ones(J, bool), jnp.asarray(te, jnp.float32),
             jnp.asarray(cap, jnp.float32), s=4.0)
-        elig = pol.eligible_eq2(te, demand, free)
+        elig = pol.eligible_eq2(te, demand, free[cand_node])
         if elig.any():
             assert victims == [int(idx)]
-
 
 class TestFitgppScoreBackend:
     """The registry-wired score-backend switch: a full JAX-engine run
@@ -197,6 +210,27 @@ class TestFitgppScoreBackend:
                                       np.asarray(st_jnp.preempt_count))
         np.testing.assert_array_equal(np.asarray(st_pal.last_vacate),
                                       np.asarray(st_jnp.last_vacate))
+
+    def test_best_node_reduction(self):
+        """A gang candidate is eligible iff its BEST node passes Eq. 2
+        — one crowded node must not mask a slack node (and vice versa
+        a single-node candidate on the crowded node stays ineligible)."""
+        demand = jnp.asarray([[4.0, 16.0, 2.0], [4.0, 16.0, 2.0]])
+        free = jnp.asarray([[0.0, 0.0, 0.0],      # node 0: crowded
+                            [32.0, 256.0, 8.0]])  # node 1: wide open
+        assign = jnp.asarray([[True, True],       # gang on both
+                              [True, False]])     # single on node 0
+        gp = jnp.zeros(2)
+        te = jnp.asarray([8.0, 32.0, 4.0])
+        cap = jnp.asarray([32.0, 256.0, 8.0])
+        scores, idx = ops.fitgpp_select(
+            demand, assign, free, gp, jnp.ones(2, bool), jnp.ones(2, bool),
+            te, cap, s=4.0)
+        assert int(idx) == 0          # gang eligible via node 1
+        _, idx2 = ops.fitgpp_select(
+            demand, jnp.asarray([[True, False], [True, False]]), free, gp,
+            jnp.ones(2, bool), jnp.ones(2, bool), te, cap, s=4.0)
+        assert int(idx2) == -1        # both stuck on the crowded node
 
     def test_traced_s_falls_back_to_jnp(self):
         """Vmapped s-sweeps cannot bake s into the kernel: the resolver

@@ -20,9 +20,9 @@ def small_cfg(n_jobs=96, n_nodes=8, policy="fitgpp", seed=0, **kw):
                      policy=policy, seed=seed)
 
 
-NEW_SCENARIOS = ("diurnal", "burst-storm", "gang-heavy", "load-ramp",
-                 "te-flood", "long-tail-be", "maintenance-drain",
-                 "heterogeneous-gp")
+NEW_SCENARIOS = ("diurnal", "burst-storm", "gang-heavy", "gang-trace-mix",
+                 "load-ramp", "te-flood", "long-tail-be",
+                 "maintenance-drain", "heterogeneous-gp")
 PAPER_SCENARIOS = ("paper-synthetic", "trace-proxy", "sparse-long-horizon")
 TRACE_SCENARIOS = ("philly-sample", "pai-sample")
 
@@ -217,7 +217,42 @@ class TestRaggedBatching:
                         seeds=[0, 0])
         assert np.isfinite(out["te_slowdown"]).all()
 
-    def test_gang_scenarios_rejected_by_jax_sweep(self):
-        with pytest.raises(NotImplementedError, match="gang"):
-            sweep.scenario_sweep(small_cfg(n_jobs=32),
-                                 ["gang-heavy"], seeds=[0])
+    def test_gang_scenarios_sweep_on_jax(self):
+        """Gang scenarios run through the vmapped JAX sweep (they used
+        to raise NotImplementedError): widths ride the batch."""
+        out = sweep.scenario_sweep(small_cfg(n_jobs=32),
+                                   ["gang-heavy", "gang-trace-mix"],
+                                   seeds=[0])
+        assert out["te_slowdown"].shape == (2, 1, 3)
+        assert (out["makespan"] > 0).all()
+
+    def test_ragged_gang_batch_bit_exact(self):
+        """Regression (stack_jobsets width carry): a RAGGED gang batch
+        — unequal n, multi-node widths — padded into one vmapped sweep
+        is bit-identical to each jobset's unpadded single run. Before
+        Jobs.width existed, padding silently dropped gang widths."""
+        cfg = small_cfg(n_jobs=24)
+        jobsets = [scenarios.build("gang-trace-mix",
+                                   dataclasses.replace(
+                                       cfg, seed=s,
+                                       workload=WorkloadSpec(n_jobs=n)))
+                   for s, n in ((0, 16), (1, 24))]
+        assert any((np.asarray(js.n_nodes) > 1).any() for js in jobsets)
+        stacked = sweep.stack_jobsets(jobsets)
+        # widths survived the ragged padding; sentinels stay width-1
+        w0 = np.asarray(stacked.width)
+        assert (w0[0, 16:] == 1).all()
+        np.testing.assert_array_equal(w0[0, :16],
+                                      np.asarray(jobsets[0].n_nodes))
+        batched = sweep.run_sweep(cfg, stacked, s_vals=[cfg.s] * 2,
+                                  P_vals=[1, 1], seeds=[0, 0])
+        for i, js in enumerate(jobsets):
+            st = sim_jax.run_jit(cfg, sim_jax.jobs_from_jobset(js), 0)
+            single = sim_jax.result_summary(sim_jax.jobs_from_jobset(js),
+                                            st)
+            np.testing.assert_array_equal(
+                batched["makespan"][i], int(st.t))
+            for p, key in zip((50, 95, 99), range(3)):
+                a = batched["te_slowdown"][i][key]
+                b = float(single["TE"][f"p{p}"])
+                np.testing.assert_equal(a, np.float32(b))

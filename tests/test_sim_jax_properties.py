@@ -45,10 +45,12 @@ JAX_POLICIES = [s.name for s in policy_registry.all_policies()
                 if s.dual_backend]
 
 
-def random_jobset(seed: int, n: int = 32) -> JobSet:
+def random_jobset(seed: int, n: int = 32, gang_frac: float = 0.0,
+                  max_width: int = 2) -> JobSet:
     """Adversarially small cluster-sized random workload: whole-node
     demands appear, so preemption, the P cap and the random fallback
-    all fire."""
+    all fire. ``gang_frac`` > 0 mixes in multi-node gangs (widths
+    2..max_width) to drive the gang placement/selection paths."""
     rng = np.random.default_rng(seed)
     submit = np.cumsum(rng.integers(0, 4, n))
     is_te = rng.random(n) < 0.4
@@ -58,10 +60,15 @@ def random_jobset(seed: int, n: int = 32) -> JobSet:
         rng.integers(1, 257, n).astype(float),
         rng.choice([0.0, 1.0, 2.0, 4.0, 8.0], n)], axis=1)
     gp = rng.integers(0, 6, n)
+    n_nodes = None
+    if gang_frac > 0:
+        n_nodes = np.where(rng.random(n) < gang_frac,
+                           rng.integers(2, max_width + 1, n),
+                           1).astype(np.int64)
     return JobSet(submit=submit.astype(np.int64),
                   exec_total=exec_total.astype(np.int64),
                   demand=demand, is_te=is_te,
-                  gp=gp.astype(np.int64))
+                  gp=gp.astype(np.int64), n_nodes=n_nodes)
 
 
 def iterate_states(cfg, jobs: sim_jax.Jobs, seed: int, time_mode: str,
@@ -87,26 +94,32 @@ def check_invariants(cfg, jobs: sim_jax.Jobs, states) -> None:
     valid = np.asarray(jobs.valid)
     is_te = np.asarray(jobs.is_te)
     demand = np.asarray(jobs.demand)
-    n_idx = np.arange(len(valid))
+    width = np.asarray(jobs.width)
     prev_done = -1
     for st in states:
         t = int(st.t)
         state = np.asarray(st.state)
         free = np.asarray(st.free)
-        node = np.asarray(st.node)
+        assign = np.asarray(st.assign)
         pc = np.asarray(st.preempt_count)
         qk = np.asarray(st.queue_key)
 
-        # resource safety + conservation
+        # resource safety + conservation over the assignment mask
         assert (free >= -FIT_EPS).all(), f"over-allocated at t={t}"
         assert (free <= cap[None] + FIT_EPS).all(), \
             f"free above capacity at t={t}"
-        used = np.zeros_like(free)
         occupies = (state == RUNNING) | (state == GRACE)
-        for j in n_idx[occupies]:
-            used[node[j]] += demand[j]
+        used = np.einsum("nm,nr->mr", (assign & occupies[:, None]),
+                         demand)
         assert np.allclose(used + free, cap[None]), \
             f"conservation violated at t={t}"
+        # assignment-mask shape: occupying jobs hold exactly their gang
+        # width; everyone else holds nothing
+        held = assign.sum(axis=1)
+        assert (held[occupies] == width[occupies]).all(), \
+            f"gang width violated at t={t}"
+        assert (held[~occupies] == 0).all(), \
+            f"non-occupying job holds nodes at t={t}"
 
         # the P cap, exact modulo counted fallback firings
         fallback = int(st.fallback_count)
@@ -132,6 +145,7 @@ def check_invariants(cfg, jobs: sim_jax.Jobs, states) -> None:
 
         # queue keys: arrivals keep their submission index; victims
         # requeue on TOP with negative keys (strictly before arrivals)
+        n_idx = np.arange(len(valid))
         queued = state == QUEUED
         fresh = queued & (pc == 0)
         assert (qk[fresh] == n_idx[fresh]).all(), \
@@ -143,7 +157,7 @@ def check_invariants(cfg, jobs: sim_jax.Jobs, states) -> None:
 
         # sentinel padding stays inert
         assert (state[~valid] == DONE).all(), f"sentinel woke up at t={t}"
-        assert (node[~valid] == -1).all()
+        assert not assign[~valid].any(), f"sentinel placed at t={t}"
 
     # terminal: every valid job is done exactly once, after its arrival
     last = states[-1]
@@ -195,6 +209,32 @@ class TestInvariantsSeeded:
         ragged-sweep shape)."""
         run_and_check(small_cfg("fitgpp"), random_jobset(seed=5, n=24),
                       seed=5, pad_to=32)
+
+    @pytest.mark.parametrize("policy", JAX_POLICIES)
+    def test_gang_policy_matrix(self, policy):
+        """The same engine-wide invariants with multi-node gangs in the
+        mix (all-or-nothing placement, gang vacates, gang victim
+        selection) — conservation now sums over the assignment mask."""
+        run_and_check(small_cfg(policy, n_nodes=3),
+                      random_jobset(seed=7, gang_frac=0.3, max_width=3),
+                      seed=7)
+
+    def test_gang_ragged_padding(self):
+        """Gang widths ride through sentinel padding; sentinels stay
+        width-1 and never hold nodes."""
+        run_and_check(small_cfg("fitgpp", n_nodes=3),
+                      random_jobset(seed=8, n=24, gang_frac=0.3,
+                                    max_width=3),
+                      seed=8, pad_to=32)
+
+    def test_gang_backfill(self):
+        """Backfill x gangs on the JAX engine: the bounded scan keeps
+        every invariant (and tick/event parity, via run_and_check)."""
+        import dataclasses
+        cfg = dataclasses.replace(small_cfg("fitgpp", n_nodes=3),
+                                  backfill=True, backfill_depth=4)
+        run_and_check(cfg, random_jobset(seed=9, gang_frac=0.3,
+                                         max_width=3), seed=9)
 
     @pytest.mark.parametrize("name", ["te-flood", "sparse-long-horizon"])
     def test_registered_scenarios(self, name):

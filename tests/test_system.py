@@ -57,18 +57,31 @@ def test_beyond_paper_backfill_extension():
 
 
 def test_sim_kernel_path_parity():
-    """REPRO_SIM_KERNEL=1 routes Eq. 1-4 through the Pallas kernel with
-    identical outcomes."""
-    import os
+    """SimConfig.score_backend="pallas" routes Eq. 1-4 through the
+    Pallas kernel with identical outcomes."""
     import numpy as np
     from repro.core import sim_jax
     cfg = SimConfig(workload=WorkloadSpec(n_jobs=192), policy="fitgpp",
-                    seed=11)
+                    seed=11, score_backend="pallas")
     jobs = workload.generate(cfg)
     ref = simulator.simulate(cfg, jobs)
-    os.environ["REPRO_SIM_KERNEL"] = "1"
-    try:
-        st = sim_jax.run(cfg, sim_jax.jobs_from_jobset(jobs), 11)
-    finally:
-        os.environ.pop("REPRO_SIM_KERNEL", None)
+    st = sim_jax.run(cfg, sim_jax.jobs_from_jobset(jobs), 11)
     assert (np.asarray(st.finish) == ref.finish).all()
+
+
+def test_sim_kernel_env_override_removed():
+    """The deprecated REPRO_SIM_KERNEL env switch now fails loudly,
+    pointing at SimConfig.score_backend (any value, "0" included —
+    the variable is dead, not just off by default)."""
+    import os
+    import pytest
+    from repro.core import sim_jax
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=8), policy="fitgpp")
+    jobs = sim_jax.jobs_from_jobset(workload.generate(cfg))
+    for value in ("1", "0"):
+        os.environ["REPRO_SIM_KERNEL"] = value
+        try:
+            with pytest.raises(RuntimeError, match="score_backend"):
+                sim_jax.make_tick(cfg, jobs, cfg.cluster.n_nodes)
+        finally:
+            os.environ.pop("REPRO_SIM_KERNEL", None)
