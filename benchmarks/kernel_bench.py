@@ -53,34 +53,41 @@ def bench_lru_scan() -> List[tuple]:
                 lambda a, b: ops.lru_scan(a, b), a, b), "interpret-mode")]
 
 
-def bench_fitgpp_score() -> List[tuple]:
-    J, M = 4096, 84                    # candidates x nodes (paper cluster)
-    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+def bench_schedule_step() -> List[tuple]:
+    J, M = 4096, 84                    # jobs x nodes (paper cluster)
+    ks = jax.random.split(jax.random.PRNGKey(2), 8)
     demand = jax.random.uniform(ks[0], (J, 3), minval=1.0, maxval=8.0)
     free = jax.random.uniform(ks[1], (M, 3), minval=0.0, maxval=8.0)
+    pend = jax.random.uniform(ks[6], (M, 3), minval=0.0, maxval=4.0)
     gp = jax.random.uniform(ks[2], (J,), maxval=20.0)
-    run = jax.random.bernoulli(ks[3], 0.8, (J,))
+    cand = jax.random.bernoulli(ks[3], 0.8, (J,))
     # mostly single-node candidates, some 2-node gangs
     node = jax.random.randint(ks[4], (J,), 0, M)
+    gang = jax.random.bernoulli(ks[5], 0.15, (J,))
     assign = jax.nn.one_hot(node, M, dtype=bool) \
-        | jax.nn.one_hot((node + 1) % M, M, dtype=bool) \
-        & jax.random.bernoulli(ks[5], 0.15, (J,))[:, None]
+        | jax.nn.one_hot((node + 1) % M, M, dtype=bool) & gang[:, None]
+    width = jnp.where(gang, 2, 1).astype(jnp.int32)
+    key = jax.random.uniform(ks[7], (J,)) * 1e4
     under = jnp.ones((J,), bool)
+    be_q = ~cand & jax.random.bernoulli(ks[6], 0.5, (J,))
     te = jnp.array([4.0, 16.0, 4.0])
     cap = jnp.array([32.0, 256.0, 8.0])
+    max_sz = jnp.asarray(1.0)
+    max_gp = jnp.asarray(20.0)
 
-    def oracle(demand, assign, free, gp, run, under):
-        return kref.fitgpp_score_ref(demand, gp, assign, free, te, run,
-                                     under, cap, 4.0)
+    def oracle(demand, gp, key, assign, free, pend, cand, under, be_q):
+        return kref.schedule_step_ref(demand, gp, width, key, assign,
+                                      free, pend, cand, under, be_q, te,
+                                      cap, max_sz, max_gp, 4.0)
 
     j_oracle = jax.jit(oracle)
+    args = (demand, gp, key, assign, free, pend, cand, under, be_q)
     return [
-        ("fitgpp_score_oracle_4k", _time(j_oracle, demand, assign, free,
-                                         gp, run, under), f"J={J};M={M}"),
-        ("fitgpp_score_kernel_4k", _time(
-            lambda d, a, f, g, r, u: ops.fitgpp_select(d, a, f, g, r, u,
-                                                       te, cap),
-            demand, assign, free, gp, run, under), "interpret-mode"),
+        ("schedule_step_oracle_4k", _time(j_oracle, *args), f"J={J};M={M}"),
+        ("schedule_step_kernel_4k", _time(
+            lambda d, g, k, a, f, p, c, u, b: ops.schedule_step(
+                d, g, width, k, a, f, p, c, u, b, te, cap, s=4.0),
+            *args), "interpret-mode"),
     ]
 
 
@@ -114,6 +121,6 @@ def run_all() -> List[tuple]:
     rows = []
     rows += bench_flash_attention()
     rows += bench_lru_scan()
-    rows += bench_fitgpp_score()
+    rows += bench_schedule_step()
     rows += bench_ssd_chunk()
     return rows

@@ -11,13 +11,17 @@ per-scenario timings over the full registered scenario suite
 ``jax_tick`` vs ``jax_event`` rows for the JAX engine's
 event-compressed ``lax.while_loop`` (``SimConfig.time_mode``,
 DESIGN.md §7; full-State bit-parity re-verified in-run across the
-deterministic policy registry), and the FitGpp score-path
-comparison on the JAX engine: jnp vs the Pallas ``fitgpp_score``
-kernel backend (``SimConfig.score_backend``, DESIGN.md §6), with
-parity re-verified in-run. Configs and sweeps go through the
-``repro.api`` facade; TIMED regions call the engines directly so the
-rows measure the engine, not jobset construction or result
-normalization, and stay comparable across PRs.
+deterministic policy registry), an ``n_jobs`` scaling axis (256 /
+1024 / 4096) tracking the dense-scale reference-vs-``jax_event``
+trajectory, and the FitGpp score-path comparison on the JAX engine:
+jnp vs the fused Pallas ``schedule_step`` kernel backend
+(``SimConfig.score_backend``, DESIGN.md §6), with parity re-verified
+in-run. The scenario-suite rows also carry a ``speedup_vs_ref``
+gate: ``--check-parity`` fails if any scenario's ``jax_event`` row
+is slower than the reference event engine. Configs and sweeps go
+through the ``repro.api`` facade; TIMED regions call the engines
+directly so the rows measure the engine, not jobset construction or
+result normalization, and stay comparable across PRs.
 """
 from __future__ import annotations
 
@@ -135,13 +139,48 @@ def bench_scenario_suite(n_jobs: int = 256, n_nodes: int = 8,
                      "jobs_per_sec": metrics.sim_throughput(res, s),
                      "makespan_ticks": int(res.makespan)}
         out[name].update(bench_jax_tick_vs_event(cfg, js, seed))
+        out[name]["speedup_vs_ref"] = s / max(
+            out[name]["jax_event"]["seconds"], 1e-12)
     return out
 
 
-def bench_fitgpp_score_backend(n_jobs: int = 192, n_nodes: int = 84,
-                               seed: int = 0) -> Dict:
-    """JAX-engine FitGpp with the Eq. 1-4 score path on jnp vs on the
-    Pallas ``fitgpp_score`` kernel (``SimConfig.score_backend``;
+def bench_njobs_scaling(sizes=(256, 1024, 4096), n_nodes: int = 8,
+                        policy: str = "fitgpp", seed: int = 0) -> Dict:
+    """Dense-scale trajectory rows: reference event engine vs
+    ``jax_event`` jobs/sec for every SIZED registered scenario at each
+    ``n_jobs`` (trace fixtures keep their native job counts and are
+    skipped here — their rows live in the scenario suite). These are
+    the rows the ≥5x-at-1k+ target is defined on; on the CPU container
+    they time interpret-mode kernels, so they record the honest CPU
+    trajectory rather than the TPU target."""
+    out: Dict = {}
+    for n in sizes:
+        cfg = api.make_config(policy, n_jobs=n, n_nodes=n_nodes, seed=seed)
+        rows: Dict = {}
+        for name in scenarios.scenario_names():
+            js = scenarios.build(name, cfg)
+            if js.n != n:              # trace fixture: native job count
+                continue
+            t0 = time.perf_counter()
+            res = simulator.simulate(cfg, js, mode="event")
+            s_ref = time.perf_counter() - t0
+            jobs = sim_jax.jobs_from_jobset(js)
+            s_jax, _ = _time_jax(cfg, jobs, seed, "event")
+            rows[name] = {
+                "ref_seconds": s_ref,
+                "jax_event_seconds": s_jax,
+                "ref_jobs_per_sec": metrics.sim_throughput(res, s_ref),
+                "jax_jobs_per_sec": js.n / max(s_jax, 1e-12),
+                "speedup_vs_ref": s_ref / max(s_jax, 1e-12),
+            }
+        out[str(n)] = rows
+    return out
+
+
+def bench_score_backend(n_jobs: int = 192, n_nodes: int = 84,
+                        seed: int = 0) -> Dict:
+    """JAX-engine FitGpp with the schedule pass on jnp vs on the fused
+    Pallas ``schedule_step`` kernel (``SimConfig.score_backend``;
     interpret mode off-TPU), compile excluded, parity re-verified."""
     cfg = SimConfig(cluster=ClusterSpec(n_nodes=n_nodes),
                     workload=WorkloadSpec(n_jobs=n_jobs),
@@ -197,21 +236,64 @@ def check_parity_rows(out: dict) -> List[str]:
     else:
         bad.extend(f"missing: scenario_suite.{name}.parity"
                    for name, row in suite.items() if "parity" not in row)
-    if "parity" not in out.get("fitgpp_score_backend", {}):
-        bad.append("missing: fitgpp_score_backend.parity")
+    if "parity" not in out.get("score_backend", {}):
+        bad.append("missing: score_backend.parity")
+    return bad
+
+
+SPEED_TOL = 1.0          # jax_event must not lose to the reference
+
+
+def check_speed_rows(out: dict) -> List[str]:
+    """Scenario-suite rows where ``jax_event`` is slower than the
+    reference event engine: the JAX engine must not LOSE to numpy on
+    any registered scenario at the suite size (this is the gate the
+    diurnal / trace-proxy regressions used to fail). The scaling rows
+    track the dense trajectory and are recorded, not gated — the
+    interpret-mode CPU numbers at 4096 are not the TPU target."""
+    bad = []
+    for name, row in (out.get("scenario_suite") or {}).items():
+        sp = row.get("speedup_vs_ref")
+        if sp is None:
+            bad.append(f"missing: scenario_suite.{name}.speedup_vs_ref")
+        elif sp < SPEED_TOL:
+            bad.append(f"slow: scenario_suite.{name} jax_event at "
+                       f"{sp:.2f}x vs reference")
+    if "njobs_scaling" not in out:
+        bad.append("missing: njobs_scaling")
     return bad
 
 
 def emit_json(path: str = "BENCH_sim_engine.json") -> dict:
     out = bench_tick_vs_event()
     out["scenario_suite"] = bench_scenario_suite()
-    out["fitgpp_score_backend"] = bench_fitgpp_score_backend()
-    bad = check_parity_rows(out)
+    out["njobs_scaling"] = bench_njobs_scaling()
+    out["score_backend"] = bench_score_backend()
+    bad = check_parity_rows(out) + check_speed_rows(out)
     if bad:
-        raise AssertionError(f"parity rows recorded False: {bad}")
+        raise AssertionError(f"bench gates failed: {bad}")
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     return out
+
+
+def smoke(n_jobs: int = 64, seed: int = 0) -> None:
+    """CI fast-lane smoke: one tiny scenario through the reference
+    engine and the JAX engine with the FUSED score backend
+    (``score_backend="pallas"`` routes the whole schedule pass through
+    the Pallas ``schedule_step`` kernel), asserting jnp-vs-pallas
+    full-State parity. Seconds, not minutes: one compile each."""
+    cfg = api.make_config("fitgpp", n_jobs=n_jobs, n_nodes=4, seed=seed)
+    js = scenarios.build("paper-synthetic", cfg)
+    simulator.simulate(cfg, js, mode="event")
+    jobs = sim_jax.jobs_from_jobset(js)
+    st_j = sim_jax.run_jit(cfg, jobs, seed, time_mode="event")
+    st_p = sim_jax.run_jit(dataclasses.replace(cfg, score_backend="pallas"),
+                           jobs, seed, time_mode="event")
+    diff = sim_jax.state_diff_fields(st_j, st_p)
+    if diff:
+        raise SystemExit(f"smoke: jnp-vs-pallas state diff in {diff}")
+    print(f"smoke ok: {n_jobs} jobs, fused-backend parity verified")
 
 
 def run_all() -> List[tuple]:
@@ -262,9 +344,9 @@ def run_all() -> List[tuple]:
                          f"{r['jax_event']['jobs_per_sec']:.0f} jobs/s, "
                          f"{r['jax_speedup']:.1f}x vs jax_tick, parity ok"))
 
-    sb = bench_fitgpp_score_backend()
+    sb = bench_score_backend()
     for backend in ("jnp", "pallas"):
-        rows.append((f"sim_jax_fitgpp_score_{backend}",
+        rows.append((f"sim_jax_score_{backend}",
                      sb[backend]["seconds"] * 1e6,
                      f"{sb[backend]['jobs_per_sec']:.0f} jobs/s, parity ok"))
 
@@ -285,15 +367,23 @@ def main(argv=None) -> None:
     ap.add_argument("--out", default="BENCH_sim_engine.json")
     ap.add_argument("--check-parity", metavar="PATH",
                     help="validate an existing BENCH json: exit nonzero "
-                         "if any in-run parity row is false (CI gate)")
+                         "if any in-run parity row is false or any "
+                         "scenario's jax_event row lost to the "
+                         "reference engine (CI gate)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scenario fused-backend smoke (CI fast lane)")
     args = ap.parse_args(argv)
     if args.check_parity:
         with open(args.check_parity) as f:
-            bad = check_parity_rows(json.load(f))
+            data = json.load(f)
+        bad = check_parity_rows(data) + check_speed_rows(data)
         if bad:
-            raise SystemExit(f"parity rows false in {args.check_parity}: "
+            raise SystemExit(f"bench gates failed in {args.check_parity}: "
                              f"{bad}")
-        print(f"{args.check_parity}: all parity rows true")
+        print(f"{args.check_parity}: all parity and speed rows pass")
+        return
+    if args.smoke:
+        smoke()
         return
     if args.json:
         out = emit_json(args.out)

@@ -100,10 +100,13 @@ class Policy:
       engine re-evaluates the score over TOTAL gang demand
       (``demand * width``) and runs the gang-select strategy instead.
     * extra ``score_backends`` → ``jax_score_accel(backend, jobs, te,
-      free, assign, cand, under, node_cap, s) -> victim index or -1``
-      (score + best-node Eq. 2 reduction + masked argmin fused on an
-      accelerated kernel; ``free`` is the (nodes, 3) cluster free
-      matrix and ``assign`` the (jobs, nodes) placement-mask tile).
+      free, assign, cand, under, node_cap, s, pending_free=...,
+      queue_key=..., be_q=...) -> victim index or -1`` (the whole
+      schedule pass — score, best-node Eq. 2 reduction, masked
+      argmin, gang-fit tiles and BE queue scan — fused on ONE
+      accelerated kernel invocation; ``free``/``pending_free`` are
+      the (nodes, 3) cluster matrices and ``assign`` the
+      (jobs, nodes) placement-mask tile).
     """
     name = "base"
     preemptive = True
@@ -140,7 +143,8 @@ class Policy:
         raise NotImplementedError(f"{self.name}: no jax_score declared")
 
     def jax_score_accel(self, backend, jobs, te, free, assign, cand,
-                        under, node_cap, s):
+                        under, node_cap, s, *, pending_free=None,
+                        queue_key=None, be_q=None):
         raise NotImplementedError(
             f"{self.name}: no accelerated score backend {backend!r}")
 
@@ -197,18 +201,30 @@ class FitGppPolicy(Policy):
         return sz / max_sz + s * (jobs.gp / max_gp)
 
     def jax_score_accel(self, backend, jobs, te, free, assign, cand,
-                        under, node_cap, s):
-        """Eq. 1-4 score + best-node Eq. 2 reduction + masked argmin on
-        the Pallas ``fitgpp_score`` kernel over the (jobs, nodes)
-        assignment tile (bit-parity-tested vs ``jax_score``; requires
-        static ``s`` — it is baked into the kernel)."""
+                        under, node_cap, s, *, pending_free=None,
+                        queue_key=None, be_q=None):
+        """The whole Eq. 1-4 pass fused on the Pallas ``schedule_step``
+        kernel over the (jobs, nodes) tile — score, best-node Eq. 2
+        reduction, masked argmin, gang-fit counts and the BE queue
+        scan in one invocation (bit-parity-tested vs ``jax_score``;
+        requires static ``s`` — it is baked into the kernel). The
+        victim selection consumes only ``.victim``."""
         assert backend == "pallas", backend
         import jax.numpy as jnp
         from repro.kernels import ops as kops
-        _, victim = kops.fitgpp_select(
-            jobs.demand, assign, free, jobs.gp.astype(jnp.float32),
-            cand, under, jobs.demand[te], node_cap, s=s)
-        return victim
+        J = jobs.gp.shape[0]
+        M = free.shape[0]
+        if pending_free is None:
+            pending_free = jnp.zeros((M, 3), jnp.float32)
+        if queue_key is None:
+            queue_key = jnp.full((J,), jnp.inf, jnp.float32)
+        if be_q is None:
+            be_q = jnp.zeros((J,), bool)
+        ps = kops.schedule_step(
+            jobs.demand, jobs.gp.astype(jnp.float32), jobs.width,
+            queue_key, assign, free, pending_free, cand, under, be_q,
+            jobs.demand[te], node_cap, s=s)
+        return ps.victim
 
 
 @register_policy("lrtp", description="Big-C baseline: longest remaining "

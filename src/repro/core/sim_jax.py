@@ -31,12 +31,20 @@ DESIGN.md §6): ``make_tick`` builds its preemption trigger from the
 registered policy's JAX declaration — ``jax_kind == "rank"`` policies
 feed :func:`_until_fits_select`, ``"score"`` policies feed
 :func:`_score_select` (Eq. 4 masked argmin + the paper's random
-fallback), and score policies may route the score + argmin through an
-accelerated kernel via ``SimConfig.score_backend`` (FitGpp's Pallas
-``fitgpp_score`` kernel as ``"pallas"``; it takes the (jobs, nodes)
-assignment tile and does the best-node Eq. 2 reduction in-kernel;
-parity-tested vs jnp). Gang TEs dispatch to :func:`_gang_select` on
-either contract.
+fallback), and score policies may route the pass through an
+accelerated kernel via ``SimConfig.score_backend`` (``"pallas"`` is
+the fused ``kernels/schedule_step`` pass: Eq. 3 scoring, best-node
+Eq. 2 reduction, Eq. 4 argmin, gang-fit tiles and the BE backfill
+scan in ONE kernel over the (jobs, nodes) tile; parity-tested vs
+jnp). Gang TEs dispatch to :func:`_gang_select` on either contract.
+
+The schedule pass itself is computed once per acting tick as a shared
+:class:`_Pass` (``_make_queue_pass`` — the jnp twin of the fused
+kernel's per-pass outputs) and threaded through the TE lane, the BE
+lane and the post-pass trigger gate (``_make_gate``), so the
+``while_loop`` body issues one fused tile computation instead of a
+kernel-per-op chain; non-acting ticks are gated by the cheap cached
+:func:`_make_would_act_cached` check and skip the pass entirely.
 
 The BE queue is strict FIFO (head-of-line blocking) by default;
 ``SimConfig.backfill`` enables the same bounded first-fit backfill
@@ -50,12 +58,17 @@ the body jumps ``dt`` quanta straight to the next event (the masked
 minimum over the next valid arrival, ``t + remaining`` of running
 jobs and ``t + grace_left`` of GRACE jobs), bulk-decrementing
 ``remaining``/``grace_left`` by the same ``dt``. The jump is gated by
-:func:`_make_would_act` — the vectorized mirror of the reference
-engine's ``SchedulerCore.schedule_would_act``, gang fits and the
-backfill scan included — so any tick on which the policy would be
-(re-)invoked still executes and the rng stream, every metric
-timestamp and the full State agree bit-for-bit with ``"tick"`` mode
-at every event boundary. All of it is plain array math, so under
+:func:`_make_would_act_cached` — the vectorized mirror of the
+reference engine's ``SchedulerCore.schedule_would_act``, gang fits
+and the backfill scan included (on acting ticks the gate value is the
+exit evaluation of the shared pass, not a recomputation) — so any
+tick on which the policy would be (re-)invoked still executes and the
+rng stream, every metric timestamp and the full State agree
+bit-for-bit with ``"tick"`` mode at every event boundary. When the
+queue is empty (``_Cache.n_queued == 0``) no finisher can trigger a
+pass, so one iteration drain-jumps straight to the next arrival or
+vacate and bulk-retires every job finishing in between — k
+consecutive events per ``while_loop`` iteration. All of it is plain array math, so under
 ``vmap`` the jump ``dt`` is per-lane: ragged sentinel-padded batches
 and heterogeneous per-trial horizons each fast-forward at their own
 pace.
@@ -151,7 +164,10 @@ def init_state(jobs: Jobs, n_nodes: int, node_cap, seed) -> State:
         t=jnp.zeros((), jnp.int32),
         # sentinel (padding) jobs are born DONE: never arrive, never run
         state=jnp.where(jobs.valid, NOT_ARRIVED, DONE).astype(jnp.int32),
-        remaining=jobs.exec_total.astype(jnp.int32),
+        # forced copy: a no-op astype would ALIAS jobs.exec_total, so
+        # any caller that donates (or mutates) State buffers would
+        # corrupt the workload array under everyone else
+        remaining=jnp.array(jobs.exec_total, jnp.int32),
         assign=jnp.zeros((N, n_nodes), bool),
         preempt_count=jnp.zeros((N,), jnp.int32),
         grace_left=jnp.zeros((N,), jnp.int32),
@@ -175,6 +191,59 @@ def init_state(jobs: Jobs, n_nodes: int, node_cap, seed) -> State:
 
 
 # ---------------------------------------------------------------------------
+# event cache — exact scalars derived from State, threaded as a loop
+# carry so the hot path can gate whole phases on O(1) comparisons
+# ---------------------------------------------------------------------------
+
+_BIG = 1 << 30   # "no event pending" sentinel (i32-safe)
+
+
+class _Cache(NamedTuple):
+    """Exact next-event scalars, a pure function of ``(jobs, State)``
+    (``_cache_from_state``) threaded alongside State through the tick
+    loop so maintaining it costs nothing on no-op ticks:
+
+      * ``next_arrival`` — absolute tick of the earliest NOT_ARRIVED
+        submit (``_BIG`` when none); recomputed only when an arrival
+        fires.
+      * ``next_vacate`` — absolute tick of the earliest grace expiry
+        (``_BIG`` when none — i.e. exactly when no job is in GRACE,
+        since GRACE jobs leave only by vacating); recomputed after
+        vacates and after every acting schedule pass.
+      * ``n_q_te`` — queued-TE count; TEs enter the queue only at
+        arrival (victims are always BE) and leave it only in the
+        schedule pass, so those two sites keep it exact.
+      * ``n_queued`` — total queued count (BE + TE); jobs queue at
+        arrival and at vacate, and leave the queue only in the
+        schedule pass. ``n_queued == 0`` means ``would_act`` is False
+        no matter what finishes — the gate for the bulk finish drain
+        in the event jump.
+
+    Because every field is derivable from State, the cache is purely an
+    optimization: ``make_tick`` rebuilds it per call and parity is
+    untouched."""
+    next_arrival: jax.Array   # () i32
+    next_vacate: jax.Array    # () i32
+    n_q_te: jax.Array         # () i32
+    n_queued: jax.Array       # () i32
+
+
+def _cache_from_state(jobs: Jobs, st: State) -> _Cache:
+    in_grace = st.state == GRACE
+    queued = st.state == QUEUED
+    return _Cache(
+        next_arrival=jnp.min(jnp.where(st.state == NOT_ARRIVED,
+                                       jobs.submit, _BIG)).astype(jnp.int32),
+        next_vacate=jnp.where(
+            in_grace.any(),
+            st.t + jnp.min(jnp.where(in_grace, st.grace_left, _BIG)),
+            _BIG).astype(jnp.int32),
+        n_q_te=jnp.sum(queued & jobs.is_te).astype(jnp.int32),
+        n_queued=jnp.sum(queued).astype(jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
 # primitives
 # ---------------------------------------------------------------------------
 
@@ -194,8 +263,15 @@ def _gang_fits(free: jax.Array, demand: jax.Array,
     """Per-job gang feasibility: (N,) bool, True where at least
     ``width[j]`` nodes of ``free`` each cover ``demand[j]`` (the
     vectorized form of ``_gang_fit(...)[0]`` over every job at once)."""
+    return _fit_counts(free, demand) >= width
+
+
+def _fit_counts(free: jax.Array, demand: jax.Array) -> jax.Array:
+    """Per-job count of nodes whose free vector covers the per-node
+    demand: (N,) i32. ``_gang_fits`` is ``counts >= width``; the fused
+    schedule_step kernel computes the same reduction in-tile."""
     fits = jnp.all(free[None, :, :] >= demand[:, None, :] - _EPS, axis=2)
-    return jnp.sum(fits, axis=1) >= width
+    return jnp.sum(fits, axis=1).astype(jnp.int32)
 
 
 def _best_victim_node(free: jax.Array, assign: jax.Array,
@@ -225,52 +301,56 @@ def _gang_release(assign: jax.Array, demand: jax.Array,
 
 
 def _place(st: State, jobs: Jobs, j: jax.Array, nodes: jax.Array) -> State:
-    """Start job j on the ``nodes`` mask (assumes the gang fits)."""
-    N = jobs.submit.shape[0]
-    oh = _onehot(N, j)
+    """Start job j on the ``nodes`` mask (assumes the gang fits).
+    Scatter (row-indexed) updates, not full-array wheres — this runs
+    once per placement inside the schedule while-loops, so it must not
+    pay O(N) per job started."""
     resumed = st.awaiting_resume[j]
     return st._replace(
-        state=jnp.where(oh, RUNNING, st.state),
-        assign=jnp.where(oh[:, None], nodes[None, :], st.assign),
-        queue_key=jnp.where(oh, _INF, st.queue_key),
+        state=st.state.at[j].set(RUNNING),
+        assign=st.assign.at[j].set(nodes),
+        queue_key=st.queue_key.at[j].set(_INF),
         free=st.free - jobs.demand[j][None, :]
         * nodes[:, None].astype(jnp.float32),
-        last_resume=jnp.where(oh & resumed, st.t, st.last_resume),
-        awaiting_resume=st.awaiting_resume & ~oh,
+        last_resume=st.last_resume.at[j].set(
+            jnp.where(resumed, st.t, st.last_resume[j])),
+        awaiting_resume=st.awaiting_resume.at[j].set(False),
     )
 
 
 def _signal_one(st: State, jobs: Jobs, v: jax.Array, te: jax.Array) -> State:
     """Signal preemption of running BE job v for TE job te (scalars).
-    Gang victims promise / vacate ALL their nodes at once."""
-    N = jobs.submit.shape[0]
-    oh = _onehot(N, v)
+    Gang victims promise / vacate ALL their nodes at once.
+
+    GP == 0 vacates inline (same tick); GP > 0 enters grace and the
+    victim's resources become "pending". Both branches are expressed as
+    per-victim scatters selected by the scalar ``gp0`` — one row write
+    per field instead of the old two-full-State ``tree.map`` select, so
+    a signal costs O(nodes), not O(N)."""
+    row = st.assign[v]
     gp0 = jobs.gp[v] == 0
-    d = jobs.demand[v][None, :] * st.assign[v][:, None].astype(jnp.float32)
-    te_oh = _onehot(N, te)
-    st = st._replace(
-        preempt_count=st.preempt_count + oh.astype(jnp.int32),
-        last_signal=jnp.where(oh, st.t, st.last_signal),
-        awaiting_resume=st.awaiting_resume | oh,
+    d = jobs.demand[v][None, :] * row[:, None].astype(jnp.float32)
+    zero = jnp.zeros_like(d)
+    return st._replace(
+        preempt_count=st.preempt_count.at[v].add(1),
+        last_signal=st.last_signal.at[v].set(st.t),
+        awaiting_resume=st.awaiting_resume.at[v].set(True),
+        state=st.state.at[v].set(jnp.where(gp0, QUEUED, GRACE)),
+        assign=st.assign.at[v].set(row & ~gp0),
+        queue_key=st.queue_key.at[v].set(
+            jnp.where(gp0, st.top_key, st.queue_key[v])),
+        top_key=jnp.where(gp0, st.top_key - 1.0, st.top_key),
+        free=st.free + jnp.where(gp0, d, zero),
+        pending_free=st.pending_free + jnp.where(gp0, zero, d),
+        last_vacate=st.last_vacate.at[v].set(
+            jnp.where(gp0, st.t, st.last_vacate[v])),
+        grace_left=st.grace_left.at[v].set(
+            jnp.where(gp0, st.grace_left[v], jobs.gp[v])),
+        victim_of=st.victim_of.at[v].set(
+            jnp.where(gp0, st.victim_of[v], te)),
+        te_pending=st.te_pending.at[te].add(
+            jnp.where(gp0, 0, 1)),
     )
-    # GP == 0: vacate inline (same tick), matching the reference.
-    vac = st._replace(
-        state=jnp.where(oh, QUEUED, st.state),
-        assign=st.assign & ~oh[:, None],
-        queue_key=jnp.where(oh, st.top_key, st.queue_key),
-        top_key=st.top_key - 1.0,
-        free=st.free + d,
-        last_vacate=jnp.where(oh, st.t, st.last_vacate),
-    )
-    # GP > 0: enter grace; resources become "pending".
-    grc = st._replace(
-        state=jnp.where(oh, GRACE, st.state),
-        grace_left=jnp.where(oh, jobs.gp[v], st.grace_left),
-        victim_of=jnp.where(oh, te, st.victim_of),
-        te_pending=st.te_pending + te_oh.astype(jnp.int32),
-        pending_free=st.pending_free + d,
-    )
-    return jax.tree.map(lambda a, b: jnp.where(gp0, a, b), vac, grc)
 
 
 # ---------------------------------------------------------------------------
@@ -293,8 +373,11 @@ def _score_select(st: State, jobs: Jobs, te: jax.Array, pol, node_cap, s,
     cand = (st.state == RUNNING) & ~jobs.is_te
     under = st.preempt_count < P
     if backend != "jnp":
+        be_q = (st.state == QUEUED) & ~jobs.is_te
         main = pol.jax_score_accel(backend, jobs, te, st.free, st.assign,
-                                   cand, under, node_cap, s)
+                                   cand, under, node_cap, s,
+                                   pending_free=st.pending_free,
+                                   queue_key=st.queue_key, be_q=be_q)
         mask_any = main >= 0
     else:
         score = pol.jax_score(jobs, cand, node_cap, s)
@@ -473,9 +556,96 @@ def _gang_select(st: State, jobs: Jobs, te: jax.Array, rank_val, P,
 # event-compressed time advancement (SimConfig.time_mode, DESIGN.md §7)
 # ---------------------------------------------------------------------------
 
-def _make_would_act(jobs: Jobs, preemptive: bool, backfill: bool = False,
-                    backfill_depth: int = 64):
-    """Vectorized mirror of ``SchedulerCore.schedule_would_act``.
+class _Pass(NamedTuple):
+    """One fused schedule-pass evaluation over the current State — the
+    engine-side (TE-independent) half of the ``kernels/schedule_step``
+    contract, computed ONCE per state version and shared by the
+    would-act gate, the TE lane and the BE lane inside a single
+    while-loop iteration (the TE-dependent half — Eq. 3 score, Eq. 2
+    best-node reduction, Eq. 4 argmin — is per-trigger and lives in
+    ``_score_select`` / the fused kernel)."""
+    fits: jax.Array      # (N, M) bool : free covers demand, per node
+    fit_now: jax.Array   # (N,)  i32  : row sums of ``fits``
+    fit_pend: jax.Array  # (N,)  i32  : counts vs free + pending_free
+    be_pick: jax.Array   # ()    i32  : BE job the lane would try next
+    be_can: jax.Array    # ()    bool : the pick exists and fits
+    nskip: jax.Array     # ()    i32  : non-fitting queued BE ahead of
+    #                                   the pick (backfill scan budget)
+
+
+def _make_queue_pass(jobs: Jobs, backfill: bool):
+    """Build ``queue_pass(st, be_mask) -> _Pass``: the per-job fit
+    tile against ``free`` (and, bitwise-gated on any pending residue,
+    against ``free + pending_free`` — residue-exact mirror of the full
+    promised-capacity evaluation), plus the BE queue scan over
+    ``be_mask``. Without backfill the pick is the queue head
+    (head-of-line blocking: ``be_can`` is False when the head does not
+    fit); with backfill it is the first FITTING job in key order and
+    ``nskip`` counts the non-fitting jobs ahead of it (the bounded
+    scan depth the reference consumes before placing it)."""
+    def queue_pass(st: State, be_mask: jax.Array) -> _Pass:
+        fits_b = jnp.all(st.free[None, :, :]
+                         >= jobs.demand[:, None, :] - _EPS, axis=2)
+        fit_now = jnp.sum(fits_b, axis=1).astype(jnp.int32)
+        fit_pend = jax.lax.cond(
+            (st.pending_free != 0).any(),
+            lambda: _fit_counts(st.free + st.pending_free, jobs.demand),
+            lambda: fit_now)
+        okj = fit_now >= jobs.width
+        if not backfill:
+            pick = jnp.argmin(jnp.where(be_mask, st.queue_key, _INF)) \
+                .astype(jnp.int32)
+            be_can = be_mask.any() & okj[pick]
+            nskip = jnp.int32(0)
+        else:
+            mq = be_mask & okj
+            be_can = mq.any()
+            pick = jnp.argmin(jnp.where(mq, st.queue_key, _INF)) \
+                .astype(jnp.int32)
+            pick_key = jnp.where(be_can, st.queue_key[pick], _INF)
+            nskip = jnp.sum(be_mask & ~okj
+                            & (st.queue_key < pick_key)).astype(jnp.int32)
+        return _Pass(fits_b, fit_now, fit_pend, pick, be_can, nskip)
+
+    return queue_pass
+
+
+def _make_gate(jobs: Jobs, preemptive: bool, backfill: bool = False,
+               backfill_depth: int = 64):
+    """Gate glue over a precomputed :class:`_Pass` — the same verdict
+    as :func:`_make_would_act_cached`, for call sites that already
+    hold a fresh pass (the schedule lanes' exit evaluation)."""
+    N = jobs.submit.shape[0]
+    depth = min(int(backfill_depth), N)
+
+    def gate(st: State, ps: _Pass) -> jax.Array:
+        act = ps.be_can if not backfill else ps.be_can & (ps.nskip < depth)
+        if preemptive:
+            te_q = (st.state == QUEUED) & jobs.is_te
+            has_cand = ((st.state == RUNNING) & ~jobs.is_te).any()
+            trigger = (st.te_pending == 0) & ~(ps.fit_pend >= jobs.width) \
+                & has_cand
+            act = act | (te_q & ((ps.fit_now >= jobs.width)
+                                 | trigger)).any()
+        return act
+
+    return gate
+
+
+def _make_would_act_cached(jobs: Jobs, preemptive: bool,
+                           backfill: bool = False,
+                           backfill_depth: int = 64):
+    """Vectorized mirror of ``SchedulerCore.schedule_would_act``,
+    taking the threaded ``_Cache`` so the common no-op evaluation is
+    cheap —
+
+      * the BE head check gathers ONE demand row and fits it against
+        the free vectors (O(nodes)), instead of the full (jobs, nodes)
+        feasibility tile;
+      * the whole TE part (fit counts, trigger arming) sits behind an
+        O(1) ``n_q_te > 0`` gate, and the pending-capacity recount
+        behind a ``pending_free != 0`` gate (bitwise — residue-exact
+        mirror of the full ``free + pending_free`` evaluation).
 
     True whenever a schedule pass on this State could start a job or
     (re-)invoke victim selection: a queued TE's gang fits, a queued
@@ -492,86 +662,63 @@ def _make_would_act(jobs: Jobs, preemptive: bool, backfill: bool = False,
     N = jobs.submit.shape[0]
     depth = min(int(backfill_depth), N)
 
-    def would_act(st: State) -> jax.Array:
+    def would_act(st: State, cache: _Cache) -> jax.Array:
         queued = st.state == QUEUED
         be_q = queued & ~jobs.is_te if preemptive else queued
-        fits_now = _gang_fits(st.free, jobs.demand, jobs.width)
         if not backfill:
             head = jnp.argmin(jnp.where(be_q, st.queue_key, _INF))
-            act = be_q.any() & fits_now[head]
+            ok_head = jnp.sum(jnp.all(
+                st.free >= jobs.demand[head][None, :] - _EPS,
+                axis=1)) >= jobs.width[head]
+            act = be_q.any() & ok_head
         else:
             # the reference scan examines the first `depth` jobs in
             # queue order and acts iff any of them fits
+            fits_all = _gang_fits(st.free, jobs.demand, jobs.width)
             order = jnp.argsort(jnp.where(be_q, st.queue_key, _INF))
             scan = order[:depth]
-            act = (be_q[scan] & fits_now[scan]).any()
+            act = (be_q[scan] & fits_all[scan]).any()
         if preemptive:
-            te_q = queued & jobs.is_te
-            fits_pend = _gang_fits(st.free + st.pending_free,
-                                   jobs.demand, jobs.width)
-            has_cand = ((st.state == RUNNING) & ~jobs.is_te).any()
-            trigger = (st.te_pending == 0) & ~fits_pend & has_cand
-            act = act | (te_q & (fits_now | trigger)).any()
+            def te_part():
+                te_q = queued & jobs.is_te
+                fits_now = _fit_counts(st.free, jobs.demand) >= jobs.width
+                fits_pend = jax.lax.cond(
+                    (st.pending_free != 0).any(),
+                    lambda: _fit_counts(st.free + st.pending_free,
+                                        jobs.demand) >= jobs.width,
+                    lambda: fits_now)
+                has_cand = ((st.state == RUNNING) & ~jobs.is_te).any()
+                trigger = (st.te_pending == 0) & ~fits_pend & has_cand
+                return (te_q & (fits_now | trigger)).any()
+
+            act = act | jax.lax.cond(cache.n_q_te > 0, te_part,
+                                     lambda: jnp.asarray(False))
         return act
 
     return would_act
 
 
-def _make_event_advance(jobs: Jobs, preemptive: bool, n_jobs: int,
-                        max_ticks: int, backfill: bool,
-                        backfill_depth: int):
-    """Build the post-tick event jump: advance ``dt`` quanta in one
-    step, where ``dt`` is the gap to the next event — the masked
-    minimum over (next valid arrival, ``t + remaining`` of running
-    jobs, ``t + grace_left`` of GRACE jobs) — and every skipped tick is
-    a pure countdown (``would_act`` False, so free vectors, queues and
-    the rng stream provably cannot change before the event).
-    ``remaining``/``grace_left`` are bulk-decremented by the same
-    ``dt``; ``last_signal``/``last_vacate``/``last_resume`` need no
-    adjustment because every tick that records them still executes.
-    Plain array math: under ``vmap`` the jump is per-lane.
-    """
-    would_act = _make_would_act(jobs, preemptive, backfill, backfill_depth)
-    big = jnp.int32(max_ticks)
+def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
+               s=None, P=None, time_mode: str = None,
+               max_ticks: int = 1 << 22):
+    """Build the ``(State, _Cache) -> (State, _Cache)`` while-loop
+    body: one scheduling tick, plus — in ``"event"`` time mode — the
+    event jump that compresses the following run of provably no-op
+    ticks into a single ``dt`` step (bit-exact either way; see module
+    docstring and DESIGN.md §8).
 
-    def advance(st: State) -> State:
-        t1 = st.t                       # the tick just executed is t1 - 1
-        running = st.state == RUNNING
-        in_grace = st.state == GRACE
-        # Deltas from t1 to each next event (all masked mins; >= 0):
-        # a NOT_ARRIVED job enters the queue at the top of tick submit;
-        # a running job with remaining r finishes during tick t1 + r - 1;
-        # a GRACE job with grace_left g vacates at the top of tick t1 + g.
-        d_arr = jnp.min(jnp.where(st.state == NOT_ARRIVED,
-                                  jobs.submit - t1, big))
-        d_fin = jnp.min(jnp.where(running, st.remaining - 1, big))
-        d_vac = jnp.min(jnp.where(in_grace, st.grace_left, big))
-        dt = jnp.minimum(jnp.minimum(d_arr, d_fin), d_vac)
-        # No events pending at all -> jump to max_ticks (the tick loop's
-        # stall terminal, same as tick mode reaching its bound); never
-        # jump while the schedule could still act or everything is done.
-        dt = jnp.clip(dt, 0, jnp.maximum(big - t1, 0))
-        hold = would_act(st) | (st.n_done >= n_jobs)
-        dt = jnp.where(hold, 0, dt).astype(jnp.int32)
-        return st._replace(
-            t=t1 + dt,
-            remaining=st.remaining - dt * running.astype(jnp.int32),
-            grace_left=st.grace_left - dt * in_grace.astype(jnp.int32),
-        )
+    Every phase is gated so a no-op tick touches as few arrays as
+    possible: arrivals and vacates fire only when the cache says their
+    event is due, the whole schedule pass sits behind one
+    ``would_act`` evaluation (rng-safe — all rng draws live behind the
+    preemption trigger, which ``would_act`` mirrors exactly), and the
+    post-run jump re-evaluates ``would_act`` only when the tick acted
+    or finished jobs (otherwise the pre-run value provably still
+    holds: the run phase without finishers only decrements clocks).
 
-    return advance
-
-
-def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
-              s=None, P=None, time_mode: str = None,
-              max_ticks: int = 1 << 22):
-    """Build the while-loop body: one scheduling tick, plus — in
-    ``"event"`` time mode — the event jump that compresses the
-    following run of provably no-op ticks into a single ``dt`` step
-    (bit-exact either way; see module docstring). ``time_mode``
-    defaults to ``cfg.time_mode``; ``s`` and ``P`` may be traced
-    scalars (for vmapped sweeps); ``max_ticks`` bounds the stall jump
-    and must match the driving loop's bound."""
+    ``time_mode`` defaults to ``cfg.time_mode``; ``s`` and ``P`` may
+    be traced scalars (for vmapped sweeps); ``max_ticks`` bounds the
+    stall jump and must match the driving loop's bound."""
     node_cap = jnp.asarray(cfg.cluster.node.as_tuple(), jnp.float32)
     N = jobs.submit.shape[0]
     time_mode = cfg.time_mode if time_mode is None else time_mode
@@ -620,26 +767,55 @@ def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
 
         return jax.lax.cond(jobs.width[te] == 1, width1, gang, st)
 
-    def te_lane(st: State) -> State:
+    queue_pass = _make_queue_pass(jobs, cfg.backfill)
+    gate = _make_gate(jobs, preemptive, cfg.backfill, cfg.backfill_depth)
+    would_act = _make_would_act_cached(jobs, preemptive, cfg.backfill,
+                                       cfg.backfill_depth)
+
+    def head_mask(st):
+        q = st.state == QUEUED
+        if preemptive:
+            q = q & ~jobs.is_te
+        return q
+
+    def te_actionable(st: State, ps: _Pass, processed):
+        """(queued-TE mask, actionable subset) from the shared pass:
+        gang fits now, or the preemption trigger is armed."""
+        q = (st.state == QUEUED) & jobs.is_te & ~processed
+        has_cand = ((st.state == RUNNING) & ~jobs.is_te).any()
+        trigger = (st.te_pending == 0) & ~(ps.fit_pend >= jobs.width) \
+            & has_cand
+        return q, q & ((ps.fit_now >= jobs.width) | trigger)
+
+    def te_lane(st: State, ps: _Pass):
+        """Process queued TEs in queue-key order — but only the
+        ACTIONABLE ones (gang fits now, or the preemption trigger is
+        armed). A queued TE that is neither is a provable no-op under
+        the serial reference walk (no placement, no signal, no rng),
+        so every non-actionable TE ahead of the next actionable one is
+        skipped wholesale: iterations scale with TEs that actually
+        act, not with queue depth. Every action refreshes the shared
+        pass, which doubles as the loop's exit evaluation."""
         def cond(carry):
-            st, processed = carry
-            q = (st.state == QUEUED) & jobs.is_te & ~processed
-            return q.any()
+            return carry[3].any()
 
         def body(carry):
-            st, processed = carry
+            st, ps, processed, can = carry
+            j = jnp.argmin(jnp.where(can, st.queue_key, _INF)) \
+                .astype(jnp.int32)
+            # everything queued ahead of j is non-actionable: mark it
+            # processed together with j itself
             q = (st.state == QUEUED) & jobs.is_te & ~processed
-            j = jnp.argmin(jnp.where(q, st.queue_key, _INF)).astype(jnp.int32)
-            ok, nodes = _gang_fit(st.free, jobs.demand[j], jobs.width[j])
+            processed = processed | (q & (st.queue_key <= st.queue_key[j]))
+            ok = ps.fit_now[j] >= jobs.width[j]
+            row = ps.fits[j]
+            nodes = row & (jnp.cumsum(row) <= jobs.width[j]) & ok
 
             def place(st):
                 return _place(st, jobs, j, nodes)
 
             def blocked(st):
-                promised = st.free + st.pending_free
-                fits_pending = jnp.sum(jnp.all(
-                    promised >= jobs.demand[j][None, :] - _EPS,
-                    axis=1)) >= jobs.width[j]
+                fits_pending = ps.fit_pend[j] >= jobs.width[j]
                 has_cand = ((st.state == RUNNING) & ~jobs.is_te).any()
                 do = (st.te_pending[j] == 0) & ~fits_pending & has_cand
                 st = jax.lax.cond(do,
@@ -655,121 +831,318 @@ def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
                                     lambda s_: s_, st)
 
             st = jax.lax.cond(ok, place, blocked, st)
-            return st, processed | _onehot(N, j)
+            ps = queue_pass(st, head_mask(st))
+            _, can = te_actionable(st, ps, processed)
+            return st, ps, processed, can
 
-        st, _ = jax.lax.while_loop(cond, body,
-                                   (st, jnp.zeros((N,), bool)))
-        return st
+        processed0 = jnp.zeros((N,), bool)
+        _, can0 = te_actionable(st, ps, processed0)
+        st, ps, _, _ = jax.lax.while_loop(
+            cond, body, (st, ps, processed0, can0))
+        return st, ps
 
-    def head_mask(st):
-        q = st.state == QUEUED
-        if preemptive:
-            q = q & ~jobs.is_te
-        return q
-
-    def be_queue(st: State) -> State:
-        def cond(carry):
-            st, blocked = carry
-            return (~blocked) & head_mask(st).any()
-
+    def be_queue(st: State, ps: _Pass):
+        """FIFO head-of-line BE lane: place the head while it fits
+        (the pass already holds the head's identity, fit verdict and
+        node-fit row — the body is one placement scatter plus the
+        pass refresh)."""
         def body(carry):
-            st, _ = carry
-            q = head_mask(st)
-            j = jnp.argmin(jnp.where(q, st.queue_key, _INF)).astype(jnp.int32)
-            ok, nodes = _gang_fit(st.free, jobs.demand[j], jobs.width[j])
-            st = jax.lax.cond(ok,
-                              lambda s_: _place(s_, jobs, j, nodes),
-                              lambda s_: s_, st)
-            return st, ~ok
+            st, ps = carry
+            j = ps.be_pick
+            row = ps.fits[j]
+            nodes = row & (jnp.cumsum(row) <= jobs.width[j])
+            st = _place(st, jobs, j, nodes)
+            ps = queue_pass(st, head_mask(st))
+            return st, ps
 
-        st, _ = jax.lax.while_loop(cond, body, (st, jnp.asarray(False)))
-        return st
+        return jax.lax.while_loop(lambda c: c[1].be_can, body, (st, ps))
 
-    def be_queue_backfill(st: State) -> State:
+    def be_queue_backfill(st: State, ps: _Pass):
         """Bounded first-fit backfill (``SchedulerCore.schedule``'s
         beyond-paper branch): walk the BE queue in FIFO order, start
         whatever fits, skip (at most ``backfill_depth``) whatever does
         not — skipped jobs keep their keys and are not revisited this
-        pass."""
+        pass. The pass's ``be_pick``/``nskip`` fold the reference's
+        one-job-per-iteration scan into one placement per iteration:
+        the pick is placeable iff the skips ahead of it still fit the
+        depth budget, and those skips are marked in bulk."""
         depth = jnp.int32(cfg.backfill_depth)
 
         def cond(carry):
-            st, skipped, scanned = carry
-            q = head_mask(st) & ~skipped
-            return q.any() & (scanned < depth)
+            st, ps, skipped, scanned = carry
+            return ps.be_can & (scanned + ps.nskip < depth)
 
         def body(carry):
-            st, skipped, scanned = carry
+            st, ps, skipped, scanned = carry
+            j = ps.be_pick
             q = head_mask(st) & ~skipped
-            j = jnp.argmin(jnp.where(q, st.queue_key, _INF)).astype(jnp.int32)
-            ok, nodes = _gang_fit(st.free, jobs.demand[j], jobs.width[j])
-            st = jax.lax.cond(ok,
-                              lambda s_: _place(s_, jobs, j, nodes),
-                              lambda s_: s_, st)
-            return (st, skipped | (~ok & _onehot(N, j)),
-                    scanned + (~ok).astype(jnp.int32))
+            skipped = skipped | (q & (ps.fit_now < jobs.width)
+                                 & (st.queue_key < st.queue_key[j]))
+            scanned = scanned + ps.nskip
+            row = ps.fits[j]
+            nodes = row & (jnp.cumsum(row) <= jobs.width[j])
+            st = _place(st, jobs, j, nodes)
+            ps = queue_pass(st, head_mask(st) & ~skipped)
+            return st, ps, skipped, scanned
 
-        st, _, _ = jax.lax.while_loop(
-            cond, body, (st, jnp.zeros((N,), bool), jnp.int32(0)))
-        return st
+        st, ps, _, _ = jax.lax.while_loop(
+            cond, body, (st, ps, jnp.zeros((N,), bool), jnp.int32(0)))
+        # the lane's pass excludes skipped jobs; refresh over the full
+        # queue so the caller's gate re-evaluation sees tick semantics
+        return st, queue_pass(st, head_mask(st))
 
-    def tick(st: State) -> State:
-        t = st.t
-        # arrivals (queue key = submit-order index; jobs pre-sorted)
-        arrive = (jobs.submit <= t) & (st.state == NOT_ARRIVED)
-        st = st._replace(
-            state=jnp.where(arrive, QUEUED, st.state),
-            queue_key=jnp.where(arrive, jnp.arange(N, dtype=jnp.float32),
-                                st.queue_key),
-        )
-        # vacates (grace expired), processed in job-index order
-        vac = (st.state == GRACE) & (st.grace_left <= 0)
-        rank = jnp.cumsum(vac) - 1
-        n_vac = jnp.sum(vac)
-        te_dec = jnp.zeros((N,), jnp.int32).at[
-            jnp.where(vac, st.victim_of, N)].add(1, mode="drop")
-        freed = _gang_release(st.assign, jobs.demand, vac)
-        st = st._replace(
-            queue_key=jnp.where(vac, st.top_key - rank.astype(jnp.float32),
-                                st.queue_key),
-            top_key=st.top_key - n_vac.astype(jnp.float32),
-            free=st.free + freed,
-            pending_free=st.pending_free - freed,
-            last_vacate=jnp.where(vac, t, st.last_vacate),
-            te_pending=st.te_pending - te_dec,
-            victim_of=jnp.where(vac, -1, st.victim_of),
-            assign=st.assign & ~vac[:, None],
-            state=jnp.where(vac, QUEUED, st.state),
-        )
-        # schedule
+    arrival_keys = jnp.arange(N, dtype=jnp.float32)
+
+    def arrivals(st: State, cache: _Cache):
+        """Queue every submitted job (key = submit-order index; jobs
+        pre-sorted) — gated on the cached next-arrival tick, so ticks
+        between arrivals skip the whole phase."""
+        def fire(args):
+            st, cache = args
+            arrive = (jobs.submit <= st.t) & (st.state == NOT_ARRIVED)
+            state = jnp.where(arrive, QUEUED, st.state)
+            st = st._replace(
+                state=state,
+                queue_key=jnp.where(arrive, arrival_keys, st.queue_key))
+            cache = cache._replace(
+                next_arrival=jnp.min(jnp.where(
+                    state == NOT_ARRIVED, jobs.submit,
+                    _BIG)).astype(jnp.int32),
+                n_q_te=cache.n_q_te + jnp.sum(
+                    arrive & jobs.is_te).astype(jnp.int32),
+                n_queued=cache.n_queued
+                + jnp.sum(arrive).astype(jnp.int32))
+            return st, cache
+
+        return jax.lax.cond(cache.next_arrival <= st.t, fire,
+                            lambda args: args, (st, cache))
+
+    def vacates(st: State, cache: _Cache):
+        """Vacate grace-expired victims (processed in job-index order)
+        — gated on the cached (exact) next grace expiry."""
+        def fire(args):
+            st, cache = args
+            vac = (st.state == GRACE) & (st.grace_left <= 0)
+            rank = jnp.cumsum(vac) - 1
+            n_vac = jnp.sum(vac)
+            te_dec = jnp.zeros((N,), jnp.int32).at[
+                jnp.where(vac, st.victim_of, N)].add(1, mode="drop")
+            freed = _gang_release(st.assign, jobs.demand, vac)
+            st = st._replace(
+                queue_key=jnp.where(
+                    vac, st.top_key - rank.astype(jnp.float32),
+                    st.queue_key),
+                top_key=st.top_key - n_vac.astype(jnp.float32),
+                free=st.free + freed,
+                pending_free=st.pending_free - freed,
+                last_vacate=jnp.where(vac, st.t, st.last_vacate),
+                te_pending=st.te_pending - te_dec,
+                victim_of=jnp.where(vac, -1, st.victim_of),
+                assign=st.assign & ~vac[:, None],
+                state=jnp.where(vac, QUEUED, st.state),
+            )
+            in_grace = st.state == GRACE
+            cache = cache._replace(
+                next_vacate=jnp.where(
+                    in_grace.any(),
+                    st.t + jnp.min(jnp.where(in_grace, st.grace_left,
+                                             _BIG)),
+                    _BIG).astype(jnp.int32),
+                n_queued=cache.n_queued + n_vac.astype(jnp.int32))
+            return st, cache
+
+        return jax.lax.cond(cache.next_vacate <= st.t, fire,
+                            lambda args: args, (st, cache))
+
+    def schedule(args):
+        """The full schedule pass + cache refresh — runs only on ticks
+        where ``would_act`` fired. Computes the shared pass once and
+        threads it through both lanes; the lanes' final refresh
+        doubles as the event jump's gate re-evaluation (``act_next``),
+        so an acting tick never recomputes ``would_act`` from
+        scratch."""
+        st, cache = args
+        ps = queue_pass(st, head_mask(st))
         if preemptive:
-            st = te_lane(st)
-        st = be_queue_backfill(st) if cfg.backfill else be_queue(st)
-        # run one minute
+            st, ps = te_lane(st, ps)
+        st, ps = (be_queue_backfill(st, ps) if cfg.backfill
+                  else be_queue(st, ps))
+        in_grace = st.state == GRACE
+        queued = st.state == QUEUED
+        cache = cache._replace(
+            next_vacate=jnp.where(
+                in_grace.any(),
+                st.t + jnp.min(jnp.where(in_grace, st.grace_left, _BIG)),
+                _BIG).astype(jnp.int32),
+            n_q_te=jnp.sum(queued & jobs.is_te).astype(jnp.int32),
+            n_queued=jnp.sum(queued).astype(jnp.int32))
+        return st, cache, gate(st, ps)
+
+    def run_minute(st: State, cache: _Cache):
+        """Decrement running clocks, record finishers (one scatter per
+        finishing job, behind an ``nfin > 0`` gate), decrement grace
+        clocks (gated on any grace job existing)."""
         running = st.state == RUNNING
         remaining = st.remaining - running.astype(jnp.int32)
         fin = running & (remaining <= 0)
+        nfin = jnp.sum(fin).astype(jnp.int32)
+        st = st._replace(remaining=remaining)
+
+        def finish_all(args):
+            st, fin = args
+
+            def fbody(carry):
+                st, f = carry
+                j = jnp.argmax(f).astype(jnp.int32)
+                row = st.assign[j]
+                st = st._replace(
+                    state=st.state.at[j].set(DONE),
+                    finish=st.finish.at[j].set(st.t + 1),
+                    free=st.free + jobs.demand[j][None, :]
+                    * row[:, None].astype(jnp.float32),
+                    assign=st.assign.at[j].set(jnp.zeros_like(row)),
+                    n_done=st.n_done + 1,
+                )
+                return st, f.at[j].set(False)
+
+            st, _ = jax.lax.while_loop(lambda c: c[1].any(), fbody,
+                                       (st, fin))
+            return st
+
+        st = jax.lax.cond(nfin > 0, finish_all, lambda args: args[0],
+                          (st, fin))
         st = st._replace(
-            remaining=remaining,
-            free=st.free + _gang_release(st.assign, jobs.demand, fin),
-            assign=st.assign & ~fin[:, None],
-            state=jnp.where(fin, DONE, st.state),
-            finish=jnp.where(fin, t + 1, st.finish),
-            n_done=st.n_done + jnp.sum(fin),
-            grace_left=st.grace_left - (st.state == GRACE).astype(jnp.int32),
-            t=t + 1,
+            grace_left=jax.lax.cond(
+                cache.next_vacate < _BIG,
+                lambda g: g - (st.state == GRACE).astype(jnp.int32),
+                lambda g: g, st.grace_left),
+            t=st.t + 1,
         )
+        return st, nfin
+
+    big = jnp.int32(max_ticks)
+
+    def jump(st: State, cache: _Cache, hold) -> State:
+        """Advance ``dt`` quanta in one step — the gap to the next
+        event (cached next arrival / grace expiry, plus the masked-min
+        next finish) — bulk-decrementing the clocks by the same
+        ``dt``. Every skipped tick is a pure countdown (``hold`` is
+        False only when ``would_act`` provably stays False), so free
+        vectors, queues and the rng stream cannot change before the
+        event; ``last_*`` metrics need no adjustment because every
+        tick that records them still executes. Plain array math: under
+        ``vmap`` the jump is per-lane."""
+        def fire(st):
+            t1 = st.t
+            running = st.state == RUNNING
+            in_grace = st.state == GRACE
+            # Deltas from t1 (all >= 0): a NOT_ARRIVED job queues at
+            # the top of tick submit; a running job with remaining r
+            # finishes during tick t1 + r - 1; a GRACE job vacates at
+            # the cached expiry. No events pending at all -> jump to
+            # max_ticks (the tick loop's stall terminal).
+            d_arr = cache.next_arrival - t1
+            d_vac = cache.next_vacate - t1
+            d_ev = jnp.minimum(d_arr, d_vac)
+
+            def drain(st):
+                # Nothing queued: would_act stays False no matter what
+                # finishes (every act needs a queued job), so jump
+                # straight to the next arrival / grace expiry and
+                # retire EVERY finish on the way in one bulk update —
+                # k consecutive finish events collapse into this one
+                # iteration. With nothing left to arrive or vacate,
+                # land on the last finish instead (the loop's natural
+                # terminal boundary, same t as tick mode).
+                last_fin = jnp.max(jnp.where(running, st.remaining, 0))
+                dt = jnp.where(d_ev >= _BIG - t1, last_fin,
+                               jnp.clip(d_ev, 0,
+                                        jnp.maximum(big - t1, 0)))
+                dt = dt.astype(jnp.int32)
+                fin = running & (st.remaining <= dt)
+                return st._replace(
+                    t=t1 + dt,
+                    remaining=st.remaining - jnp.where(
+                        fin, st.remaining, dt * running.astype(jnp.int32)),
+                    state=jnp.where(fin, DONE, st.state),
+                    finish=jnp.where(fin, t1 + st.remaining, st.finish),
+                    free=st.free + _gang_release(st.assign, jobs.demand,
+                                                 fin),
+                    assign=st.assign & ~fin[:, None],
+                    n_done=st.n_done + jnp.sum(fin),
+                    grace_left=st.grace_left
+                    - dt * in_grace.astype(jnp.int32),
+                )
+
+            def normal(st):
+                d_fin = jnp.min(jnp.where(running, st.remaining - 1, big))
+                dt = jnp.minimum(d_ev, d_fin)
+                dt = jnp.clip(dt, 0, jnp.maximum(big - t1, 0)) \
+                    .astype(jnp.int32)
+                return st._replace(
+                    t=t1 + dt,
+                    remaining=st.remaining
+                    - dt * running.astype(jnp.int32),
+                    grace_left=st.grace_left
+                    - dt * in_grace.astype(jnp.int32),
+                )
+
+            return jax.lax.cond(cache.n_queued == 0, drain, normal, st)
+
+        return jax.lax.cond(hold, lambda st: st, fire, st)
+
+    def step(carry):
+        st, cache = carry
+        st, cache = arrivals(st, cache)
+        st, cache = vacates(st, cache)
+        # Every schedule action starts from a queued job, so an empty
+        # queue short-circuits the whole gate.
+        act = jax.lax.cond(cache.n_queued > 0,
+                           lambda: would_act(st, cache),
+                           lambda: jnp.asarray(False))
+        st, cache, act_next = jax.lax.cond(
+            act, schedule,
+            lambda args: (args[0], args[1], jnp.asarray(False)),
+            (st, cache))
+        st, nfin = run_minute(st, cache)
+        if time_mode == "tick":
+            return st, cache
+        # Event jump. When jobs finished, the freed capacity
+        # invalidates the pre-run gate verdict — re-evaluate it (an
+        # empty queue stays a no-act); otherwise ``act_next`` — the
+        # schedule lanes' own exit evaluation — already answers for
+        # the post-run state, which differs only by clock decrements
+        # the gate does not read.
+        hold_act = jax.lax.cond(
+            nfin > 0,
+            lambda: jax.lax.cond(cache.n_queued > 0,
+                                 lambda: would_act(st, cache),
+                                 lambda: jnp.asarray(False)),
+            lambda: act_next)
+        hold = (st.n_done >= N) | hold_act
+        return jump(st, cache, hold), cache
+
+    return step
+
+
+def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
+              s=None, P=None, time_mode: str = None,
+              max_ticks: int = 1 << 22):
+    """Build a ``State -> State`` step: one scheduling tick ("tick"
+    mode) or one executed tick plus the event jump ("event" mode) —
+    the per-step public face of :func:`_make_step`, used by the
+    invariant suites to observe every intermediate State. The event
+    cache is rebuilt from the State on every call (it is a pure
+    function of the State), so single-stepping is bit-identical to
+    :func:`run`'s threaded loop."""
+    step = _make_step(cfg, jobs, n_nodes, s=s, P=P, time_mode=time_mode,
+                      max_ticks=max_ticks)
+
+    def tick_step(st: State) -> State:
+        st, _ = step((st, _cache_from_state(jobs, st)))
         return st
 
-    if time_mode == "tick":
-        return tick
-    advance = _make_event_advance(jobs, preemptive, N, max_ticks,
-                                  cfg.backfill, cfg.backfill_depth)
-
-    def event_step(st: State) -> State:
-        return advance(tick(st))
-
-    return event_step
+    return tick_step
 
 
 def run(cfg: SimConfig, jobs: Jobs, seed=0,
@@ -780,23 +1153,49 @@ def run(cfg: SimConfig, jobs: Jobs, seed=0,
     ``time_mode`` ("tick" | "event", default ``cfg.time_mode``) selects
     per-quantum stepping vs the event-compressed jump — bit-identical
     States, wall-clock proportional to events instead of makespan."""
-    n_nodes = cfg.cluster.n_nodes
-    node_cap = cfg.cluster.node.as_tuple()
-    step = make_tick(cfg, jobs, n_nodes, s=s, P=P, time_mode=time_mode,
-                     max_ticks=max_ticks)
-    st = init_state(jobs, n_nodes, node_cap, seed)
+    st = init_state(jobs, cfg.cluster.n_nodes, cfg.cluster.node.as_tuple(),
+                    seed)
+    return _run_loop(cfg, jobs, st, max_ticks, s, P, time_mode)
+
+
+def _run_loop(cfg: SimConfig, jobs: Jobs, st: State, max_ticks: int,
+              s, P, time_mode: str) -> State:
+    """The traceable core of :func:`run`: drive ``_make_step`` from an
+    existing initial State (so :func:`run_jit` can build it eagerly
+    and donate its buffers into the jitted loop)."""
+    step = _make_step(cfg, jobs, cfg.cluster.n_nodes, s=s, P=P,
+                      time_mode=time_mode, max_ticks=max_ticks)
     N = jobs.submit.shape[0]
 
-    def cond(st):
-        return (st.n_done < N) & (st.t < max_ticks)
+    def cond(carry):
+        return (carry[0].n_done < N) & (carry[0].t < max_ticks)
 
-    return jax.lax.while_loop(cond, step, st)
+    st, _ = jax.lax.while_loop(cond, step,
+                               (st, _cache_from_state(jobs, st)))
+    return st
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "time_mode"))
+def _run_jit_full(cfg: SimConfig, jobs: Jobs, seed,
+                  time_mode: str) -> State:
+    st = init_state(jobs, cfg.cluster.n_nodes, cfg.cluster.node.as_tuple(),
+                    seed)
+    return _run_loop(cfg, jobs, st, 1 << 22, None, None, time_mode)
+
+
 def run_jit(cfg: SimConfig, jobs: Jobs, seed: int = 0,
             time_mode: str = None) -> State:
-    return run(cfg, jobs, seed, time_mode=time_mode)
+    """Jitted :func:`run`. The initial State is built INSIDE the jit
+    (``seed`` is traced, so sweeping seeds reuses the compilation), so
+    no State buffer ever crosses the jit boundary inward: every ~20
+    small construction dispatches the old eager init paid per call are
+    compiled into the loop program, and XLA owns (and reuses) the
+    State buffers end-to-end — the stronger form of the buffer
+    donation this entry point used to do."""
+    if not (isinstance(seed, jax.Array) and jnp.issubdtype(
+            seed.dtype, jax.dtypes.prng_key)):
+        seed = jnp.asarray(seed, jnp.int32)
+    return _run_jit_full(cfg, jobs, seed, time_mode)
 
 
 def state_diff_fields(a: State, b: State) -> list:

@@ -8,5 +8,9 @@ selection) and is validated against its pure-jnp oracle in ref.py
   flash_attention — blocked causal/SWA/softcap GQA, online softmax
   lru_scan        — diagonal linear recurrence (RG-LRU / diagonal SSM)
   ssd_chunk       — Mamba-2 SSD intra-chunk quadratic dual form
-  fitgpp_score    — the paper's Eq. 1-4 score + masked argmin over jobs
+  schedule_step   — the fused scheduler pass: Eq. 3 score, Eq. 2
+                    best-node reduction, Eq. 4 argmin, gang-fit tiles
+                    and the BE backfill scan over the (jobs, nodes)
+                    tile in one invocation (subsumes the former
+                    fitgpp_score kernel, kept only as an error shim)
 """

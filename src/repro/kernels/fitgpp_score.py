@@ -1,129 +1,26 @@
-"""FitGpp victim selection (Eq. 1-4) — Pallas TPU kernel.
+"""REMOVED — subsumed by the fused schedule-pass kernel.
 
-The scheduler's per-event hot loop at cluster scale: for J running BE
-jobs over M nodes, compute the Eq. 3 score, apply the Eq. 2
-eligibility — evaluated against each candidate's BEST assigned node
-(the gang-aware ``engine/preemption.best_victim_node`` reduction,
-done in-kernel over the (jobs, nodes) assignment tile) — and the
-P-cap mask, and take the masked argmin — in one sweep over J with
-jobs on the vector lanes. Inputs are struct-of-arrays (J,) vectors
-plus the (J, M) assignment tile and the (M, 3) cluster free matrix;
-the Eq. 3 normalizers (max Size, max GP over running BE jobs) are
-cheap global reductions done by XLA outside and passed in as scalars.
+The standalone Eq. 1-4 victim-selection kernel that lived here
+(score + best-victim-node reduction + masked argmin, one output pair)
+was folded into :mod:`repro.kernels.schedule_step`, which computes the
+same quantities plus the gang-fit tiles and the BE queue scan in a
+single invocation per scheduler pass. ``SimConfig.score_backend``
+values are unchanged: ``"pallas"`` now routes through the fused
+kernel via :func:`repro.kernels.ops.schedule_step`.
 
-Outputs: per-job scores (for introspection) and the victim index
-(-1 when no job passes the masks — the caller falls back to the paper's
-random choice).
+This module remains only so stale imports fail loudly at CALL time
+(import-time failures would mask which call site is stale).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
-
-from repro.core.engine.placement import FIT_EPS
-from repro.kernels.pltpu_compat import CompilerParams
-
-DEFAULT_BLOCK_J = 512
-_INF = jnp.inf
+_MSG = ("kernels.fitgpp_score.fitgpp_score was removed: the standalone "
+        "fitgpp victim-selection kernel is subsumed by the fused "
+        "schedule-pass kernel (kernels/schedule_step.py). Call "
+        "kernels.ops.schedule_step and read .victim / .scores from the "
+        "returned SchedulePass; SimConfig.score_backend='pallas' keeps "
+        "working and now routes through the fused kernel.")
 
 
-def _kernel(scal_ref, dem_ref, free_ref, asg_ref, gp_ref, mask_ref,
-            score_ref, idx_ref, best_scr, *, block_j: int):
-    ji = pl.program_id(0)
-    nj = pl.num_programs(0)
-
-    @pl.when(ji == 0)
-    def _init():
-        best_scr[0, 0] = _INF          # best score
-        best_scr[0, 1] = -1.0          # best index
-
-    s_par = scal_ref[0]                # (8,): te_c te_r te_g  cap_c cap_r
-    te = s_par[0:3]                    # cap_g  max_sz max_gp
-    cap = s_par[3:6]
-    max_sz, max_gp = s_par[6], s_par[7]
-    s_w = scal_ref[1, 0]               # Eq. 3 s parameter
-    dem = dem_ref[0].astype(jnp.float32)     # (bj, 3)
-    free = free_ref[0].astype(jnp.float32)   # (M, 3) cluster free
-    asg = asg_ref[0] > 0                     # (bj, M) assignment tile
-    gp = gp_ref[0].astype(jnp.float32)       # (bj,)
-    ok = mask_ref[0] > 0                     # running BE & under P cap
-
-    size = jnp.sqrt(jnp.sum(jnp.square(dem / cap[None, :]), axis=1))
-    score = size / max_sz + s_w * (gp / max_gp)
-    # Eq. 2 against the candidate's BEST node: the per-node min-slack
-    # of free + own demand - te demand, maximized over assigned nodes
-    # (rows with no assignment stay -inf and are never eligible)
-    slack = jnp.min(free[None, :, :] + dem[:, None, :]
-                    - te[None, None, :], axis=2)        # (bj, M)
-    best = jnp.max(jnp.where(asg, slack, -_INF), axis=1)
-    elig = best >= -FIT_EPS
-    allowed = ok & elig
-    val = jnp.where(allowed, score, _INF)
-
-    score_ref[0] = score.astype(score_ref.dtype)
-
-    local_min = jnp.min(val)
-    local_arg = jnp.argmin(val).astype(jnp.float32) + ji * block_j
-    better = local_min < best_scr[0, 0]
-    best_scr[0, 0] = jnp.where(better, local_min, best_scr[0, 0])
-    best_scr[0, 1] = jnp.where(better, local_arg, best_scr[0, 1])
-
-    @pl.when(ji == nj - 1)
-    def _finish():
-        found = best_scr[0, 0] < _INF
-        idx_ref[0, 0] = jnp.where(found, best_scr[0, 1], -1.0) \
-            .astype(jnp.int32)
-
-
-def fitgpp_score(demand: jax.Array, free: jax.Array, assign: jax.Array,
-                 gp: jax.Array, mask: jax.Array, te_demand: jax.Array,
-                 node_cap: jax.Array, max_sz: jax.Array, max_gp: jax.Array,
-                 s: float, *, block_j: int = DEFAULT_BLOCK_J,
-                 interpret: bool = False):
-    """demand (J, 3); free (M, 3); assign (J, M); gp/mask (J,).
-    Returns (scores (J,), victim idx () or -1)."""
-    J = demand.shape[0]
-    M = free.shape[0]
-    bj = min(block_j, J)
-    assert J % bj == 0, (J, bj)
-    scalars = jnp.stack([
-        jnp.concatenate([te_demand.astype(jnp.float32),
-                         node_cap.astype(jnp.float32),
-                         jnp.stack([jnp.maximum(max_sz, 1e-12),
-                                    jnp.maximum(max_gp, 1e-12)])]),
-        jnp.full((8,), s, jnp.float32),
-    ])                                  # (2, 8)
-
-    scores, idx = pl.pallas_call(
-        functools.partial(_kernel, block_j=bj),
-        grid=(J // bj,),
-        in_specs=[
-            pl.BlockSpec((2, 8), lambda ji: (0, 0)),
-            pl.BlockSpec((1, bj, 3), lambda ji: (0, ji, 0)),
-            pl.BlockSpec((1, M, 3), lambda ji: (0, 0, 0)),
-            pl.BlockSpec((1, bj, M), lambda ji: (0, ji, 0)),
-            pl.BlockSpec((1, bj), lambda ji: (0, ji)),
-            pl.BlockSpec((1, bj), lambda ji: (0, ji)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, bj), lambda ji: (0, ji)),
-            pl.BlockSpec((1, 1), lambda ji: (0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((1, J), jnp.float32),
-            jax.ShapeDtypeStruct((1, 1), jnp.int32),
-        ],
-        scratch_shapes=[pltpu.VMEM((1, 2), jnp.float32)],
-        compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",)),
-        interpret=interpret,
-    )(scalars, demand[None].astype(jnp.float32),
-      free[None].astype(jnp.float32),
-      assign[None].astype(jnp.float32),
-      gp[None].astype(jnp.float32),
-      mask[None].astype(jnp.float32))
-    return scores[0], idx[0, 0]
+def fitgpp_score(*args, **kwargs):
+    """Removed; see module docstring."""
+    raise RuntimeError(_MSG)

@@ -15,9 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import PAPER_S
-from repro.kernels import fitgpp_score as _fs
 from repro.kernels import flash_attention as _fa
 from repro.kernels import lru_scan as _ls
+from repro.kernels import schedule_step as _ss
 from repro.kernels import ssd_chunk as _sc
 
 
@@ -88,30 +88,56 @@ def lru_scan(a, b, h0=None, *, block_t: int = _ls.DEFAULT_BLOCK_T,
 
 
 @functools.partial(jax.jit, static_argnames=("s", "block_j"))
-def fitgpp_select(demand, assign, free, gp, running_be, under_cap,
-                  te_demand, node_cap, *, s: float = PAPER_S,
-                  block_j: int = _fs.DEFAULT_BLOCK_J):
-    """Eq. 1-4 victim selection over the (jobs, nodes) assignment tile.
+def schedule_step(demand, gp, width, queue_key, assign, free,
+                  pending_free, cand, under, be_q, te_demand, node_cap,
+                  *, s: float = PAPER_S,
+                  block_j: int = _ss.DEFAULT_BLOCK_J):
+    """One fused schedule pass over the (jobs, nodes) tile — Eq. 3
+    scoring, Eq. 2 best-victim-node reduction, Eq. 4 masked argmin,
+    all-or-nothing gang-fit counts (now and promised), and the BE
+    head / first-fit / skip-count scan, in one kernel invocation.
 
-    ``demand`` (J, 3) per-node demand; ``assign`` (J, M) placement
-    mask; ``free`` (M, 3) cluster free matrix. Eligibility (Eq. 2) is
-    evaluated against each candidate's best assigned node, in-kernel.
-    Returns (scores (J,), victim idx or -1)."""
+    ``demand`` (J, 3); ``assign`` (J, M); ``free``/``pending_free``
+    (M, 3); ``gp``/``queue_key`` (J,) f32; ``width`` (J,) i32;
+    ``cand``/``under``/``be_q`` (J,) bool. Pads J to the block
+    multiple (padded rows never fit, never selected). Returns a
+    ``SchedulePass``; see kernels/schedule_step for the field
+    contract."""
     J = demand.shape[0]
+    M = free.shape[0]
     sz = jnp.sqrt(jnp.sum(jnp.square(
         demand.astype(jnp.float32) / node_cap.astype(jnp.float32)), -1))
-    max_sz = jnp.max(jnp.where(running_be, sz, 0.0))
-    max_gp = jnp.max(jnp.where(running_be, gp.astype(jnp.float32), 0.0))
-    mask = running_be & under_cap
+    max_sz = jnp.maximum(jnp.max(jnp.where(cand, sz, 0.0)), 1e-12)
+    max_gp = jnp.maximum(
+        jnp.max(jnp.where(cand, gp.astype(jnp.float32), 0.0)), 1e-12)
 
     dp, _ = _pad_to(demand, 0, block_j)
-    ap, _ = _pad_to(assign, 0, block_j, value=False)  # no nodes: ineligible
     gpp, _ = _pad_to(gp.astype(jnp.float32), 0, block_j)
-    mp, _ = _pad_to(mask, 0, block_j, value=False)
-    scores, idx = _fs.fitgpp_score(
-        dp, free, ap, gpp, mp, te_demand, node_cap, max_sz, max_gp, s,
+    wp, _ = _pad_to(width, 0, block_j, value=M + 1)  # pad rows never fit
+    kp, _ = _pad_to(queue_key, 0, block_j, value=jnp.inf)
+    ap, _ = _pad_to(assign, 0, block_j, value=False)  # no nodes: ineligible
+    cp, _ = _pad_to(cand, 0, block_j, value=False)
+    up, _ = _pad_to(under, 0, block_j, value=False)
+    bp, _ = _pad_to(be_q, 0, block_j, value=False)
+    ps = _ss.schedule_step_pallas(
+        dp, gpp, wp, kp, ap, free, pending_free, cp, up, bp,
+        te_demand, node_cap, max_sz, max_gp, s,
         block_j=min(block_j, dp.shape[0]), interpret=_interpret())
-    return scores[:J], idx
+    return _ss.SchedulePass(ps.scores[:J], ps.fits[:J], ps.fit_now[:J],
+                            ps.fit_pend[:J], ps.victim, ps.be_head,
+                            ps.be_pick, ps.nskip)
+
+
+def fitgpp_select(*args, **kwargs):
+    """Removed: the standalone Eq. 1-4 victim-selection kernel was
+    subsumed by the fused :func:`schedule_step` pass."""
+    raise RuntimeError(
+        "kernels.ops.fitgpp_select was removed: the standalone fitgpp "
+        "victim-selection kernel is subsumed by the fused schedule-pass "
+        "kernel. Call kernels.ops.schedule_step (and read .victim / "
+        ".scores from the returned SchedulePass); "
+        "SimConfig.score_backend='pallas' keeps working and now routes "
+        "through the fused kernel.")
 
 
 @jax.jit

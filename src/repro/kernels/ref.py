@@ -70,22 +70,40 @@ def ssd_chunk_ref(xdt: jax.Array, loga: jax.Array, Bm: jax.Array,
     return y.astype(xdt.dtype)
 
 
-def fitgpp_score_ref(demand: jax.Array, gp: jax.Array, assign: jax.Array,
-                     free: jax.Array, te_demand: jax.Array,
-                     running_be: jax.Array, under_cap: jax.Array,
-                     node_cap: jax.Array, s: float, eps: float = 1e-9):
-    """Eq. 1-4 oracle over the (jobs, nodes) tile. demand (J,3) per
-    node; assign (J,M) placement mask; free (M,3). Eq. 2 is evaluated
-    against each candidate's BEST assigned node (max min-slack);
-    returns (victim_idx or -1, scores (J,))."""
+def schedule_step_ref(demand, gp, width, queue_key, assign, free,
+                      pending_free, cand, under, be_q, te_demand,
+                      node_cap, max_sz, max_gp, s, eps: float = 1e-9):
+    """Oracle for the fused schedule pass (kernels/schedule_step):
+    straight-line restatement of the per-pass quantities. Returns the
+    same 8-tuple as ``SchedulePass``; see that module's docstring for
+    the field contract. Normalizers ``max_sz``/``max_gp`` are passed
+    in pre-clamped, mirroring the kernel call."""
+    demand = demand.astype(jnp.float32)
+    free = free.astype(jnp.float32)
     sz = jnp.sqrt(jnp.sum((demand / node_cap) ** 2, axis=-1))
-    max_sz = jnp.maximum(jnp.max(jnp.where(running_be, sz, 0.0)), 1e-12)
-    max_gp = jnp.maximum(jnp.max(jnp.where(running_be, gp, 0.0)), 1e-12)
-    score = sz / max_sz + s * (gp / max_gp)
+    scores = sz / max_sz + s * (gp / max_gp)
+    fits = jnp.all(free[None, :, :] >= demand[:, None, :] - eps, axis=2)
+    fit_now = jnp.sum(fits, axis=1).astype(jnp.int32)
+    fit_pend = jnp.sum(jnp.all(
+        (free + pending_free)[None, :, :] >= demand[:, None, :] - eps,
+        axis=2), axis=1).astype(jnp.int32)
     slack = jnp.min(free[None, :, :] + demand[:, None, :]
-                    - te_demand[None, None, :], axis=2)       # (J, M)
+                    - te_demand[None, None, :], axis=2)        # (J, M)
     best = jnp.max(jnp.where(assign, slack, -jnp.inf), axis=1)
-    elig = best >= -eps
-    mask = running_be & elig & under_cap
-    idx = jnp.argmin(jnp.where(mask, score, jnp.inf))
-    return jnp.where(mask.any(), idx, -1).astype(jnp.int32), score
+    allowed = cand & under & (best >= -eps)
+    victim = jnp.where(allowed.any(),
+                       jnp.argmin(jnp.where(allowed, scores, jnp.inf)),
+                       -1).astype(jnp.int32)
+    be_head = jnp.where(be_q.any(),
+                        jnp.argmin(jnp.where(be_q, queue_key, jnp.inf)),
+                        -1).astype(jnp.int32)
+    ok = fit_now >= width
+    has_pick = (be_q & ok).any()
+    be_pick = jnp.where(
+        has_pick,
+        jnp.argmin(jnp.where(be_q & ok, queue_key, jnp.inf)),
+        -1).astype(jnp.int32)
+    pick_key = jnp.where(has_pick, queue_key[be_pick], jnp.inf)
+    nskip = jnp.sum(be_q & ~ok & (queue_key < pick_key)).astype(jnp.int32)
+    return (scores, fits.astype(jnp.int32), fit_now, fit_pend,
+            victim, be_head, be_pick, nskip)

@@ -1,0 +1,272 @@
+"""Fused schedule-pass kernel — one invocation per scheduler pass.
+
+The JAX engine's per-event hot loop used to issue a chain of small
+kernels per pass (Eq. 3 score, Eq. 2 best-victim-node reduction,
+masked argmin, per-job gang fit, BE head/backfill scan).  This module
+fuses the whole pass over the ``(jobs, nodes)`` tile into ONE
+invocation that returns everything a pass consumes:
+
+* ``scores``   (J,)  f32 — Eq. 3 score (Size/maxSize + s*GP/maxGP,
+  normalizers over the running-BE candidates, computed outside and
+  passed in as scalars like the te demand).
+* ``fits``     (J,M) i32 — per (job, node) fit of ``free`` vs the
+  job's per-node demand (the all-or-nothing gang-fit tile; a job fits
+  iff its row sums to >= width).
+* ``fit_now``  (J,)  i32 — row sums of ``fits``.
+* ``fit_pend`` (J,)  i32 — same counts against ``free +
+  pending_free`` (the promised-resource gate of the preemption
+  trigger).
+* ``victim``   ()    i32 — Eq. 4 masked argmin over running-BE &
+  under-P-cap & Eq. 2-eligible candidates (eligibility against each
+  candidate's BEST assigned node), -1 when nothing passes.
+* ``be_head``  ()    i32 — min-queue-key queued BE job, -1 when the
+  BE queue is empty.
+* ``be_pick``  ()    i32 — min-queue-key queued BE job whose gang
+  fits ``free`` right now, -1 when none fits.
+* ``nskip``    ()    i32 — how many queued BE jobs ahead of
+  ``be_pick`` do NOT fit (the bounded-backfill scan depth consumed
+  before the pick; ``be_pick`` is placeable iff ``nskip`` is below
+  the remaining depth budget; equals the queued count when
+  ``be_pick`` is -1).
+
+Three interchangeable backends share this contract bit-for-bit:
+:func:`schedule_step_jnp` (portable jnp twin — the engine's default),
+:func:`schedule_step_pallas` (TPU Pallas, jobs on the vector lanes,
+two grid phases: reduce then finalize), and the numpy oracle
+``kernels.ref.schedule_step_ref``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.engine.placement import FIT_EPS
+from repro.kernels.pltpu_compat import CompilerParams
+
+DEFAULT_BLOCK_J = 512
+_INF = jnp.inf
+
+
+class SchedulePass(NamedTuple):
+    """Outputs of one fused schedule pass (see module docstring)."""
+    scores: jax.Array       # (J,)  f32
+    fits: jax.Array         # (J, M) i32
+    fit_now: jax.Array      # (J,)  i32
+    fit_pend: jax.Array     # (J,)  i32
+    victim: jax.Array       # ()    i32, -1 sentinel
+    be_head: jax.Array      # ()    i32, -1 sentinel
+    be_pick: jax.Array      # ()    i32, -1 sentinel
+    nskip: jax.Array        # ()    i32
+
+
+def schedule_step_jnp(demand, gp, width, queue_key, assign, free,
+                      pending_free, cand, under, be_q, te_demand,
+                      node_cap, max_sz, max_gp, s) -> SchedulePass:
+    """Portable jnp twin — the op-order reference for both the Pallas
+    kernel (interpret-mode bit-parity) and the engine's default path.
+
+    demand (J,3) f32; gp/queue_key (J,) f32; width (J,) i32;
+    assign (J,M) bool; free/pending_free (M,3) f32; cand/under/be_q
+    (J,) bool; te_demand/node_cap (3,) f32; max_sz/max_gp/s scalars
+    (normalizers pre-clamped by the caller).
+    """
+    demand = demand.astype(jnp.float32)
+    free = free.astype(jnp.float32)
+    # Eq. 3 score over the whole job axis (masking happens at argmin)
+    size = jnp.sqrt(jnp.sum(jnp.square(demand / node_cap[None, :]), axis=1))
+    scores = size / max_sz + s * (gp / max_gp)
+    # per-(job, node) fit tiles, now and promised
+    fits_b = jnp.all(free[None, :, :] >= demand[:, None, :] - FIT_EPS,
+                     axis=2)                                   # (J, M)
+    fit_now = jnp.sum(fits_b, axis=1).astype(jnp.int32)
+    fit_pend = jnp.sum(jnp.all(
+        (free + pending_free)[None, :, :] >= demand[:, None, :] - FIT_EPS,
+        axis=2), axis=1).astype(jnp.int32)
+    # Eq. 2 eligibility against each candidate's BEST assigned node
+    slack = jnp.min(free[None, :, :] + demand[:, None, :]
+                    - te_demand[None, None, :], axis=2)        # (J, M)
+    best = jnp.max(jnp.where(assign, slack, -_INF), axis=1)
+    allowed = cand & under & (best >= -FIT_EPS)
+    victim = jnp.where(allowed.any(),
+                       jnp.argmin(jnp.where(allowed, scores, _INF)),
+                       -1).astype(jnp.int32)
+    # BE queue scan: head, first fit in key order, skips ahead of it
+    key_q = jnp.where(be_q, queue_key, _INF)
+    be_head = jnp.where(be_q.any(), jnp.argmin(key_q), -1).astype(jnp.int32)
+    ok = fit_now >= width
+    key_ok = jnp.where(be_q & ok, queue_key, _INF)
+    has_pick = (be_q & ok).any()
+    be_pick = jnp.where(has_pick, jnp.argmin(key_ok), -1).astype(jnp.int32)
+    pick_key = jnp.where(has_pick, queue_key[be_pick], _INF)
+    nskip = jnp.sum(be_q & ~ok & (queue_key < pick_key)).astype(jnp.int32)
+    return SchedulePass(scores, fits_b.astype(jnp.int32), fit_now,
+                        fit_pend, victim, be_head, be_pick, nskip)
+
+
+def _kernel(scal_ref, dem_ref, gp_ref, wid_ref, key_ref, asg_ref,
+            free_ref, pend_ref, cand_ref, under_ref, beq_ref,
+            score_ref, fits_ref, fnow_ref, fpend_ref, out_ref,
+            red, *, block_j: int):
+    """Two grid phases over the job blocks: phase 0 computes every
+    blockwise output and accumulates the four global reductions
+    (victim argmin, BE head, BE pick) into the ``red`` scratch; phase
+    1 re-reads the fit tiles to count the skips ahead of the (now
+    known) pick key and finalizes the scalar outputs."""
+    ph = pl.program_id(0)
+    ji = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    s_par = scal_ref[0]                 # te_c te_r te_g cap_c cap_r cap_g
+    te = s_par[0:3]                     # max_sz max_gp
+    cap = s_par[3:6]
+    max_sz, max_gp = s_par[6], s_par[7]
+    s_w = scal_ref[1, 0]
+
+    dem = dem_ref[0].astype(jnp.float32)      # (bj, 3)
+    gp = gp_ref[0].astype(jnp.float32)        # (bj,)
+    wid = wid_ref[0].astype(jnp.float32)      # (bj,)
+    key = key_ref[0].astype(jnp.float32)      # (bj,)
+    asg = asg_ref[0] > 0                      # (bj, M)
+    free = free_ref[0].astype(jnp.float32)    # (M, 3)
+    pend = pend_ref[0].astype(jnp.float32)    # (M, 3)
+    cand = cand_ref[0] > 0                    # (bj,)
+    under = under_ref[0] > 0
+    be_q = beq_ref[0] > 0
+
+    fits_b = jnp.all(free[None, :, :] >= dem[:, None, :] - FIT_EPS,
+                     axis=2)                                  # (bj, M)
+    fit_now = jnp.sum(fits_b, axis=1)
+    ok = be_q & (fit_now >= wid)
+
+    @pl.when(ph == 0)
+    def _reduce():
+        @pl.when(ji == 0)
+        def _init():
+            red[0, 0] = _INF            # victim best score
+            red[0, 1] = -1.0            # victim index
+            red[0, 2] = _INF            # head best key
+            red[0, 3] = -1.0            # head index
+            red[0, 4] = _INF            # pick best key
+            red[0, 5] = -1.0            # pick index
+            red[0, 6] = 0.0             # nskip accumulator
+
+        size = jnp.sqrt(jnp.sum(jnp.square(dem / cap[None, :]), axis=1))
+        score = size / max_sz + s_w * (gp / max_gp)
+        slack = jnp.min(free[None, :, :] + dem[:, None, :]
+                        - te[None, None, :], axis=2)          # (bj, M)
+        best = jnp.max(jnp.where(asg, slack, -_INF), axis=1)
+        allowed = cand & under & (best >= -FIT_EPS)
+
+        score_ref[0] = score.astype(score_ref.dtype)
+        fits_ref[0] = fits_b.astype(fits_ref.dtype)
+        fnow_ref[0] = fit_now.astype(fnow_ref.dtype)
+        fpend_ref[0] = jnp.sum(jnp.all(
+            (free + pend)[None, :, :] >= dem[:, None, :] - FIT_EPS,
+            axis=2), axis=1).astype(fpend_ref.dtype)
+
+        base = jnp.float32(ji * block_j)
+        val = jnp.where(allowed, score, _INF)
+        lmin = jnp.min(val)
+        larg = jnp.argmin(val).astype(jnp.float32) + base
+        better = lmin < red[0, 0]
+        red[0, 0] = jnp.where(better, lmin, red[0, 0])
+        red[0, 1] = jnp.where(better, larg, red[0, 1])
+
+        kq = jnp.where(be_q, key, _INF)
+        lmin = jnp.min(kq)
+        larg = jnp.argmin(kq).astype(jnp.float32) + base
+        better = lmin < red[0, 2]
+        red[0, 2] = jnp.where(better, lmin, red[0, 2])
+        red[0, 3] = jnp.where(better, larg, red[0, 3])
+
+        ko = jnp.where(ok, key, _INF)
+        lmin = jnp.min(ko)
+        larg = jnp.argmin(ko).astype(jnp.float32) + base
+        better = lmin < red[0, 4]
+        red[0, 4] = jnp.where(better, lmin, red[0, 4])
+        red[0, 5] = jnp.where(better, larg, red[0, 5])
+
+    @pl.when(ph == 1)
+    def _finalize():
+        pick_key = red[0, 4]
+        red[0, 6] += jnp.sum((be_q & ~ok & (key < pick_key))
+                             .astype(jnp.float32))
+
+        @pl.when(ji == nj - 1)
+        def _emit():
+            out_ref[0, 0] = jnp.where(red[0, 0] < _INF, red[0, 1], -1.0) \
+                .astype(jnp.int32)
+            out_ref[0, 1] = jnp.where(red[0, 2] < _INF, red[0, 3], -1.0) \
+                .astype(jnp.int32)
+            out_ref[0, 2] = jnp.where(red[0, 4] < _INF, red[0, 5], -1.0) \
+                .astype(jnp.int32)
+            out_ref[0, 3] = red[0, 6].astype(jnp.int32)
+
+
+def schedule_step_pallas(demand, gp, width, queue_key, assign, free,
+                         pending_free, cand, under, be_q, te_demand,
+                         node_cap, max_sz, max_gp, s, *,
+                         block_j: int = DEFAULT_BLOCK_J,
+                         interpret: bool = False) -> SchedulePass:
+    """Pallas TPU backend of the fused pass (same contract as
+    :func:`schedule_step_jnp`; jobs on the vector lanes, grid =
+    (2 phases, J/block_j job blocks))."""
+    J = demand.shape[0]
+    M = free.shape[0]
+    bj = min(block_j, J)
+    assert J % bj == 0, (J, bj)
+    scalars = jnp.stack([
+        jnp.concatenate([te_demand.astype(jnp.float32),
+                         node_cap.astype(jnp.float32),
+                         jnp.stack([jnp.asarray(max_sz, jnp.float32),
+                                    jnp.asarray(max_gp, jnp.float32)])]),
+        jnp.full((8,), s, jnp.float32),
+    ])                                  # (2, 8)
+
+    job_vec = pl.BlockSpec((1, bj), lambda ph, ji: (0, ji))
+    node_mat = pl.BlockSpec((1, M, 3), lambda ph, ji: (0, 0, 0))
+    scores, fits, fit_now, fit_pend, out = pl.pallas_call(
+        functools.partial(_kernel, block_j=bj),
+        grid=(2, J // bj),
+        in_specs=[
+            pl.BlockSpec((2, 8), lambda ph, ji: (0, 0)),
+            pl.BlockSpec((1, bj, 3), lambda ph, ji: (0, ji, 0)),
+            job_vec, job_vec, job_vec,
+            pl.BlockSpec((1, bj, M), lambda ph, ji: (0, ji, 0)),
+            node_mat, node_mat,
+            job_vec, job_vec, job_vec,
+        ],
+        out_specs=[
+            job_vec,
+            pl.BlockSpec((1, bj, M), lambda ph, ji: (0, ji, 0)),
+            job_vec, job_vec,
+            pl.BlockSpec((1, 8), lambda ph, ji: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, J), jnp.float32),
+            jax.ShapeDtypeStruct((1, J, M), jnp.int32),
+            jax.ShapeDtypeStruct((1, J), jnp.int32),
+            jax.ShapeDtypeStruct((1, J), jnp.int32),
+            jax.ShapeDtypeStruct((1, 8), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 8), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(scalars, demand[None].astype(jnp.float32),
+      gp[None].astype(jnp.float32),
+      width[None].astype(jnp.float32),
+      queue_key[None].astype(jnp.float32),
+      assign[None].astype(jnp.float32),
+      free[None].astype(jnp.float32),
+      pending_free[None].astype(jnp.float32),
+      cand[None].astype(jnp.float32),
+      under[None].astype(jnp.float32),
+      be_q[None].astype(jnp.float32))
+    return SchedulePass(scores[0], fits[0], fit_now[0], fit_pend[0],
+                        out[0, 0], out[0, 1], out[0, 2], out[0, 3])

@@ -233,6 +233,50 @@ class TestJaxTickVsEventParity:
                 assert 0.5 < ct_ratio < 2.0, (policy, pooled)
 
 
+# Score-backend axis, generated from the registry: every dual-backend
+# policy that registers the accelerated ("pallas") score path — which
+# now routes the WHOLE schedule pass through the fused schedule_step
+# kernel — must be full-State bit-exact with the jnp path.
+JAX_ACCEL = [s.name for s in policy_registry.all_policies()
+             if s.dual_backend and "pallas" in s.score_backends]
+
+
+class TestScoreBackendMatrix:
+    """jnp vs fused-Pallas schedule pass (``SimConfig.score_backend``),
+    generated from the registry: registering a new accelerated policy
+    enrolls it here without touching this file. Both time modes, plus
+    a gang scenario so the kernel's all-or-nothing gang-fit tile and
+    victim reduction face multi-node jobs."""
+
+    def test_axis_nonempty(self):
+        assert "fitgpp" in JAX_ACCEL
+
+    @pytest.mark.parametrize("mode", ["tick", "event"])
+    @pytest.mark.parametrize("policy", JAX_ACCEL)
+    def test_generated_workload(self, policy, mode):
+        from repro.core import sim_jax
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=8), policy=policy,
+                        workload=WorkloadSpec(n_jobs=128), seed=11)
+        jobs = sim_jax.jobs_from_jobset(workload.generate(cfg))
+        a = sim_jax.run_jit(cfg, jobs, 11, time_mode=mode)
+        b = sim_jax.run_jit(dataclasses.replace(cfg, score_backend="pallas"),
+                            jobs, 11, time_mode=mode)
+        _assert_states_equal(a, b, f"score backend {policy}/{mode}")
+
+    @pytest.mark.parametrize("policy", JAX_ACCEL)
+    def test_gang_scenario(self, policy):
+        from repro import scenarios
+        from repro.core import sim_jax
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=8), policy=policy,
+                        workload=WorkloadSpec(n_jobs=96), seed=7)
+        js = scenarios.build("gang-heavy", cfg)
+        jobs = sim_jax.jobs_from_jobset(js)
+        a = sim_jax.run_jit(cfg, jobs, 7)
+        b = sim_jax.run_jit(dataclasses.replace(cfg, score_backend="pallas"),
+                            jobs, 7)
+        _assert_states_equal(a, b, f"score backend gang {policy}")
+
+
 GANG_SCENARIOS = ("gang-heavy", "gang-trace-mix",
                   "philly-sample", "pai-sample")
 

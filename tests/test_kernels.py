@@ -120,45 +120,88 @@ class TestLruScan:
                                    np.asarray(kernel), atol=1e-4)
 
 
+from repro.core.engine.placement import FIT_EPS
+from repro.kernels import schedule_step as kss
+
+
+def _pass_all_backends(demand, gp, width, queue_key, assign, free,
+                       pending_free, cand, under, be_q, te, cap,
+                       s=4.0, block_j=16):
+    """Run the fused schedule pass through all three backends: the
+    jit'd ops wrapper (Pallas interpret, padded to the block multiple),
+    the portable jnp twin, and the straight-line oracle. Normalizer
+    computation mirrors the ops wrapper so the twin/oracle see the
+    exact scalars the kernel sees."""
+    sz = jnp.sqrt(jnp.sum(jnp.square(demand / cap), -1))
+    max_sz = jnp.maximum(jnp.max(jnp.where(cand, sz, 0.0)), 1e-12)
+    max_gp = jnp.maximum(jnp.max(jnp.where(cand, gp, 0.0)), 1e-12)
+    pal = ops.schedule_step(demand, gp, width, queue_key, assign, free,
+                            pending_free, cand, under, be_q, te, cap,
+                            s=s, block_j=block_j)
+    twin = kss.schedule_step_jnp(demand, gp, width, queue_key, assign,
+                                 free, pending_free, cand, under, be_q,
+                                 te, cap, max_sz, max_gp, s)
+    oracle = kss.SchedulePass(*kref.schedule_step_ref(
+        demand, gp, width, queue_key, assign, free, pending_free, cand,
+        under, be_q, te, cap, max_sz, max_gp, s, eps=FIT_EPS))
+    return pal, twin, oracle
+
+
+def _assert_pass_equal(a, b):
+    for name, x, y in zip(kss.SchedulePass._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=name)
+
+
+def _rand_instance(J, M, seed):
+    """Random gang-shaped pass inputs: single-node and 2-node-gang
+    assignments, mixed TE/BE masks, random queue keys."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 10)
+    demand = jnp.stack([
+        jax.random.randint(ks[0], (J,), 1, 33).astype(jnp.float32),
+        jax.random.randint(ks[1], (J,), 1, 257).astype(jnp.float32),
+        jax.random.randint(ks[2], (J,), 0, 9).astype(jnp.float32)], 1)
+    free = jnp.stack([
+        jax.random.randint(ks[3], (M,), 0, 16).astype(jnp.float32),
+        jax.random.randint(ks[4], (M,), 0, 128).astype(jnp.float32),
+        jax.random.randint(ks[5], (M,), 0, 5).astype(jnp.float32)], 1)
+    pend = jnp.stack([
+        jax.random.randint(ks[6], (M,), 0, 8).astype(jnp.float32),
+        jax.random.randint(ks[7], (M,), 0, 64).astype(jnp.float32),
+        jax.random.randint(ks[8], (M,), 0, 3).astype(jnp.float32)], 1)
+    node = jax.random.randint(ks[5], (J,), 0, M)
+    gang = jax.random.bernoulli(ks[3], 0.3, (J,))
+    assign = (jax.nn.one_hot(node, M, dtype=bool)
+              | (jax.nn.one_hot((node + 1) % M, M, dtype=bool)
+                 & gang[:, None]))
+    gp = jax.random.randint(ks[0], (J,), 0, 21).astype(jnp.float32)
+    width = jnp.where(gang, 2, 1).astype(jnp.int32)
+    queue_key = jax.random.uniform(ks[9], (J,)) * 100.0
+    cand = jax.random.bernoulli(ks[1], 0.7, (J,))
+    under = jax.random.bernoulli(ks[2], 0.9, (J,))
+    be_q = jax.random.bernoulli(ks[4], 0.4, (J,))
+    te = jnp.array([4.0, 16.0, 4.0])
+    cap = jnp.array([32.0, 256.0, 8.0])
+    return (demand, gp, width, queue_key, assign, free, pend, cand,
+            under, be_q, te, cap)
+
+
 @needs_dev_deps
-class TestFitgppKernel:
-    @settings(max_examples=20, deadline=None)
+class TestScheduleStepKernel:
+    @settings(max_examples=15, deadline=None)
     @given(st.integers(4, 600), st.integers(0, 10_000))
-    def test_vs_oracle_random(self, J, seed):
-        """Gang-shaped kernel vs the jnp oracle over the (jobs, nodes)
-        tile: random single-node and 2-node-gang assignments."""
-        M = 8
-        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
-        demand = jnp.stack([
-            jax.random.randint(ks[0], (J,), 1, 33).astype(jnp.float32),
-            jax.random.randint(ks[1], (J,), 1, 257).astype(jnp.float32),
-            jax.random.randint(ks[2], (J,), 0, 9).astype(jnp.float32)], 1)
-        free = jnp.stack([
-            jax.random.randint(ks[3], (M,), 0, 16).astype(jnp.float32),
-            jax.random.randint(ks[4], (M,), 0, 128).astype(jnp.float32),
-            jax.random.randint(ks[5], (M,), 0, 5).astype(jnp.float32)], 1)
-        node = jax.random.randint(ks[5], (J,), 0, M)
-        gang = jax.random.bernoulli(ks[3], 0.3, (J,))
-        assign = (jax.nn.one_hot(node, M, dtype=bool)
-                  | (jax.nn.one_hot((node + 1) % M, M, dtype=bool)
-                     & gang[:, None]))
-        gp = jax.random.randint(ks[0], (J,), 0, 21).astype(jnp.float32)
-        running = jax.random.bernoulli(ks[1], 0.7, (J,))
-        under = jax.random.bernoulli(ks[2], 0.9, (J,))
-        te = jnp.array([4.0, 16.0, 4.0])
-        cap = jnp.array([32.0, 256.0, 8.0])
-        scores, idx = ops.fitgpp_select(demand, assign, free, gp, running,
-                                        under, te, cap, s=4.0)
-        ridx, rscores = kref.fitgpp_score_ref(demand, gp, assign, free, te,
-                                              running, under, cap, 4.0)
-        np.testing.assert_allclose(np.asarray(scores), np.asarray(rscores),
-                                   atol=1e-5)
-        assert int(idx) == int(ridx)
+    def test_vs_twin_and_oracle_random(self, J, seed):
+        """Random gang tiles with ragged J (padded to the 16-block
+        multiple inside the ops wrapper): Pallas == jnp twin == oracle
+        bit-for-bit on every SchedulePass field."""
+        pal, twin, oracle = _pass_all_backends(*_rand_instance(J, 8, seed))
+        _assert_pass_equal(pal, twin)
+        _assert_pass_equal(pal, oracle)
 
     def test_matches_numpy_policy(self):
-        """Kernel argmin == policies.FitGppPolicy main path (each
-        candidate on its own node, Eq. 2 free vector taken from that
-        node — exactly what the reference engine passes)."""
+        """Fused-pass victim argmin == policies.FitGppPolicy main path
+        (each candidate on its own node, Eq. 2 free vector taken from
+        that node — exactly what the reference engine passes)."""
         from repro.core import policies as pol
         rng = np.random.default_rng(0)
         J, M = 64, 4
@@ -178,15 +221,115 @@ class TestFitgppKernel:
             cand_remaining=np.ones(J), under_cap=np.ones(J, bool),
             all_run_demand=demand, all_run_gp=gp, node_cap=cap,
             free_by_node=free, cand_node=cand_node)
-        _, idx = ops.fitgpp_select(
-            jnp.asarray(demand, jnp.float32), jnp.asarray(assign),
-            jnp.asarray(free, jnp.float32),
-            jnp.asarray(gp, jnp.float32), jnp.ones(J, bool),
-            jnp.ones(J, bool), jnp.asarray(te, jnp.float32),
-            jnp.asarray(cap, jnp.float32), s=4.0)
+        ps = ops.schedule_step(
+            jnp.asarray(demand, jnp.float32), jnp.asarray(gp, jnp.float32),
+            jnp.ones(J, jnp.int32), jnp.zeros(J, jnp.float32),
+            jnp.asarray(assign), jnp.asarray(free, jnp.float32),
+            jnp.zeros((M, 3), jnp.float32), jnp.ones(J, bool),
+            jnp.ones(J, bool), jnp.zeros(J, bool),
+            jnp.asarray(te, jnp.float32), jnp.asarray(cap, jnp.float32),
+            s=4.0)
         elig = pol.eligible_eq2(te, demand, free[cand_node])
         if elig.any():
-            assert victims == [int(idx)]
+            assert victims == [int(ps.victim)]
+
+
+class TestScheduleStepEdgeCases:
+    """Deterministic fused-pass cases that run without dev extras."""
+
+    def _trivial(self, **over):
+        J, M = 5, 2
+        base = dict(
+            demand=jnp.tile(jnp.asarray([[4.0, 16.0, 1.0]]), (J, 1)),
+            gp=jnp.arange(J, dtype=jnp.float32),
+            width=jnp.ones(J, jnp.int32),
+            queue_key=jnp.arange(J, dtype=jnp.float32),
+            assign=jnp.zeros((J, M), bool).at[jnp.arange(J), 0].set(True),
+            free=jnp.asarray([[32.0, 256.0, 8.0], [32.0, 256.0, 8.0]]),
+            pending_free=jnp.zeros((M, 3)),
+            cand=jnp.zeros(J, bool), under=jnp.ones(J, bool),
+            be_q=jnp.zeros(J, bool),
+            te=jnp.asarray([8.0, 32.0, 2.0]),
+            cap=jnp.asarray([32.0, 256.0, 8.0]))
+        base.update(over)
+        return _pass_all_backends(*base.values(), block_j=4)
+
+    def test_empty_queue_no_victim(self):
+        """All masks empty: every scalar output is the -1/0 sentinel,
+        on every backend (and the backends agree bit-for-bit)."""
+        pal, twin, oracle = self._trivial()
+        _assert_pass_equal(pal, twin)
+        _assert_pass_equal(pal, oracle)
+        assert int(pal.victim) == -1
+        assert int(pal.be_head) == -1
+        assert int(pal.be_pick) == -1
+        assert int(pal.nskip) == 0
+
+    def test_ragged_padding_sentinels(self):
+        """J=5 padded to the block_j=4 multiple (8): the three pad rows
+        carry zero demand (they'd fit everywhere) — the width/key/mask
+        sentinels must keep them out of every reduction and count."""
+        pal, twin, oracle = self._trivial(
+            cand=jnp.ones(5, bool), be_q=jnp.ones(5, bool))
+        _assert_pass_equal(pal, twin)
+        _assert_pass_equal(pal, oracle)
+        assert pal.fits.shape == (5, 2)
+        assert int(pal.be_head) == 0          # key order, not pad rows
+        assert int(pal.be_pick) == 0
+
+    def test_gang_best_node_reduction(self):
+        """A gang candidate is eligible iff its BEST node passes Eq. 2
+        — one crowded node must not mask a slack node (and vice versa
+        a single-node candidate on the crowded node stays ineligible)."""
+        free = jnp.asarray([[0.0, 0.0, 0.0],      # node 0: crowded
+                            [32.0, 256.0, 8.0]])  # node 1: wide open
+        gang = jnp.asarray([[True, True],         # gang on both
+                            [True, False]])       # single on node 0
+        over = dict(
+            demand=jnp.tile(jnp.asarray([[4.0, 16.0, 2.0]]), (5, 1)),
+            free=free, cand=jnp.arange(5) < 2,
+            assign=jnp.zeros((5, 2), bool).at[:2].set(gang))
+        pal, twin, oracle = self._trivial(**over)
+        _assert_pass_equal(pal, twin)
+        _assert_pass_equal(pal, oracle)
+        assert int(pal.victim) == 0           # gang eligible via node 1
+        over["assign"] = jnp.zeros((5, 2), bool).at[:2, 0].set(True)
+        pal2, _, _ = self._trivial(**over)
+        assert int(pal2.victim) == -1         # both stuck on node 0
+
+    def test_backfill_pick_and_skips(self):
+        """be_pick is the min-key FITTING queued BE job; nskip counts
+        the non-fitting queued jobs ahead of it in key order (the
+        bounded-backfill depth the scan consumes before placing it)."""
+        demand = jnp.asarray([[64.0, 16.0, 1.0],   # key 0: never fits
+                              [64.0, 16.0, 1.0],   # key 1: never fits
+                              [4.0, 16.0, 1.0],    # key 2: fits
+                              [4.0, 16.0, 1.0],    # key 3: fits
+                              [4.0, 16.0, 1.0]])   # not queued
+        pal, twin, oracle = self._trivial(
+            demand=demand, be_q=jnp.arange(5) < 4)
+        _assert_pass_equal(pal, twin)
+        _assert_pass_equal(pal, oracle)
+        assert int(pal.be_head) == 0
+        assert int(pal.be_pick) == 2
+        assert int(pal.nskip) == 2
+        np.testing.assert_array_equal(np.asarray(pal.fit_now),
+                                      [0, 0, 2, 2, 2])
+
+
+class TestRemovedFitgppShims:
+    """The standalone fitgpp kernel entry points were subsumed by the
+    fused pass; stale call sites must fail loudly at CALL time with a
+    pointer to schedule_step."""
+
+    def test_ops_fitgpp_select_raises(self):
+        with pytest.raises(RuntimeError, match="schedule_step"):
+            ops.fitgpp_select(None, None)
+
+    def test_fitgpp_score_module_raises(self):
+        from repro.kernels import fitgpp_score
+        with pytest.raises(RuntimeError, match="schedule_step"):
+            fitgpp_score.fitgpp_score()
 
 class TestFitgppScoreBackend:
     """The registry-wired score-backend switch: a full JAX-engine run
@@ -210,27 +353,6 @@ class TestFitgppScoreBackend:
                                       np.asarray(st_jnp.preempt_count))
         np.testing.assert_array_equal(np.asarray(st_pal.last_vacate),
                                       np.asarray(st_jnp.last_vacate))
-
-    def test_best_node_reduction(self):
-        """A gang candidate is eligible iff its BEST node passes Eq. 2
-        — one crowded node must not mask a slack node (and vice versa
-        a single-node candidate on the crowded node stays ineligible)."""
-        demand = jnp.asarray([[4.0, 16.0, 2.0], [4.0, 16.0, 2.0]])
-        free = jnp.asarray([[0.0, 0.0, 0.0],      # node 0: crowded
-                            [32.0, 256.0, 8.0]])  # node 1: wide open
-        assign = jnp.asarray([[True, True],       # gang on both
-                              [True, False]])     # single on node 0
-        gp = jnp.zeros(2)
-        te = jnp.asarray([8.0, 32.0, 4.0])
-        cap = jnp.asarray([32.0, 256.0, 8.0])
-        scores, idx = ops.fitgpp_select(
-            demand, assign, free, gp, jnp.ones(2, bool), jnp.ones(2, bool),
-            te, cap, s=4.0)
-        assert int(idx) == 0          # gang eligible via node 1
-        _, idx2 = ops.fitgpp_select(
-            demand, jnp.asarray([[True, False], [True, False]]), free, gp,
-            jnp.ones(2, bool), jnp.ones(2, bool), te, cap, s=4.0)
-        assert int(idx2) == -1        # both stuck on the crowded node
 
     def test_traced_s_falls_back_to_jnp(self):
         """Vmapped s-sweeps cannot bake s into the kernel: the resolver
