@@ -22,6 +22,19 @@ is slower than the reference event engine. Configs and sweeps go
 through the ``repro.api`` facade; TIMED regions call the engines
 directly so the rows measure the engine, not jobset construction or
 result normalization, and stay comparable across PRs.
+
+Telemetry (DESIGN.md §8): every scenario row carries ``utilization``
+and ``preempt_rate`` columns replayed from a traced reference run
+(outside the timed region), plus a ``jax_event_traced`` timing with
+its ``trace_overhead`` ratio — the untraced rows have the in-jit
+event ring compiled OUT, so tracing-off stays structurally
+zero-cost; enabled, expect ~1-1.7x on CPU (per-op dispatch floor
+of the per-event emission, DESIGN.md §8 — the untraced
+event-compressed step is itself only microseconds long).
+``--smoke`` round-trips a tiny trace through both export
+formats (``--trace-out`` saves the Perfetto JSON artifact);
+``--profile DIR`` captures a ``jax.profiler.trace`` of one jitted
+engine run.
 """
 from __future__ import annotations
 
@@ -71,12 +84,14 @@ def bench_tick_vs_event(n_jobs: int = 512, policy: str = "fitgpp",
     }
 
 
-def _time_jax(cfg: SimConfig, jobs, seed: int, time_mode: str):
+def _time_jax(cfg: SimConfig, jobs, seed: int, time_mode: str,
+              trace: bool = False):
     """Seconds for one jitted run, compile excluded."""
-    st = sim_jax.run_jit(cfg, jobs, seed, time_mode=time_mode)  # compile
+    st = sim_jax.run_jit(cfg, jobs, seed, time_mode=time_mode,
+                         trace=trace)                       # compile
     st.t.block_until_ready()
     t0 = time.perf_counter()
-    st = sim_jax.run_jit(cfg, jobs, seed, time_mode=time_mode)
+    st = sim_jax.run_jit(cfg, jobs, seed, time_mode=time_mode, trace=trace)
     st.t.block_until_ready()
     return time.perf_counter() - t0, st
 
@@ -105,11 +120,20 @@ def bench_jax_tick_vs_event(cfg: SimConfig, js, seed: int) -> Dict:
         if not parity:
             raise AssertionError(
                 f"jax tick-vs-event parity violated ({name})")
+    # tracing cost: same jitted event run with the in-jit ring buffer
+    # compiled IN (untraced rows above have it compiled OUT — tracing
+    # off is structurally zero-cost, not just cheap)
+    s_traced, st_traced = _time_jax(cfg, jobs, seed, "event", trace=True)
     return {
         "jax_tick": {"seconds": s_tick,
                      "jobs_per_sec": js.n / max(s_tick, 1e-12)},
         "jax_event": {"seconds": s_event,
                       "jobs_per_sec": js.n / max(s_event, 1e-12)},
+        "jax_event_traced": {"seconds": s_traced,
+                             "jobs_per_sec": js.n / max(s_traced, 1e-12)},
+        "trace_overhead": s_traced / max(s_event, 1e-12),
+        "fallback_count": int(st_event.fallback_count),
+        "trace_overflow": int(sim_jax.trace_overflow(st_traced)),
         "jax_speedup": s_tick / max(s_event, 1e-12),
         "parity": parity,         # computed; False never reaches here
         "parity_policies": parity_policies,
@@ -125,7 +149,16 @@ def bench_scenario_suite(n_jobs: int = 256, n_nodes: int = 8,
     across the deterministic policy registry. Gang scenarios
     (gang-heavy, gang-trace-mix, the trace adapters) run the JAX
     engine like everything else. Jobset construction stays OUTSIDE
-    the timed regions — these rows measure the engines."""
+    the timed regions — these rows measure the engines.
+
+    Each row also carries telemetry columns — time-weighted mean
+    ``utilization`` and ``preempt_rate`` (signals per simulated
+    minute), replayed from a traced reference run OUTSIDE the timed
+    region — plus the tracing-cost columns from
+    :func:`bench_jax_tick_vs_event` (``jax_event_traced``,
+    ``trace_overhead``, ``fallback_count``, ``trace_overflow``)."""
+    from repro.obs import timeseries
+    from repro.core.policy_registry import get_policy
     cfg = api.make_config(policy, n_jobs=n_jobs, n_nodes=n_nodes,
                           seed=seed)
     out = {}
@@ -138,6 +171,12 @@ def bench_scenario_suite(n_jobs: int = 256, n_nodes: int = 8,
                      "n_gangs": int((np.asarray(js.n_nodes) > 1).sum()),
                      "jobs_per_sec": metrics.sim_throughput(res, s),
                      "makespan_ticks": int(res.makespan)}
+        tres = simulator.simulate(cfg, js, mode="event", trace=True)
+        ts = timeseries.compute_timeseries(
+            tres.trace, n_nodes=cfg.cluster.n_nodes, is_te=js.is_te,
+            preemptive=get_policy(cfg.policy).preemptive)
+        out[name]["utilization"] = ts.mean_utilization()
+        out[name]["preempt_rate"] = ts.preempt_rate
         out[name].update(bench_jax_tick_vs_event(cfg, js, seed))
         out[name]["speedup_vs_ref"] = s / max(
             out[name]["jax_event"]["seconds"], 1e-12)
@@ -277,15 +316,20 @@ def emit_json(path: str = "BENCH_sim_engine.json") -> dict:
     return out
 
 
-def smoke(n_jobs: int = 64, seed: int = 0) -> None:
+def smoke(n_jobs: int = 64, seed: int = 0,
+          trace_out: str = None) -> None:
     """CI fast-lane smoke: one tiny scenario through the reference
     engine and the JAX engine with the FUSED score backend
     (``score_backend="pallas"`` routes the whole schedule pass through
     the Pallas ``schedule_step`` kernel), asserting jnp-vs-pallas
-    full-State parity. Seconds, not minutes: one compile each."""
+    full-State parity, PLUS the trace round-trip: traced reference vs
+    decoded JAX ring (exact event parity), schema validation, and both
+    export formats re-read / re-replayed. ``trace_out`` writes the
+    Perfetto JSON as a CI artifact. Seconds, not minutes: one compile
+    each."""
+    from repro.obs import export, schema, timeseries
     cfg = api.make_config("fitgpp", n_jobs=n_jobs, n_nodes=4, seed=seed)
     js = scenarios.build("paper-synthetic", cfg)
-    simulator.simulate(cfg, js, mode="event")
     jobs = sim_jax.jobs_from_jobset(js)
     st_j = sim_jax.run_jit(cfg, jobs, seed, time_mode="event")
     st_p = sim_jax.run_jit(dataclasses.replace(cfg, score_backend="pallas"),
@@ -293,7 +337,59 @@ def smoke(n_jobs: int = 64, seed: int = 0) -> None:
     diff = sim_jax.state_diff_fields(st_j, st_p)
     if diff:
         raise SystemExit(f"smoke: jnp-vs-pallas state diff in {diff}")
-    print(f"smoke ok: {n_jobs} jobs, fused-backend parity verified")
+    # trace round-trip on a deterministic preemption-exercising config
+    # (lrtp never takes the random fallback here — asserted, so the
+    # cross-engine comparison is exact by contract, DESIGN.md §8)
+    cfg = api.make_config("lrtp", n_jobs=n_jobs, n_nodes=6, seed=seed)
+    js = scenarios.build("paper-synthetic", cfg)
+    res = simulator.simulate(cfg, js, mode="event", trace=True)
+    jobs = sim_jax.jobs_from_jobset(js)
+    st_t = sim_jax.run_jit(cfg, jobs, seed, time_mode="event", trace=True)
+    if int(st_t.fallback_count):
+        raise SystemExit("smoke: fallback fired; trace parity not exact")
+    events, overflow = sim_jax.decode_trace(st_t)
+    if overflow:
+        raise SystemExit(f"smoke: trace ring overflowed ({overflow} rows)")
+    metrics.assert_trace_parity(res.trace, events)
+    schema.validate_events(events, n_jobs=js.n,
+                           n_nodes=cfg.cluster.n_nodes)
+    # both export formats: CSV must round-trip losslessly, the
+    # Perfetto JSON must re-replay into the same telemetry series
+    if export.read_csv(export.to_csv(events)) != events:
+        raise SystemExit("smoke: CSV trace round-trip diverged")
+    ts = timeseries.compute_timeseries(events, cfg.cluster.n_nodes,
+                                       is_te=js.is_te)
+    pf = export.to_perfetto(events, n_nodes=cfg.cluster.n_nodes,
+                            is_te=js.is_te)
+    if not pf["traceEvents"]:
+        raise SystemExit("smoke: empty Perfetto trace")
+    if trace_out:
+        export.write_trace(trace_out, events, fmt="perfetto",
+                           n_nodes=cfg.cluster.n_nodes, is_te=js.is_te)
+    print(f"smoke ok: {n_jobs} jobs, fused-backend parity verified, "
+          f"{len(events)} events trace-parity ok, "
+          f"util {ts.mean_utilization():.2f}"
+          + (f", trace -> {trace_out}" if trace_out else ""))
+
+
+def profile(outdir: str, n_jobs: int = 1024, n_nodes: int = 8,
+            policy: str = "fitgpp", seed: int = 0) -> None:
+    """Capture a ``jax.profiler.trace`` of one jitted engine run
+    (compile excluded) into ``outdir`` — open with TensorBoard or
+    ui.perfetto.dev. This profiles the ENGINE's XLA execution; the
+    scheduler-event traces (``--smoke --trace-out`` / the scenarios
+    CLI ``--trace``) profile the simulated cluster."""
+    import jax
+    cfg = api.make_config(policy, n_jobs=n_jobs, n_nodes=n_nodes,
+                          seed=seed)
+    js = scenarios.build("paper-synthetic", cfg)
+    jobs = sim_jax.jobs_from_jobset(js)
+    st = sim_jax.run_jit(cfg, jobs, seed)       # compile
+    st.t.block_until_ready()
+    with jax.profiler.trace(outdir):
+        st = sim_jax.run_jit(cfg, jobs, seed)
+        st.t.block_until_ready()
+    print(f"profiled {n_jobs}-job run -> {outdir}")
 
 
 def run_all() -> List[tuple]:
@@ -337,12 +433,16 @@ def run_all() -> List[tuple]:
     for name, r in bench_scenario_suite().items():
         rows.append((f"scenario_{name}", r["seconds"] * 1e6,
                      f"{r['n_jobs']} jobs, {r['makespan_ticks']} ticks, "
-                     f"{r['jobs_per_sec']:.0f} jobs/s"))
+                     f"{r['jobs_per_sec']:.0f} jobs/s, "
+                     f"util {r['utilization']:.2f}, "
+                     f"{r['preempt_rate']:.3f} preempts/min"))
         if "jax_event" in r:
             rows.append((f"scenario_{name}_jax_event",
                          r["jax_event"]["seconds"] * 1e6,
                          f"{r['jax_event']['jobs_per_sec']:.0f} jobs/s, "
-                         f"{r['jax_speedup']:.1f}x vs jax_tick, parity ok"))
+                         f"{r['jax_speedup']:.1f}x vs jax_tick, "
+                         f"traced {r['trace_overhead']:.2f}x, "
+                         f"fallback {r['fallback_count']}, parity ok"))
 
     sb = bench_score_backend()
     for backend in ("jnp", "pallas"):
@@ -371,8 +471,18 @@ def main(argv=None) -> None:
                          "scenario's jax_event row lost to the "
                          "reference engine (CI gate)")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny-scenario fused-backend smoke (CI fast lane)")
+                    help="tiny-scenario fused-backend + trace round-trip "
+                         "smoke (CI fast lane)")
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="with --smoke: write the smoke run's Perfetto "
+                         "trace to PATH (CI artifact)")
+    ap.add_argument("--profile", metavar="DIR",
+                    help="capture a jax.profiler.trace of one jitted "
+                         "engine run into DIR and exit")
     args = ap.parse_args(argv)
+    if args.profile:
+        profile(args.profile)
+        return
     if args.check_parity:
         with open(args.check_parity) as f:
             data = json.load(f)
@@ -383,7 +493,7 @@ def main(argv=None) -> None:
         print(f"{args.check_parity}: all parity and speed rows pass")
         return
     if args.smoke:
-        smoke()
+        smoke(trace_out=args.trace_out)
         return
     if args.json:
         out = emit_json(args.out)

@@ -1,4 +1,5 @@
-"""Replay public GPU-cluster traces through the FitGpp policies.
+"""Replay public GPU-cluster traces through the FitGpp policies,
+with the §8 telemetry pipeline on top.
 
 The paper validated FitGpp on a private PFN trace; this example replays
 public-format traces (Microsoft-Philly-style / Alibaba-PAI-style CSV)
@@ -7,9 +8,19 @@ default — point ``--philly`` / ``--pai`` at a real trace export to
 reproduce at scale (``--time-scale`` compresses a months-long trace
 into a tractable horizon).
 
+Alongside the slowdown tables, the FitGpp run is traced through the
+canonical event stream (``obs.schema``): the example prints the
+replayed utilization / queue-depth time series, the per-job slowdown
+decomposition summary (initial wait / grace stall / requeue wait /
+service — the identity that makes Eq. 5 auditable), and ``--trace``
+writes the stream as a Perfetto JSON (open in https://ui.perfetto.dev)
+or CSV.
+
 Run:  PYTHONPATH=src python examples/trace_replay.py
       PYTHONPATH=src python examples/trace_replay.py \
           --philly my_philly.csv --time-scale 60 --nodes 84
+      PYTHONPATH=src python examples/trace_replay.py \
+          --trace pai.perfetto.json
 """
 import argparse
 import dataclasses
@@ -19,9 +30,39 @@ import numpy as np
 from repro import scenarios
 from repro.configs.cluster import ClusterSpec, SimConfig
 from repro.core import metrics, simulator
+from repro.obs import export, timeseries
 
 
-def replay(label: str, loader, path, cfg, time_scale):
+def telemetry(label: str, js, cfg, res, trace_path, trace_format):
+    """Time-series + decomposition view of one traced run."""
+    ts = timeseries.compute_timeseries(
+        res.trace, n_nodes=cfg.cluster.n_nodes, is_te=js.is_te)
+    print(f"\n{label} fitgpp telemetry: mean utilization "
+          f"{ts.mean_utilization() * 100:.1f}%, "
+          f"{ts.preempt_rate:.3f} preemptions/min over "
+          f"{ts.makespan} min")
+    print(timeseries.format_timeseries(ts, max_rows=12))
+
+    dec = timeseries.slowdown_decomposition(res.trace)
+    parts = np.array([[d.initial_wait, d.grace_stall, d.requeue_wait,
+                       d.service] for d in dec.values()], dtype=float)
+    assert all(d.identity_holds() for d in dec.values())
+    names = ("initial wait", "grace stall", "requeue wait", "service")
+    total = parts.sum()
+    print("turnaround decomposition (summed over jobs, identity "
+          "wait+stall+requeue+service == finish-submit holds per job):")
+    for name, col in zip(names, parts.sum(axis=0)):
+        print(f"  {name:13s} {int(col):7d} min ({col / total * 100:5.1f}%)")
+
+    if trace_path:
+        export.write_trace(trace_path, res.trace, fmt=trace_format,
+                           n_nodes=cfg.cluster.n_nodes,
+                           is_te=np.asarray(js.is_te))
+        print(f"{len(res.trace)} events -> {trace_path} [{trace_format}]")
+
+
+def replay(label: str, loader, path, cfg, time_scale,
+           trace_path=None, trace_format="perfetto"):
     js, stats = loader(path, cfg, time_scale=time_scale,
                        return_stats=True)
     gangs = int((np.asarray(js.n_nodes) > 1).sum())
@@ -31,11 +72,15 @@ def replay(label: str, loader, path, cfg, time_scale):
           f"{int(js.is_te.sum())} TE, {gangs} gangs, "
           f"horizon {int(js.submit.max())} min ===")
     rows = {}
+    traced = None
     for pol in ("fifo", "lrtp", "rand", "fitgpp"):
         res = simulator.simulate(
-            dataclasses.replace(cfg, policy=pol), js)
+            dataclasses.replace(cfg, policy=pol), js, trace=True)
         rows[pol] = metrics.slowdown_table(res)
+        if pol == "fitgpp":
+            traced = res
     print(metrics.format_table(rows, "slowdown percentiles"))
+    telemetry(label, js, cfg, traced, trace_path, trace_format)
 
 
 def main():
@@ -47,6 +92,11 @@ def main():
     ap.add_argument("--nodes", type=int, default=8)
     ap.add_argument("--time-scale", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write the PAI replay's fitgpp event stream "
+                         "to PATH")
+    ap.add_argument("--trace-format", default="perfetto",
+                    choices=("perfetto", "csv"))
     args = ap.parse_args()
 
     cfg = SimConfig(cluster=ClusterSpec(n_nodes=args.nodes),
@@ -54,7 +104,8 @@ def main():
     replay("Philly-style", scenarios.load_philly_csv, args.philly,
            cfg, args.time_scale)
     replay("PAI-style", scenarios.load_pai_csv, args.pai,
-           cfg, args.time_scale)
+           cfg, args.time_scale,
+           trace_path=args.trace, trace_format=args.trace_format)
     print("\nTE/BE split: runtime <= 30 min is TE (paper §4.2 truncation);"
           "\ngrace periods are sampled from the cfg GP distribution "
           "(traces record none).")

@@ -72,6 +72,18 @@ class ExperimentResult:
     preempted_frac: float
     makespan: int
     raw: Any = field(repr=False, compare=False, default=None)
+    # Canonical event stream (List[obs.schema.Event]) when the run was
+    # traced (``run_experiment(trace=True)``), else None. Identical
+    # vocabulary from either engine — the trace-parity contract.
+    events: Optional[list] = field(repr=False, compare=False, default=None)
+    # Ring-buffer rows dropped in a traced JAX run (0 = complete trace;
+    # reference traces never overflow). Surfaced loudly: a nonzero
+    # value means the decoded stream is truncated.
+    trace_overflow: int = 0
+    # Random-fallback invocations on the JAX engine (score policies
+    # under cluster pressure). Nonzero means the run left the
+    # deterministic cross-engine parity domain (DESIGN.md §8).
+    fallback_count: int = 0
 
 
 def make_config(policy: Optional[str] = None, *,
@@ -110,21 +122,28 @@ def make_config(policy: Optional[str] = None, *,
     return dataclasses.replace(cfg, **repl) if repl else cfg
 
 
-def _run_reference(cfg: SimConfig, js: JobSet, mode: str):
-    res = simulator.simulate(cfg, js, mode=mode)
+def _run_reference(cfg: SimConfig, js: JobSet, mode: str, trace: bool):
+    res = simulator.simulate(cfg, js, mode=mode, trace=trace)
     return (metrics.slowdown_table(res), metrics.resched_table(res),
-            res.preempted_fraction(), int(res.makespan), res)
+            res.preempted_fraction(), int(res.makespan), res,
+            res.trace, 0, 0)
 
 
-def _run_jax(cfg: SimConfig, js: JobSet, mode: str):
+def _run_jax(cfg: SimConfig, js: JobSet, mode: str, trace: bool,
+             trace_capacity: Optional[int]):
     jobs = sim_jax.jobs_from_jobset(js)
-    st = sim_jax.run_jit(cfg, jobs, cfg.seed, time_mode=mode)
+    st = sim_jax.run_jit(cfg, jobs, cfg.seed, time_mode=mode,
+                         trace=trace, trace_capacity=trace_capacity)
     summary = sim_jax.result_summary(jobs, st)
     table = {k: {p: float(v) for p, v in summary[k].items()}
              for k in ("TE", "BE")}
     intervals = {p: float(v) for p, v in summary["intervals"].items()}
+    events, overflow = (None, 0)
+    if trace:
+        events, overflow = sim_jax.decode_trace(st)
     return (table, intervals, float(summary["preempted_frac"]),
-            int(st.t), (jobs, st))
+            int(st.t), (jobs, st), events, int(overflow),
+            int(summary["fallback_count"]))
 
 
 def run_experiment(scenario: str = DEFAULT_SCENARIO,
@@ -139,7 +158,9 @@ def run_experiment(scenario: str = DEFAULT_SCENARIO,
                    P: Optional[int] = None,
                    score_backend: Optional[str] = None,
                    backfill: Optional[bool] = None,
-                   mode: Optional[str] = None) -> ExperimentResult:
+                   mode: Optional[str] = None,
+                   trace: bool = False,
+                   trace_capacity: Optional[int] = None) -> ExperimentResult:
     """Run one (scenario, policy) experiment on the chosen engine.
 
     Any registered policy runs on any registered scenario through
@@ -151,6 +172,15 @@ def run_experiment(scenario: str = DEFAULT_SCENARIO,
     (results are bit-identical either way; "event" compresses no-op
     ticks — reference DESIGN.md §4, JAX §7). Engine-native output is
     in ``.raw``.
+
+    ``trace=True`` records the canonical scheduler-event stream
+    (``obs.schema.Event``) into ``.events`` — via driver hooks on the
+    reference engine, via the in-jit ring buffer on the JAX engine
+    (decoded post-run; ``.trace_overflow`` counts any dropped rows,
+    ``trace_capacity`` overrides the auto-sized ring). Feed ``.events``
+    to ``obs.export.write_trace`` (Perfetto / CSV) or
+    ``obs.timeseries`` (utilization, queue depth, slowdown
+    decomposition). DESIGN.md §8.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; one of {ENGINES}")
@@ -163,13 +193,16 @@ def run_experiment(scenario: str = DEFAULT_SCENARIO,
         mode = cfg.time_mode
     js = scenarios.build(scenario, cfg) if jobs is None else jobs
     if engine == "reference":
-        table, intervals, pf, makespan, raw = _run_reference(cfg, js, mode)
+        (table, intervals, pf, makespan, raw, events, overflow,
+         fallback) = _run_reference(cfg, js, mode, trace)
     else:
-        table, intervals, pf, makespan, raw = _run_jax(cfg, js, mode)
+        (table, intervals, pf, makespan, raw, events, overflow,
+         fallback) = _run_jax(cfg, js, mode, trace, trace_capacity)
     return ExperimentResult(
         scenario=scenario, policy=cfg.policy, engine=engine, cfg=cfg,
         table=table, intervals=intervals, preempted_frac=pf,
-        makespan=makespan, raw=raw)
+        makespan=makespan, raw=raw, events=events,
+        trace_overflow=overflow, fallback_count=fallback)
 
 
 def compare_policies(policies, scenario: str = DEFAULT_SCENARIO,

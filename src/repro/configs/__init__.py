@@ -30,7 +30,7 @@ _ARCH_MODULES: Dict[str, str] = {
     "mistral-large-123b": "mistral_large_123b",
 }
 
-# (arch, shape) pairs that are skipped by design; see DESIGN.md §8.
+# (arch, shape) pairs that are skipped by design; see DESIGN.md §9.
 SHAPE_SKIPS = {
     ("whisper-large-v3", "long_500k"):
         "enc-dec ASR; decoder capped at 448 tokens — 524k-token decode "

@@ -6,7 +6,7 @@ Encoder: 32L transformer backbone over 1500 precomputed frame embeddings
 (the conv feature extractor is the one allowed stub; ``input_specs``
 provides (batch, 1500, 1280) frame embeddings).
 
-``long_500k`` is SKIPPED for this arch (see DESIGN.md §8): the decoder is
+``long_500k`` is SKIPPED for this arch (see DESIGN.md §9): the decoder is
 architecturally capped at 448 tokens and the family has no long-context
 decode mode.
 """

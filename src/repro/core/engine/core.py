@@ -49,15 +49,19 @@ Hook = Callable[..., None]
 class CoreHooks:
     """Driver callbacks, invoked AFTER the core state transition.
 
-    on_start(j, nodes, t)   — job placed (fresh start or resume)
-    on_signal(j, te, t)     — preemption signalled (grace begins)
-    on_vacate(j, t)         — grace over, resources freed, requeued
-    on_finish(j, t)         — job completed
+    on_start(j, nodes, t)      — job placed (fresh start or resume)
+    on_signal(j, te, t)        — preemption signalled (grace begins)
+    on_vacate(j, t)            — grace over, resources freed, requeued
+    on_finish(j, t)            — job completed
+    on_backfill(j, skipped, t) — job placed past ``skipped`` blocked
+                                 jobs (fires after on_start, backfill
+                                 passes only)
     """
     on_start: Optional[Hook] = None
     on_signal: Optional[Hook] = None
     on_vacate: Optional[Hook] = None
     on_finish: Optional[Hook] = None
+    on_backfill: Optional[Hook] = None
 
 
 class SchedulerCore:
@@ -321,6 +325,8 @@ class SchedulerCore:
                 nodes = self.fits_job(head)
                 if nodes is not None:
                     self.start(head, nodes, t)
+                    if scanned and self.hooks.on_backfill:
+                        self.hooks.on_backfill(head, scanned, t)
                 else:
                     skipped.append(head)
                     scanned += 1

@@ -1,26 +1,53 @@
 """Slowdown-rate metrics and paper-table summarization."""
 from __future__ import annotations
 
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable, Sequence
 
 import numpy as np
 
 from repro.core.types import SimResult
+from repro.obs import schema as obs_schema
 
 
 def assert_result_parity(a: SimResult, b: SimResult) -> None:
     """Bit-exactness check between two SimResults — the contract the
     event-driven advancement mode guarantees against tick stepping
-    (DESIGN.md §4), also used for driver-vs-driver semantics tests."""
+    (DESIGN.md §4), also used for driver-vs-driver semantics tests.
+
+    A preemption-stream divergence is reported as the FIRST diverging
+    event index with both sides rendered in the canonical event
+    vocabulary (``obs.schema``), not as a bare tuple dump."""
     np.testing.assert_array_equal(a.finish, b.finish)
     np.testing.assert_array_equal(a.preempt_count, b.preempt_count)
     np.testing.assert_array_equal(a.submit, b.submit)
     np.testing.assert_array_equal(a.exec_total, b.exec_total)
     np.testing.assert_array_equal(a.is_te, b.is_te)
     assert a.makespan == b.makespan, (a.makespan, b.makespan)
-    assert len(a.events) == len(b.events), (len(a.events), len(b.events))
-    for ea, eb in zip(a.events, b.events):
-        assert ea.as_tuple() == eb.as_tuple(), (ea, eb)
+    for i, (ea, eb) in enumerate(zip(a.events, b.events)):
+        if ea.as_tuple() != eb.as_tuple():
+            raise AssertionError(
+                f"preemption streams diverge at event {i}:\n"
+                f"  a: {obs_schema.render_preemption(ea)}\n"
+                f"  b: {obs_schema.render_preemption(eb)}")
+    assert len(a.events) == len(b.events), \
+        (f"preemption stream lengths differ: "
+         f"{len(a.events)} vs {len(b.events)}")
+    if a.trace is not None and b.trace is not None:
+        assert_trace_parity(a.trace, b.trace)
+
+
+def assert_trace_parity(a: Sequence, b: Sequence) -> None:
+    """Exact equality of two canonical event streams
+    (``obs.schema.Event`` lists — a traced reference run vs a decoded
+    JAX ring, or the two time modes of one engine). On divergence,
+    reports the first differing index with both events rendered."""
+    for i, (ea, eb) in enumerate(zip(a, b)):
+        if ea.as_tuple() != eb.as_tuple():
+            raise AssertionError(
+                f"traces diverge at event {i}:\n"
+                f"  a: {ea.render()}\n  b: {eb.render()}")
+    assert len(a) == len(b), \
+        f"trace lengths differ: {len(a)} vs {len(b)}"
 
 
 def sim_throughput(res: SimResult, seconds: float) -> float:

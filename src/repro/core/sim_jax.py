@@ -87,6 +87,8 @@ from repro.configs.cluster import SimConfig
 from repro.core import policy_registry
 from repro.core.engine.placement import FIT_EPS
 from repro.core.types import JobSet
+from repro.obs import ring as obs_ring
+from repro.obs import schema as obs_schema
 
 NOT_ARRIVED, QUEUED, RUNNING, GRACE, DONE = 0, 1, 2, 3, 4
 _INF = jnp.inf
@@ -143,6 +145,15 @@ class State(NamedTuple):
     # when 0, the paper's P cap is exact — sum(max(preempt_count - P,
     # 0)) never exceeds this counter.
     fallback_count: jax.Array
+    # In-jit event ring buffer (obs/ring.py layout): (capacity + 1,
+    # 4 + n_words) i32 rows [t, code, job, aux, node words...]; the
+    # extra row is the dump slot for masked/overflowing writes,
+    # re-zeroed after every append. ``ev_n`` counts rows EMITTED
+    # (monotonic; overflow = max(0, ev_n - capacity)). With tracing
+    # off both are zero-size/zero and every append site is compiled
+    # out (the ``trace`` flag is Python-static).
+    ev_buf: jax.Array        # (cap+1, 4+W) i32
+    ev_n: jax.Array          # () i32
 
 
 def jobs_from_jobset(js: JobSet) -> Jobs:
@@ -157,9 +168,14 @@ def jobs_from_jobset(js: JobSet) -> Jobs:
     )
 
 
-def init_state(jobs: Jobs, n_nodes: int, node_cap, seed) -> State:
+def init_state(jobs: Jobs, n_nodes: int, node_cap, seed,
+               trace_capacity: int = 0) -> State:
     N = jobs.submit.shape[0]
     cap = jnp.asarray(node_cap, jnp.float32)
+    tcap = int(trace_capacity)
+    ev_shape = ((tcap + 1, obs_ring.HEADER_WORDS
+                 + obs_ring.n_node_words(n_nodes))
+                if tcap > 0 else (0, 0))
     return State(
         t=jnp.zeros((), jnp.int32),
         # sentinel (padding) jobs are born DONE: never arrive, never run
@@ -187,6 +203,8 @@ def init_state(jobs: Jobs, n_nodes: int, node_cap, seed) -> State:
                      and jnp.issubdtype(seed.dtype, jax.dtypes.prng_key))
         else jax.random.key(seed),
         fallback_count=jnp.zeros((), jnp.int32),
+        ev_buf=jnp.zeros(ev_shape, jnp.int32),
+        ev_n=jnp.zeros((), jnp.int32),
     )
 
 
@@ -300,12 +318,104 @@ def _gang_release(assign: jax.Array, demand: jax.Array,
     return sel.T @ demand
 
 
-def _place(st: State, jobs: Jobs, j: jax.Array, nodes: jax.Array) -> State:
+# -- in-jit event tracing (obs/ring.py layout; DESIGN.md §8) ----------------
+
+class _TraceCtx(NamedTuple):
+    """Static per-build trace context: the node-mask packing weights
+    (``obs.ring.node_mask_weights``) as a device constant. ``None``
+    everywhere a trace context is accepted means tracing is off and
+    the emission code is not built at all."""
+    weights: jax.Array       # (n_words, n_nodes) uint32
+
+
+def _trace_ctx(n_nodes: int) -> _TraceCtx:
+    return _TraceCtx(
+        weights=jnp.asarray(obs_ring.node_mask_weights(n_nodes)))
+
+
+def _ev_rows(tc: _TraceCtx, t, code, job, aux=None,
+             nodes=None) -> jax.Array:
+    """Build (K, 4+W) i32 event rows from broadcastable parts. ``job``
+    fixes K; ``nodes`` is an optional (K, n_nodes) bool placement mask
+    packed 32 nodes per little-endian word."""
+    job = jnp.asarray(job, jnp.int32)
+    K = job.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(t).astype(jnp.int32), (K,))
+    code = jnp.broadcast_to(jnp.asarray(code, jnp.int32), (K,))
+    aux = (jnp.full((K,), -1, jnp.int32) if aux is None
+           else jnp.broadcast_to(jnp.asarray(aux).astype(jnp.int32), (K,)))
+    if nodes is None:
+        words = jnp.zeros((K, tc.weights.shape[0]), jnp.int32)
+    else:
+        packed = jnp.sum(jnp.where(nodes[:, None, :],
+                                   tc.weights[None, :, :],
+                                   jnp.uint32(0)), axis=2)
+        words = jax.lax.bitcast_convert_type(packed, jnp.int32)
+    return jnp.concatenate(
+        [jnp.stack([t, code, job, aux], axis=1), words], axis=1)
+
+
+def _ev_append(st: State, rows: jax.Array, mask: jax.Array) -> State:
+    """Append ``rows[i]`` where ``mask[i]``, preserving row order.
+    Masked-out and past-capacity rows scatter into the dump row (index
+    ``capacity``), which is re-zeroed afterwards so the buffer stays a
+    pure function of the emitted stream (bitwise tick/event parity
+    covers the trace). ``ev_n`` counts every emitted row, dropped or
+    not — the overflow signal."""
+    dump = st.ev_buf.shape[0] - 1
+    m = mask.astype(jnp.int32)
+    idx = jnp.where(mask, st.ev_n + jnp.cumsum(m) - 1, dump)
+    buf = st.ev_buf.at[jnp.minimum(idx, dump)].set(rows)
+    buf = buf.at[dump].set(jnp.zeros((buf.shape[1],), jnp.int32))
+    return st._replace(ev_buf=buf, ev_n=st.ev_n + jnp.sum(m))
+
+
+def _ev1(st: State, tc: _TraceCtx, t, code, job, aux=None, nodes=None,
+         cond=None) -> State:
+    """Append one event row (optionally gated by the traced ``cond``).
+    The unconditional case — every row the emission loops produce —
+    skips ``_ev_append``'s masked-compaction machinery: one clamped
+    scatter, with the row zeroed at capacity so the dump row needs no
+    re-zeroing pass (same pure-function-of-the-stream buffer)."""
+    row = _ev_rows(tc, t, code, jnp.reshape(job, (1,)), aux=aux,
+                   nodes=None if nodes is None
+                   else jnp.reshape(nodes, (1, -1)))
+    if cond is not None:
+        return _ev_append(st, row, jnp.reshape(cond, (1,)))
+    dump = st.ev_buf.shape[0] - 1
+    keep = st.ev_n < dump
+    buf = st.ev_buf.at[jnp.minimum(st.ev_n, dump)].set(
+        jnp.where(keep, row[0], 0))
+    return st._replace(ev_buf=buf, ev_n=st.ev_n + 1)
+
+
+def _ev_scan(st: State, tc: _TraceCtx, t, code, mask) -> State:
+    """Append one ``code`` row per set ``mask`` bit, ascending job
+    index. A bounded loop of single-row appends: a firing tick pays
+    O(k) emitted rows, not an N-row scatter — the batch scatters
+    otherwise dominate traced-run cost on arrival-heavy workloads
+    (their cost is O(N) per firing tick, O(N^2) over a run whose
+    firing ticks scale with N)."""
+    def body(carry):
+        st, m = carry
+        j = jnp.argmax(m).astype(jnp.int32)
+        return _ev1(st, tc, t, code, j), m.at[j].set(False)
+
+    st, _ = jax.lax.while_loop(lambda c: c[1].any(), body, (st, mask))
+    return st
+
+
+def _place(st: State, jobs: Jobs, j: jax.Array, nodes: jax.Array,
+           tc: _TraceCtx = None) -> State:
     """Start job j on the ``nodes`` mask (assumes the gang fits).
     Scatter (row-indexed) updates, not full-array wheres — this runs
     once per placement inside the schedule while-loops, so it must not
     pay O(N) per job started."""
     resumed = st.awaiting_resume[j]
+    if tc is not None:
+        st = _ev1(st, tc, st.t,
+                  jnp.where(resumed, obs_schema.RESUME, obs_schema.START),
+                  j, nodes=nodes)
     return st._replace(
         state=st.state.at[j].set(RUNNING),
         assign=st.assign.at[j].set(nodes),
@@ -318,7 +428,8 @@ def _place(st: State, jobs: Jobs, j: jax.Array, nodes: jax.Array) -> State:
     )
 
 
-def _signal_one(st: State, jobs: Jobs, v: jax.Array, te: jax.Array) -> State:
+def _signal_one(st: State, jobs: Jobs, v: jax.Array, te: jax.Array,
+                tc: _TraceCtx = None) -> State:
     """Signal preemption of running BE job v for TE job te (scalars).
     Gang victims promise / vacate ALL their nodes at once.
 
@@ -329,6 +440,16 @@ def _signal_one(st: State, jobs: Jobs, v: jax.Array, te: jax.Array) -> State:
     a signal costs O(nodes), not O(N)."""
     row = st.assign[v]
     gp0 = jobs.gp[v] == 0
+    if tc is not None:
+        # SIGNAL always; a GP=0 victim vacates and requeues inline
+        # (no GRACE_EXPIRE — it never entered grace)
+        v3 = jnp.stack([v, v, v])
+        codes = jnp.asarray([obs_schema.PREEMPT_SIGNAL, obs_schema.VACATE,
+                             obs_schema.REQUEUE], jnp.int32)
+        aux3 = jnp.stack([te, te, jnp.int32(-1)])
+        st = _ev_append(
+            st, _ev_rows(tc, st.t, codes, v3, aux=aux3),
+            jnp.stack([jnp.asarray(True), gp0, gp0]))
     d = jobs.demand[v][None, :] * row[:, None].astype(jnp.float32)
     zero = jnp.zeros_like(d)
     return st._replace(
@@ -418,7 +539,7 @@ def _resolve_score_backend(cfg: SimConfig, spec, s) -> str:
 
 
 def _until_fits_select(st: State, jobs: Jobs, te: jax.Array, rank_val,
-                       P) -> State:
+                       P, tc: _TraceCtx = None) -> State:
     """LRTP/RAND: keep signalling victims (best ``rank_val`` first,
     under-P-cap first) until the TE fits on the last victim's BEST
     node, counting the demand signalled there so far. Mirrors
@@ -450,7 +571,7 @@ def _until_fits_select(st: State, jobs: Jobs, te: jax.Array, rank_val,
         node = best_node[v]
         st = st._replace(
             fallback_count=st.fallback_count + (~m1.any()).astype(jnp.int32))
-        st = _signal_one(st, jobs, v, te)
+        st = _signal_one(st, jobs, v, te, tc)
         # Accumulate each selection's demand at its best node and test
         # the TE there against the snapshot — mirrors
         # policies._preempt_until_fits (pending starts at free, adds
@@ -468,7 +589,7 @@ def _until_fits_select(st: State, jobs: Jobs, te: jax.Array, rank_val,
 
 
 def _gang_select(st: State, jobs: Jobs, te: jax.Array, rank_val, P,
-                 score=None) -> State:
+                 score=None, tc: _TraceCtx = None) -> State:
     """Multi-node TE: the vectorized mirror of
     ``engine/preemption.gang_select``. With ``score`` (Eq. 4-style
     argmin policies; LOWER = better victim, computed over TOTAL gang
@@ -531,7 +652,7 @@ def _gang_select(st: State, jobs: Jobs, te: jax.Array, rank_val, P,
     def signal_single(st):
         st = st._replace(fallback_count=st.fallback_count
                          + (~under0[v1]).astype(jnp.int32))
-        return _signal_one(st, jobs, v1, te)
+        return _signal_one(st, jobs, v1, te, tc)
 
     def signal_accum(st):
         n_sig = jnp.where(satisfied, nsel, 0)   # insufficient -> nothing
@@ -544,7 +665,7 @@ def _gang_select(st: State, jobs: Jobs, te: jax.Array, rank_val, P,
             v = jnp.argmax(seq == k).astype(jnp.int32)
             st = st._replace(fallback_count=st.fallback_count
                              + (~under0[v]).astype(jnp.int32))
-            return _signal_one(st, jobs, v, te), k + 1
+            return _signal_one(st, jobs, v, te, tc), k + 1
 
         st, _ = jax.lax.while_loop(sig_cond, sig_body, (st, jnp.int32(0)))
         return st
@@ -700,12 +821,12 @@ def _make_would_act_cached(jobs: Jobs, preemptive: bool,
 
 def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
                s=None, P=None, time_mode: str = None,
-               max_ticks: int = 1 << 22):
+               max_ticks: int = 1 << 22, trace: bool = False):
     """Build the ``(State, _Cache) -> (State, _Cache)`` while-loop
     body: one scheduling tick, plus — in ``"event"`` time mode — the
     event jump that compresses the following run of provably no-op
     ticks into a single ``dt`` step (bit-exact either way; see module
-    docstring and DESIGN.md §8).
+    docstring and DESIGN.md §7).
 
     Every phase is gated so a no-op tick touches as few arrays as
     possible: arrivals and vacates fire only when the cache says their
@@ -718,7 +839,10 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
 
     ``time_mode`` defaults to ``cfg.time_mode``; ``s`` and ``P`` may
     be traced scalars (for vmapped sweeps); ``max_ticks`` bounds the
-    stall jump and must match the driving loop's bound."""
+    stall jump and must match the driving loop's bound. ``trace``
+    (Python-static) builds the in-jit event emission — off, none of it
+    exists in the compiled program (zero cost); on, the State must
+    carry a real ring buffer (``init_state(trace_capacity=...)``)."""
     node_cap = jnp.asarray(cfg.cluster.node.as_tuple(), jnp.float32)
     N = jobs.submit.shape[0]
     time_mode = cfg.time_mode if time_mode is None else time_mode
@@ -731,6 +855,7 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
     s = cfg.s if s is None else s
     pol = spec.make()                  # decision rule (jax declarations)
     backend = _resolve_score_backend(cfg, spec, s)
+    tc = _trace_ctx(n_nodes) if trace else None
     if preemptive and spec.jax_kind is None:
         raise NotImplementedError(
             f"policy {cfg.policy!r} registers no JAX implementation "
@@ -741,7 +866,7 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
             def width1(s_):
                 s_, v = _score_select(s_, jobs, te, pol, node_cap, s, P,
                                       backend)
-                return _signal_one(s_, jobs, v, te)
+                return _signal_one(s_, jobs, v, te, tc)
 
             def gang(s_):
                 # gang ordering keys on the score of the TOTAL gang
@@ -753,17 +878,18 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
                     demand=jobs.demand * jobs.width[:, None]
                     .astype(jnp.float32))
                 gscore = pol.jax_score(total, cand, node_cap, s)
-                return _gang_select(s_, jobs, te, -gscore, P, score=gscore)
+                return _gang_select(s_, jobs, te, -gscore, P, score=gscore,
+                                    tc=tc)
 
             return jax.lax.cond(jobs.width[te] == 1, width1, gang, st)
 
         def width1(s_):
             s_, rank = pol.jax_rank(s_, jobs)      # may consume s_.rng
-            return _until_fits_select(s_, jobs, te, rank, P)
+            return _until_fits_select(s_, jobs, te, rank, P, tc)
 
         def gang(s_):
             s_, rank = pol.jax_rank(s_, jobs)      # may consume s_.rng
-            return _gang_select(s_, jobs, te, rank, P)
+            return _gang_select(s_, jobs, te, rank, P, tc=tc)
 
         return jax.lax.cond(jobs.width[te] == 1, width1, gang, st)
 
@@ -812,7 +938,7 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
             nodes = row & (jnp.cumsum(row) <= jobs.width[j]) & ok
 
             def place(st):
-                return _place(st, jobs, j, nodes)
+                return _place(st, jobs, j, nodes, tc)
 
             def blocked(st):
                 fits_pending = ps.fit_pend[j] >= jobs.width[j]
@@ -827,7 +953,8 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
                 ok2, nodes2 = _gang_fit(st.free, jobs.demand[j],
                                         jobs.width[j])
                 return jax.lax.cond(do & ok2,
-                                    lambda s_: _place(s_, jobs, j, nodes2),
+                                    lambda s_: _place(s_, jobs, j, nodes2,
+                                                      tc),
                                     lambda s_: s_, st)
 
             st = jax.lax.cond(ok, place, blocked, st)
@@ -851,7 +978,7 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
             j = ps.be_pick
             row = ps.fits[j]
             nodes = row & (jnp.cumsum(row) <= jobs.width[j])
-            st = _place(st, jobs, j, nodes)
+            st = _place(st, jobs, j, nodes, tc)
             ps = queue_pass(st, head_mask(st))
             return st, ps
 
@@ -881,7 +1008,12 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
             scanned = scanned + ps.nskip
             row = ps.fits[j]
             nodes = row & (jnp.cumsum(row) <= jobs.width[j])
-            st = _place(st, jobs, j, nodes)
+            st = _place(st, jobs, j, nodes, tc)
+            if tc is not None:
+                # marker after a placement that skipped ahead; aux =
+                # cumulative skips this pass (reference `scanned`)
+                st = _ev1(st, tc, st.t, obs_schema.BACKFILL, j,
+                          aux=scanned, cond=scanned > 0)
             ps = queue_pass(st, head_mask(st) & ~skipped)
             return st, ps, skipped, scanned
 
@@ -900,6 +1032,8 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
         def fire(args):
             st, cache = args
             arrive = (jobs.submit <= st.t) & (st.state == NOT_ARRIVED)
+            if tc is not None:
+                st = _ev_scan(st, tc, st.t, obs_schema.SUBMIT, arrive)
             state = jnp.where(arrive, QUEUED, st.state)
             st = st._replace(
                 state=state,
@@ -923,6 +1057,30 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
         def fire(args):
             st, cache = args
             vac = (st.state == GRACE) & (st.grace_left <= 0)
+            if tc is not None:
+                # [GRACE_EXPIRE, VACATE(aux=te), REQUEUE] per job,
+                # job-major in index order — aux read BEFORE victim_of
+                # is cleared below. GRACE jobs always have GP > 0, so
+                # the expiry row is unconditional here. One 3-row
+                # append per vacating job (``_ev_scan`` rationale).
+                codes = jnp.asarray([obs_schema.GRACE_EXPIRE,
+                                     obs_schema.VACATE,
+                                     obs_schema.REQUEUE], jnp.int32)
+
+                def vbody(carry):
+                    st, m = carry
+                    j = jnp.argmax(m).astype(jnp.int32)
+                    aux = jnp.stack([jnp.int32(-1),
+                                     st.victim_of[j].astype(jnp.int32),
+                                     jnp.int32(-1)])
+                    rows = _ev_rows(tc, st.t, codes,
+                                    jnp.full((3,), j, jnp.int32),
+                                    aux=aux)
+                    st = _ev_append(st, rows, jnp.ones((3,), bool))
+                    return st, m.at[j].set(False)
+
+                st, _ = jax.lax.while_loop(lambda c: c[1].any(), vbody,
+                                           (st, vac))
             rank = jnp.cumsum(vac) - 1
             n_vac = jnp.sum(vac)
             te_dec = jnp.zeros((N,), jnp.int32).at[
@@ -995,6 +1153,8 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
                 st, f = carry
                 j = jnp.argmax(f).astype(jnp.int32)
                 row = st.assign[j]
+                if tc is not None:
+                    st = _ev1(st, tc, st.t + 1, obs_schema.FINISH, j)
                 st = st._replace(
                     state=st.state.at[j].set(DONE),
                     finish=st.finish.at[j].set(st.t + 1),
@@ -1060,6 +1220,23 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
                                         jnp.maximum(big - t1, 0)))
                 dt = dt.astype(jnp.int32)
                 fin = running & (st.remaining <= dt)
+                if tc is not None:
+                    # the bulk retire must emit the FINISH rows the
+                    # skipped ticks would have: sorted by finish time,
+                    # job-index order within a tick (first-occurrence
+                    # argmin) — bitwise identical to tick mode's
+                    # stream, one row per retired job (``_ev_scan``
+                    # rationale)
+                    ft = jnp.where(fin, t1 + st.remaining, _BIG)
+
+                    def dbody(carry):
+                        st, ftm = carry
+                        j = jnp.argmin(ftm).astype(jnp.int32)
+                        st = _ev1(st, tc, ftm[j], obs_schema.FINISH, j)
+                        return st, ftm.at[j].set(_BIG)
+
+                    st, _ = jax.lax.while_loop(
+                        lambda c: (c[1] < _BIG).any(), dbody, (st, ft))
                 return st._replace(
                     t=t1 + dt,
                     remaining=st.remaining - jnp.where(
@@ -1127,7 +1304,7 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
 
 def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
               s=None, P=None, time_mode: str = None,
-              max_ticks: int = 1 << 22):
+              max_ticks: int = 1 << 22, trace: bool = False):
     """Build a ``State -> State`` step: one scheduling tick ("tick"
     mode) or one executed tick plus the event jump ("event" mode) —
     the per-step public face of :func:`_make_step`, used by the
@@ -1136,7 +1313,7 @@ def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
     function of the State), so single-stepping is bit-identical to
     :func:`run`'s threaded loop."""
     step = _make_step(cfg, jobs, n_nodes, s=s, P=P, time_mode=time_mode,
-                      max_ticks=max_ticks)
+                      max_ticks=max_ticks, trace=trace)
 
     def tick_step(st: State) -> State:
         st, _ = step((st, _cache_from_state(jobs, st)))
@@ -1145,26 +1322,45 @@ def make_tick(cfg: SimConfig, jobs: Jobs, n_nodes: int,
     return tick_step
 
 
+def resolve_trace_capacity(cfg: SimConfig, jobs: Jobs,
+                           trace_capacity=None) -> int:
+    """The static ring capacity a traced run uses:
+    ``trace_capacity`` verbatim when given, else
+    ``obs.ring.default_capacity`` sized from the jobset and the
+    config's P cap."""
+    if trace_capacity is not None:
+        return int(trace_capacity)
+    return obs_ring.default_capacity(jobs.submit.shape[0],
+                                     cfg.max_preemptions)
+
+
 def run(cfg: SimConfig, jobs: Jobs, seed=0,
         max_ticks: int = 1 << 22, s=None, P=None,
-        time_mode: str = None) -> State:
+        time_mode: str = None, trace: bool = False,
+        trace_capacity=None) -> State:
     """Run the full simulation; returns the final state.
 
     ``time_mode`` ("tick" | "event", default ``cfg.time_mode``) selects
     per-quantum stepping vs the event-compressed jump — bit-identical
-    States, wall-clock proportional to events instead of makespan."""
+    States, wall-clock proportional to events instead of makespan.
+    ``trace`` records every scheduler event into the in-jit ring
+    buffer (decode with :func:`decode_trace`); off by default and then
+    entirely compiled out."""
+    cap = resolve_trace_capacity(cfg, jobs, trace_capacity) if trace else 0
     st = init_state(jobs, cfg.cluster.n_nodes, cfg.cluster.node.as_tuple(),
-                    seed)
-    return _run_loop(cfg, jobs, st, max_ticks, s, P, time_mode)
+                    seed, trace_capacity=cap)
+    return _run_loop(cfg, jobs, st, max_ticks, s, P, time_mode,
+                     trace=trace)
 
 
 def _run_loop(cfg: SimConfig, jobs: Jobs, st: State, max_ticks: int,
-              s, P, time_mode: str) -> State:
+              s, P, time_mode: str, trace: bool = False) -> State:
     """The traceable core of :func:`run`: drive ``_make_step`` from an
     existing initial State (so :func:`run_jit` can build it eagerly
     and donate its buffers into the jitted loop)."""
     step = _make_step(cfg, jobs, cfg.cluster.n_nodes, s=s, P=P,
-                      time_mode=time_mode, max_ticks=max_ticks)
+                      time_mode=time_mode, max_ticks=max_ticks,
+                      trace=trace)
     N = jobs.submit.shape[0]
 
     def cond(carry):
@@ -1175,27 +1371,53 @@ def _run_loop(cfg: SimConfig, jobs: Jobs, st: State, max_ticks: int,
     return st
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "time_mode"))
-def _run_jit_full(cfg: SimConfig, jobs: Jobs, seed,
-                  time_mode: str) -> State:
+@functools.partial(jax.jit, static_argnames=("cfg", "time_mode", "trace",
+                                             "trace_capacity"))
+def _run_jit_full(cfg: SimConfig, jobs: Jobs, seed, time_mode: str,
+                  trace: bool = False, trace_capacity: int = 0) -> State:
     st = init_state(jobs, cfg.cluster.n_nodes, cfg.cluster.node.as_tuple(),
-                    seed)
-    return _run_loop(cfg, jobs, st, 1 << 22, None, None, time_mode)
+                    seed, trace_capacity=trace_capacity if trace else 0)
+    return _run_loop(cfg, jobs, st, 1 << 22, None, None, time_mode,
+                     trace=trace)
 
 
 def run_jit(cfg: SimConfig, jobs: Jobs, seed: int = 0,
-            time_mode: str = None) -> State:
+            time_mode: str = None, trace: bool = False,
+            trace_capacity=None) -> State:
     """Jitted :func:`run`. The initial State is built INSIDE the jit
     (``seed`` is traced, so sweeping seeds reuses the compilation), so
     no State buffer ever crosses the jit boundary inward: every ~20
     small construction dispatches the old eager init paid per call are
     compiled into the loop program, and XLA owns (and reuses) the
     State buffers end-to-end — the stronger form of the buffer
-    donation this entry point used to do."""
+    donation this entry point used to do. ``trace``/``trace_capacity``
+    are jit-static: toggling tracing recompiles (the traced program is
+    a different program), sweeping seeds does not."""
     if not (isinstance(seed, jax.Array) and jnp.issubdtype(
             seed.dtype, jax.dtypes.prng_key)):
         seed = jnp.asarray(seed, jnp.int32)
-    return _run_jit_full(cfg, jobs, seed, time_mode)
+    cap = resolve_trace_capacity(cfg, jobs, trace_capacity) if trace else 0
+    return _run_jit_full(cfg, jobs, seed, time_mode, trace, cap)
+
+
+def trace_overflow(st: State) -> jax.Array:
+    """Ring-buffer rows dropped past capacity (() i32; 0 with tracing
+    off). Non-zero means the trace is TRUNCATED — loud in
+    ``result_summary`` and the CLI/bench output."""
+    if st.ev_buf.size == 0:
+        return jnp.zeros((), jnp.int32)
+    cap = st.ev_buf.shape[-2] - 1
+    return jnp.maximum(st.ev_n - cap, 0)
+
+
+def decode_trace(st: State):
+    """Decode the final State's ring buffer into the canonical event
+    schema: ``(list[obs.schema.Event], overflow)`` — the JAX half of
+    the cross-engine trace-parity contract (the reference half is
+    ``Simulator(trace=True)``)."""
+    if st.ev_buf.size == 0:
+        return [], 0
+    return obs_ring.decode_ring(st.ev_buf, st.ev_n)
 
 
 def state_diff_fields(a: State, b: State) -> list:
@@ -1249,4 +1471,9 @@ def result_summary(jobs: Jobs, st: State) -> dict:
     out["intervals"] = masked_percentiles(
         (st.last_resume - st.last_signal).astype(jnp.float32),
         iv_mask, (50, 75, 95, 99))
+    # loud observability counters: non-zero fallback_count voids the
+    # P-cap exactness claim, non-zero trace_overflow means a truncated
+    # trace — both surfaced in CLI and bench output, not just tests
+    out["fallback_count"] = st.fallback_count
+    out["trace_overflow"] = trace_overflow(st)
     return out

@@ -38,21 +38,27 @@ from repro.configs.cluster import SimConfig
 from repro.core import policy_registry
 from repro.core.engine import ClusterState, CoreHooks, SchedulerCore
 from repro.core.types import JobSet, PreemptionEvent, SimResult
+from repro.obs import schema as obs_schema
 
 
 class Simulator:
     def __init__(self, cfg: SimConfig, jobs: JobSet,
-                 admission_target: float = 0.0):
+                 admission_target: float = 0.0, trace: bool = False):
         """``admission_target`` > 0 switches to closed-loop admission:
         ``jobs.submit`` is ignored and the next job (in index order) is
         admitted whenever the backlog load (cluster-normalized demand of
         all admitted, unfinished jobs) is below the target. Used once,
         under FIFO, to realize the paper's "load kept at 2.0 if scheduled
         by FIFO" arrival process; the recorded admit times then serve as
-        open-loop submit times for every policy."""
+        open-loop submit times for every policy.
+
+        ``trace`` records the canonical event stream (``obs.schema``)
+        into ``SimResult.trace`` — the reference half of the
+        cross-engine trace-parity contract (DESIGN.md §8)."""
         self.cfg = cfg
         self.jobs = jobs
         self.admission_target = admission_target
+        self.trace_events = [] if trace else None
         self.admit_time = np.full(jobs.n, -1, np.int64)
         self._load = 0.0
         self.policy = policy_registry.make(cfg.policy, s=cfg.s)
@@ -81,7 +87,9 @@ class Simulator:
             backfill_depth=cfg.backfill_depth,
             hooks=CoreHooks(on_start=self._on_start,
                             on_signal=self._on_signal,
-                            on_vacate=self._on_vacate),
+                            on_vacate=self._on_vacate,
+                            on_finish=self._on_finish,
+                            on_backfill=self._on_backfill),
         )
 
         order = np.argsort(jobs.submit, kind="stable")
@@ -93,22 +101,48 @@ class Simulator:
 
     # -- result bookkeeping (driver-side, via core hooks) --------------------
 
+    def _emit(self, t: int, code: int, j: int, aux: int = -1,
+              nodes=()) -> None:
+        if self.trace_events is not None:
+            self.trace_events.append(obs_schema.Event(
+                t=int(t), code=code, job=int(j), aux=int(aux),
+                nodes=tuple(int(n) for n in nodes)))
+
     def _on_start(self, j: int, nodes: np.ndarray, t: int) -> None:
-        if self.vacated_at[j] >= 0:
+        resumed = self.vacated_at[j] >= 0
+        self._emit(t, obs_schema.RESUME if resumed else obs_schema.START,
+                   j, nodes=np.atleast_1d(np.asarray(nodes)))
+        if resumed:
             ev = self.open_events.pop(j, None)
             if ev is not None:
                 ev.resume_time = t
             self.vacated_at[j] = -1
 
     def _on_signal(self, j: int, te: int, t: int) -> None:
+        self._emit(t, obs_schema.PREEMPT_SIGNAL, j, aux=te)
         ev = PreemptionEvent(job=j, te_job=te, signal_time=t)
         self.events.append(ev)
         self.open_events[j] = ev
 
     def _on_vacate(self, j: int, t: int) -> None:
+        if self.trace_events is not None:
+            # a GP=0 victim vacates inline at signal time without ever
+            # entering grace — no GRACE_EXPIRE row for it
+            if int(self.jobs.gp[j]) > 0:
+                self._emit(t, obs_schema.GRACE_EXPIRE, j)
+            ev = self.open_events.get(j)
+            self._emit(t, obs_schema.VACATE, j,
+                       aux=ev.te_job if ev is not None else -1)
+            self._emit(t, obs_schema.REQUEUE, j)
         self.vacated_at[j] = t
         if j in self.open_events:
             self.open_events[j].vacate_time = t
+
+    def _on_finish(self, j: int, t: int) -> None:
+        self._emit(t, obs_schema.FINISH, j)
+
+    def _on_backfill(self, j: int, skipped: int, t: int) -> None:
+        self._emit(t, obs_schema.BACKFILL, j, aux=skipped)
 
     # -- state views (tests and subclasses introspect these) ----------------
 
@@ -168,6 +202,7 @@ class Simulator:
                    self._load < self.admission_target):
                 j = self._next_arrival
                 core.enqueue(j)
+                self._emit(t, obs_schema.SUBMIT, j)
                 self.admit_time[j] = t
                 self._load += self.frac[j]
                 self._next_arrival += 1
@@ -176,6 +211,7 @@ class Simulator:
                    jobs.submit[self.arrival_order[self._next_arrival]] <= t):
                 j = int(self.arrival_order[self._next_arrival])
                 core.enqueue(j)
+                self._emit(t, obs_schema.SUBMIT, j)
                 self._next_arrival += 1
         # grace countdown -> vacate, then allocate
         core.expire_grace(t)
@@ -259,8 +295,10 @@ class Simulator:
             preempt_count=self.core.preempt_count.copy(),
             events=self.events,
             makespan=t,
+            trace=self.trace_events,
         )
 
 
-def simulate(cfg: SimConfig, jobs: JobSet, mode: str = "event") -> SimResult:
-    return Simulator(cfg, jobs).run(mode=mode)
+def simulate(cfg: SimConfig, jobs: JobSet, mode: str = "event",
+             trace: bool = False) -> SimResult:
+    return Simulator(cfg, jobs, trace=trace).run(mode=mode)

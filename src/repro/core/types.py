@@ -71,7 +71,12 @@ class PreemptionEvent:
 
 @dataclass
 class SimResult:
-    """Everything needed for the paper's tables/figures."""
+    """Everything needed for the paper's tables/figures.
+
+    ``trace`` is the canonical scheduler-event stream
+    (``obs.schema.Event`` rows) when the run was traced
+    (``Simulator(trace=True)`` / ``simulate(trace=True)``), else None.
+    """
     finish: np.ndarray            # (n,) completion tick
     exec_total: np.ndarray
     submit: np.ndarray
@@ -79,6 +84,7 @@ class SimResult:
     preempt_count: np.ndarray     # (n,)
     events: List[PreemptionEvent] = field(default_factory=list)
     makespan: int = 0
+    trace: Optional[List] = None  # List[obs.schema.Event]
 
     @property
     def slowdown(self) -> np.ndarray:

@@ -1,0 +1,20 @@
+"""Observability: canonical event schema, in-jit ring-buffer decode,
+trace exporters and derived telemetry (DESIGN.md §8).
+
+Layering: ``obs`` depends only on numpy + the schema itself — both
+engines import FROM here (event codes, ``default_capacity``), never
+the other way around, so every consumer of a trace is engine-agnostic.
+"""
+from repro.obs.export import (read_csv, to_csv, to_perfetto,  # noqa: F401
+                              write_trace)
+from repro.obs.ring import (decode_ring, default_capacity,  # noqa: F401
+                            n_node_words)
+from repro.obs.schema import (BACKFILL, EVENT_NAMES, FINISH,  # noqa: F401
+                              GRACE_EXPIRE, PREEMPT_SIGNAL, REQUEUE,
+                              RESUME, START, SUBMIT, VACATE, Event,
+                              events_of_job, render_preemption,
+                              validate_events)
+from repro.obs.timeseries import (JobDecomposition,  # noqa: F401
+                                  TimeSeries, compute_timeseries,
+                                  format_timeseries,
+                                  slowdown_decomposition)

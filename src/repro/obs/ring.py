@@ -1,0 +1,98 @@
+"""Fixed-capacity in-jit event ring buffer: layout + host-side decode.
+
+The JAX engine cannot call back to the host from inside its
+``lax.while_loop``, so tracing appends rows to a preallocated int32
+buffer threaded through ``sim_jax.State``:
+
+  * ``ev_buf`` — shape ``(capacity + 1, 4 + n_words)`` int32, where a
+    row is ``[t, code, job, aux, node_word_0, ...]``. Node words pack
+    the placement node mask 32 nodes per word, little-endian (node
+    ``k`` is bit ``k % 32`` of word ``k // 32``); non-placement rows
+    carry all-zero words. ``n_words = max(1, ceil(n_nodes / 32))``.
+  * ``ev_n`` — () int32, the count of rows EMITTED (monotonic, may
+    exceed capacity).
+
+Row ``capacity`` (the extra row) is the dump row: every masked-out or
+overflowing write is scattered there (``jnp.minimum(idx, capacity)``)
+and the row is re-zeroed after each append, so the buffer contents
+stay a pure function of the event stream — bitwise State parity
+between tick and event mode covers the trace too.
+
+Overflow rule: rows past capacity are dropped newest-first and
+``overflow = max(0, ev_n - capacity)`` is surfaced loudly
+(``result_summary``, ``ExperimentResult.trace_overflow``, the CLI and
+the bench). :func:`default_capacity` is sized so overflow never
+happens for the repo's scenarios unless preemption churn exceeds the
+paper's P cap many times over.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.obs import schema
+from repro.obs.schema import Event
+
+# Buffer row layout: [t, code, job, aux, node words...]
+HEADER_WORDS = 4
+NODE_WORD_BITS = 32
+
+
+def n_node_words(n_nodes: int) -> int:
+    return max(1, -(-int(n_nodes) // NODE_WORD_BITS))
+
+
+def default_capacity(n_jobs: int, max_preemptions: int = 1) -> int:
+    """Capacity heuristic: every job emits SUBMIT + START + FINISH
+    (+ BACKFILL marker at most once per placement), and each
+    preemption of a job costs at most 7 rows (SIGNAL, GRACE_EXPIRE,
+    VACATE, REQUEUE, RESUME + a possible BACKFILL on the resume and
+    one slack row). ``fallback_count`` signals can exceed the P cap,
+    so a generous constant floor is added on top."""
+    per_job = 8 + 7 * max(int(max_preemptions), 1)
+    return 64 + int(n_jobs) * per_job
+
+
+def decode_ring(ev_buf, ev_n) -> Tuple[List[Event], int]:
+    """Decode a device ring buffer into canonical :class:`Event` rows.
+
+    Returns ``(events, overflow)`` where ``overflow`` is the count of
+    rows dropped past capacity. The dump row (index ``capacity``) is
+    never part of the stream."""
+    buf = np.asarray(ev_buf)
+    n = int(np.asarray(ev_n))
+    cap = buf.shape[0] - 1
+    n_words = buf.shape[1] - HEADER_WORDS
+    overflow = max(0, n - cap)
+    kept = min(n, cap)
+    events: List[Event] = []
+    rows = buf[:kept]
+    words = rows[:, HEADER_WORDS:].astype(np.uint32)
+    for i in range(kept):
+        t, code, job, aux = (int(rows[i, 0]), int(rows[i, 1]),
+                             int(rows[i, 2]), int(rows[i, 3]))
+        nodes: Tuple[int, ...] = ()
+        if code in schema.PLACEMENT_CODES:
+            idx = []
+            for w in range(n_words):
+                word = int(words[i, w])
+                while word:
+                    b = (word & -word).bit_length() - 1
+                    idx.append(w * NODE_WORD_BITS + b)
+                    word &= word - 1
+            nodes = tuple(idx)
+        events.append(Event(t=t, code=code, job=job, aux=aux, nodes=nodes))
+    return events, overflow
+
+
+def node_mask_weights(n_nodes: int) -> np.ndarray:
+    """Per-node packing weights: ``(n_words, n_nodes)`` uint32 with
+    ``weights[w, k] = 1 << (k % 32)`` iff ``k // 32 == w`` — a bool
+    node mask packs to words via ``weights @ mask``. Precomputed on
+    the host so the in-jit append is one matmul."""
+    n_words = n_node_words(n_nodes)
+    w = np.zeros((n_words, n_nodes), np.uint32)
+    for k in range(int(n_nodes)):
+        w[k // NODE_WORD_BITS, k] = np.uint32(1 << (k % NODE_WORD_BITS))
+    return w

@@ -5,6 +5,7 @@
     PYTHONPATH=src python -m repro.scenarios run NAME [--policy fitgpp]
         [--engine reference|jax] [--score-backend jnp|pallas]
         [--n-jobs 512] [--nodes 16] [--seed 0] [--mode event|tick]
+        [--trace out.json [--trace-format perfetto|csv]]
     PYTHONPATH=src python -m repro.scenarios sweep NAME [NAME ...]
         [--seeds 0,1] [--n-jobs 256] [--policy fitgpp]
         [--mode event|tick]
@@ -69,13 +70,27 @@ def cmd_run(args) -> None:
           f"policy={cfg.policy}, engine={args.engine}, "
           f"nodes={cfg.cluster.n_nodes}")
     r = api.run_experiment(args.name, cfg.policy, args.engine, cfg=cfg,
-                           jobs=js, mode=args.mode)
+                           jobs=js, mode=args.mode, trace=bool(args.trace))
     print(metrics.format_table(
         {r.policy: r.table},
         f"slowdown percentiles (makespan {r.makespan} min)"))
     print(f"resched intervals [min]: p50={r.intervals['p50']:.1f} "
           f"p95={r.intervals['p95']:.1f}   preempted "
           f"{r.preempted_frac * 100:.1f}% of BE jobs")
+    if args.engine == "jax":
+        print(f"fallback_count={r.fallback_count} "
+              f"trace_overflow={r.trace_overflow}")
+    if args.trace:
+        from repro.obs import export
+        export.write_trace(args.trace, r.events,
+                           fmt=args.trace_format,
+                           n_nodes=cfg.cluster.n_nodes,
+                           is_te=np.asarray(js.is_te),
+                           preemptive=api.get_policy(cfg.policy).preemptive)
+        print(f"{len(r.events)} events -> {args.trace} "
+              f"[{args.trace_format}]"
+              + (f" (WARNING: {r.trace_overflow} rows dropped)"
+                 if r.trace_overflow else ""))
 
 
 def cmd_sweep(args) -> None:
@@ -126,6 +141,14 @@ def main(argv=None) -> None:
     p.add_argument("--score-backend", default="jnp",
                    choices=api.score_backend_names(),
                    help="JAX-engine score path for score policies")
+    p.add_argument("--trace", metavar="PATH", default=None,
+                   help="record the canonical event stream (both "
+                        "engines; in-jit ring buffer on jax) and write "
+                        "it to PATH")
+    p.add_argument("--trace-format", default="perfetto",
+                   choices=("perfetto", "csv"),
+                   help="trace file format: Chrome/Perfetto JSON "
+                        "(load in ui.perfetto.dev) or lossless CSV")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("sweep", help="ragged multi-scenario JAX sweep")

@@ -1,0 +1,212 @@
+"""Unit coverage for the telemetry subsystem (``repro.obs``,
+DESIGN.md §8): schema lifecycle validation, the export round-trips
+(CSV lossless, Perfetto structurally sound), the replayed time-series
+metrics, and the schema-rendered parity diagnostics."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
+from repro.core import metrics, simulator
+from repro.core.types import PreemptionEvent, SimResult
+from repro.obs import export, ring, schema, timeseries
+from repro.obs.schema import Event
+
+
+def _traced(policy="lrtp", n_nodes=16, n_jobs=96, seed=3, **kw):
+    """One preemption-heavy traced reference run (shared fixture)."""
+    cfg = SimConfig(cluster=ClusterSpec(n_nodes=n_nodes), policy=policy,
+                    workload=WorkloadSpec(n_jobs=n_jobs), seed=seed, **kw)
+    js = scenarios.build("gang-heavy", cfg)
+    res = simulator.simulate(cfg, js, trace=True)
+    return cfg, js, res
+
+
+@pytest.fixture(scope="module")
+def traced():
+    return _traced()
+
+
+class TestSchema:
+    def test_render_names_fields(self):
+        ev = Event(t=5, code=schema.PREEMPT_SIGNAL, job=3, aux=7)
+        assert ev.render() == "PREEMPT_SIGNAL t=5 job=3 te=7"
+        ev = Event(t=2, code=schema.START, job=1, nodes=(0, 4))
+        assert ev.render() == "START t=2 job=1 nodes=0+4"
+        ev = Event(t=9, code=schema.BACKFILL, job=2, aux=3)
+        assert "skipped=3" in ev.render()
+
+    def test_validate_accepts_real_trace(self, traced):
+        cfg, js, res = traced
+        schema.validate_events(res.trace, n_jobs=js.n,
+                               n_nodes=cfg.cluster.n_nodes)
+
+    @pytest.mark.parametrize("events,msg", [
+        ([Event(0, schema.START, 0, nodes=(0,))], "before SUBMIT"),
+        ([Event(0, schema.SUBMIT, 0), Event(0, schema.SUBMIT, 0)],
+         "second SUBMIT"),
+        ([Event(0, schema.SUBMIT, 0), Event(0, schema.START, 0)],
+         "without a node-set"),
+        ([Event(1, schema.SUBMIT, 0), Event(0, schema.SUBMIT, 1)],
+         "timestamp decreases"),
+        ([Event(0, schema.SUBMIT, 0),
+          Event(0, schema.RESUME, 0, nodes=(0,))], "RESUME before"),
+        ([Event(0, schema.SUBMIT, 0), Event(0, schema.VACATE, 0)],
+         "without a pending signal"),
+        ([Event(0, schema.SUBMIT, 0), Event(0, schema.START, 0,
+                                            nodes=(0,)),
+          Event(1, schema.FINISH, 0), Event(2, schema.REQUEUE, 0)],
+         "after FINISH"),
+        ([Event(0, 99, 0)], "unknown code"),
+    ])
+    def test_validate_rejects(self, events, msg):
+        with pytest.raises(ValueError, match=msg):
+            schema.validate_events(events)
+
+    def test_validate_names_offending_index(self):
+        events = [Event(0, schema.SUBMIT, 0),
+                  Event(0, schema.START, 0, nodes=(0,)),
+                  Event(3, schema.VACATE, 0)]
+        with pytest.raises(ValueError, match=r"event 2 \[VACATE"):
+            schema.validate_events(events)
+
+
+class TestExports:
+    def test_csv_round_trip_lossless(self, traced):
+        _, _, res = traced
+        assert export.read_csv(export.to_csv(res.trace)) == res.trace
+
+    def test_csv_rejects_foreign_header(self):
+        with pytest.raises(ValueError, match="not a trace CSV"):
+            export.read_csv("a,b,c\n1,2,3\n")
+
+    def test_perfetto_structure(self, traced):
+        cfg, js, res = traced
+        doc = export.to_perfetto(res.trace, n_nodes=cfg.cluster.n_nodes,
+                                 is_te=js.is_te)
+        json.dumps(doc)                       # serializable
+        tr = doc["traceEvents"]
+        names = {e["name"] for e in tr if e["ph"] == "M"}
+        assert {"process_name", "thread_name"} <= names
+        node_meta = [e for e in tr if e["ph"] == "M"
+                     and e["name"] == "thread_name"]
+        assert len(node_meta) == cfg.cluster.n_nodes
+        # one complete occupancy slice per (placement, node) pair
+        slices = [e for e in tr if e["ph"] == "X"]
+        placements = sum(len(e.nodes) for e in res.trace
+                         if e.code in schema.PLACEMENT_CODES)
+        assert len(slices) == placements
+        assert all(s["dur"] >= 0 for s in slices)
+        # signal instants and the three counter tracks
+        assert any(e["ph"] == "i" for e in tr)
+        counters = {e["name"] for e in tr if e["ph"] == "C"}
+        assert counters == {"queue depth", "in grace", "busy nodes"}
+
+    def test_write_trace_rejects_unknown_format(self, tmp_path, traced):
+        with pytest.raises(ValueError, match="unknown trace format"):
+            export.write_trace(str(tmp_path / "x"), traced[2].trace,
+                               fmt="pdf")
+
+    def test_write_trace_formats(self, tmp_path, traced):
+        cfg, js, res = traced
+        p = tmp_path / "t.perfetto.json"
+        export.write_trace(str(p), res.trace, fmt="perfetto",
+                           n_nodes=cfg.cluster.n_nodes, is_te=js.is_te)
+        assert json.loads(p.read_text())["traceEvents"]
+        c = tmp_path / "t.csv"
+        export.write_trace(str(c), res.trace, fmt="csv")
+        assert export.read_csv(c.read_text()) == res.trace
+
+
+class TestTimeSeries:
+    def test_replay_sanity(self, traced):
+        cfg, js, res = traced
+        ts = timeseries.compute_timeseries(
+            res.trace, n_nodes=cfg.cluster.n_nodes, is_te=js.is_te)
+        assert (np.diff(ts.t) > 0).all()
+        assert (ts.busy_nodes >= 0).all()
+        assert (ts.busy_nodes <= cfg.cluster.n_nodes).all()
+        assert 0.0 < ts.mean_utilization() <= 1.0
+        # every job finished: queues drain, occupancy empties
+        assert ts.queue_depth_te[-1] == ts.queue_depth_be[-1] == 0
+        assert ts.busy_nodes[-1] == 0 and ts.in_grace[-1] == 0
+        n_signals = sum(e.code == schema.PREEMPT_SIGNAL
+                        for e in res.trace)
+        assert int(ts.cum_preemptions[-1]) == n_signals > 0
+        assert ts.preempt_rate == pytest.approx(
+            n_signals / ts.makespan)
+        assert ts.makespan == res.makespan
+
+    def test_format_timeseries(self, traced):
+        cfg, js, res = traced
+        ts = timeseries.compute_timeseries(
+            res.trace, n_nodes=cfg.cluster.n_nodes, is_te=js.is_te)
+        txt = timeseries.format_timeseries(ts, max_rows=8)
+        assert len(txt.splitlines()) == 10      # header + rule + 8
+
+    def test_decomposition_matches_slowdown(self, traced):
+        """The decomposition reproduces the paper's Eq. 5 slowdown:
+        1 + (initial_wait + grace_stall + requeue_wait) / service."""
+        _, js, res = traced
+        dec = timeseries.slowdown_decomposition(res.trace)
+        sd = res.slowdown
+        for j, d in dec.items():
+            waits = d.initial_wait + d.grace_stall + d.requeue_wait
+            assert 1.0 + waits / d.service == pytest.approx(sd[j])
+
+
+class TestRingHelpers:
+    def test_node_word_packing(self):
+        w = ring.node_mask_weights(70)
+        assert w.shape == (ring.n_node_words(70), 70)
+        # bit k of word k//32 set exactly for node k
+        assert int(w[2, 69]) == 1 << (69 % 32)
+        assert int(w[0, 69]) == 0
+
+    def test_default_capacity_scales_with_P(self):
+        assert ring.default_capacity(100, max_preemptions=3) > \
+            ring.default_capacity(100, max_preemptions=1)
+
+
+class TestParityDiagnostics:
+    """Satellite: parity failures speak the event schema, not bare
+    tuples."""
+
+    def test_trace_parity_renders_divergence(self):
+        a = [Event(0, schema.SUBMIT, 0), Event(1, schema.START, 0,
+                                               nodes=(2,))]
+        b = [Event(0, schema.SUBMIT, 0), Event(1, schema.START, 1,
+                                               nodes=(2,))]
+        with pytest.raises(AssertionError) as ei:
+            metrics.assert_trace_parity(a, b)
+        msg = str(ei.value)
+        assert "diverge at event 1" in msg
+        assert "START t=1 job=0 nodes=2" in msg
+        assert "START t=1 job=1 nodes=2" in msg
+
+    def test_trace_parity_length_mismatch(self):
+        a = [Event(0, schema.SUBMIT, 0)]
+        with pytest.raises(AssertionError, match="lengths differ"):
+            metrics.assert_trace_parity(a, a + a)
+
+    def test_result_parity_renders_preemption_events(self):
+        def mk(events):
+            n = 2
+            return SimResult(
+                finish=np.array([5, 9]), exec_total=np.array([4, 4]),
+                submit=np.zeros(n, np.int64),
+                is_te=np.array([True, False]),
+                preempt_count=np.array([0, 1]), events=events,
+                makespan=9)
+        a = mk([PreemptionEvent(job=1, te_job=0, signal_time=2,
+                                vacate_time=3, resume_time=4)])
+        b = mk([PreemptionEvent(job=1, te_job=0, signal_time=2,
+                                vacate_time=3, resume_time=5)])
+        with pytest.raises(AssertionError) as ei:
+            metrics.assert_result_parity(a, b)
+        msg = str(ei.value)
+        assert "diverge at event 0" in msg
+        assert "PREEMPT_SIGNAL t=2 job=1 te=0" in msg
+        assert "RESUME t=4" in msg and "RESUME t=5" in msg

@@ -292,3 +292,60 @@ class TestInvariantsHypothesis:
             run_and_check(small_cfg(policy, P=P), js, seed=0, pad_to=28)
 
         inner()
+
+
+class TestSlowdownDecomposition:
+    """The slowdown decomposition identity (DESIGN.md §8):
+
+        finish - submit == initial_wait + grace_stall + requeue_wait
+                           + service
+
+    must hold EXACTLY for every finished job, on traces from BOTH
+    engines, with gangs and backfill in the mix. ``service`` must
+    equal the job's execution time — remaining only counts down while
+    RUNNING, so any drift here means an engine ran (or stalled) a job
+    outside its recorded placement spans."""
+
+    # (scenario, policy, n_jobs, n_nodes, backfill): saturated
+    # clusters so preemption, grace stalls and requeue waits all
+    # contribute nonzero terms; the last config adds the random
+    # fallback path (identity is per-trace, not cross-engine).
+    CONFIGS = (
+        ("gang-heavy", "lrtp", 96, 16, False),
+        ("gang-heavy", "lrtp", 96, 16, True),
+        ("te-flood", "fitgpp", 96, 8, False),
+    )
+
+    @pytest.mark.parametrize("engine", ["reference", "jax"])
+    @pytest.mark.parametrize("scen,policy,n_jobs,n_nodes,backfill",
+                             CONFIGS)
+    def test_identity_every_job(self, scen, policy, n_jobs, n_nodes,
+                                backfill, engine):
+        import dataclasses
+
+        from repro import scenarios
+        from repro.core import simulator
+        from repro.obs import timeseries
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=n_nodes),
+                        policy=policy,
+                        workload=WorkloadSpec(n_jobs=n_jobs), seed=3,
+                        backfill=backfill)
+        js = scenarios.build(scen, cfg)
+        if engine == "reference":
+            res = simulator.simulate(cfg, js, trace=True)
+            events, finish = res.trace, res.finish
+        else:
+            jobs = sim_jax.jobs_from_jobset(js)
+            st = sim_jax.run_jit(cfg, jobs, cfg.seed, trace=True)
+            events, overflow = sim_jax.decode_trace(st)
+            assert overflow == 0
+            finish = np.asarray(st.finish)
+        dec = timeseries.slowdown_decomposition(events)
+        assert set(dec) == set(range(js.n))
+        n_preempted = 0
+        for j, d in dec.items():
+            assert d.finish == finish[j], (engine, j)
+            assert d.identity_holds(), (engine, j, d)
+            assert d.service == int(js.exec_total[j]), (engine, j, d)
+            n_preempted += d.grace_stall > 0 or d.requeue_wait > 0
+        assert n_preempted > 0, "config exercised no preemption terms"

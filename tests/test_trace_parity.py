@@ -1,0 +1,179 @@
+"""Cross-engine trace parity (DESIGN.md §8): the canonical event
+stream recorded by the reference driver's hooks must equal — event
+for event, ``as_tuple()`` exact — the stream decoded from the JAX
+engine's in-jit ring buffer, per (scenario x policy x time mode).
+
+The policy axis is GENERATED from the policy registry (the same
+``JAX_EXACT`` rule as the result-parity matrix: every dual-backend
+policy that is not rng-driven; the score policies' random fallback is
+asserted not to fire, so a silently-firing fallback breaks the test
+rather than hiding behind it). Registering a new deterministic
+dual-backend policy enrolls it here without touching this file.
+
+Also locked down: the ring itself — tick-vs-event bit-parity of the
+traced State (the drain jump must emit the bulk-retired FINISH rows
+it skips, in the tick-mode order), loud overflow accounting on an
+undersized ring with an intact prefix, and tracing-off compiling the
+ring OUT (zero-size buffer, not a zeroed one).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import scenarios
+from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
+from repro.core import metrics, policy_registry, sim_jax, simulator
+from repro.core.policy_registry import RNG_ALWAYS
+from repro.obs import ring, schema
+
+JAX_EXACT = [s.name for s in policy_registry.all_policies()
+             if s.dual_backend and s.rng != RNG_ALWAYS]
+
+# gang-heavy + BOTH trace adapters (native job counts, gang widths
+# from GPU counts / inst_num) on the paper-default 84-node cluster —
+# the same coverage rule as the gang result-parity matrix.
+TRACE_SCENARIOS = ("gang-heavy", "philly-sample", "pai-sample")
+
+
+def _cfg(policy="fitgpp", n_nodes=None, n_jobs=96, seed=0, **kw):
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=n_jobs), policy=policy,
+                    seed=seed, **kw)
+    if n_nodes is not None:
+        cfg = dataclasses.replace(cfg, cluster=ClusterSpec(n_nodes=n_nodes))
+    return cfg
+
+
+def _assert_cross_engine(cfg, js, mode):
+    """Reference traced run vs decoded JAX ring: exact event parity,
+    schema-valid, no overflow, and — for score policies — no random
+    fallback (the one documented exclusion from exact parity)."""
+    ref = simulator.simulate(cfg, js, mode=mode, trace=True)
+    st = sim_jax.run_jit(cfg, sim_jax.jobs_from_jobset(js), cfg.seed,
+                         time_mode=mode, trace=True)
+    if policy_registry.get_policy(cfg.policy).jax_kind == "score":
+        assert int(st.fallback_count) == 0, \
+            "random fallback fired; pick a quieter config"
+    events, overflow = sim_jax.decode_trace(st)
+    assert overflow == 0
+    schema.validate_events(events, n_jobs=js.n,
+                           n_nodes=cfg.cluster.n_nodes)
+    metrics.assert_trace_parity(ref.trace, events)
+    return events
+
+
+class TestCrossEngineTraceParity:
+    """The registry-generated (scenario x policy x mode) matrix."""
+
+    _jobsets = {}
+
+    @classmethod
+    def _jobset(cls, scenario):
+        if scenario not in cls._jobsets:
+            cls._jobsets[scenario] = scenarios.build(scenario, _cfg())
+        return cls._jobsets[scenario]
+
+    @pytest.mark.parametrize("mode", ["tick", "event"])
+    @pytest.mark.parametrize("policy", JAX_EXACT)
+    @pytest.mark.parametrize("scenario", TRACE_SCENARIOS)
+    def test_matrix(self, scenario, policy, mode):
+        _assert_cross_engine(_cfg(policy), self._jobset(scenario), mode)
+
+    def test_matrix_covers_new_policies(self):
+        assert {"fifo", "fitgpp", "lrtp", "srtp", "minsize"} <= \
+            set(JAX_EXACT)
+
+
+class TestPreemptionTraceCoverage:
+    """The matrix above runs on an uncontended cluster (few signals);
+    these configs saturate 16 nodes so the full preemption vocabulary
+    — SIGNAL / GRACE_EXPIRE / VACATE / REQUEUE / RESUME, and BACKFILL
+    under backfill — is exercised through BOTH engines and still
+    matches exactly."""
+
+    @pytest.mark.parametrize("mode", ["tick", "event"])
+    def test_preemption_heavy(self, mode):
+        cfg = _cfg("lrtp", n_nodes=16, seed=3)
+        js = scenarios.build("gang-heavy", cfg)
+        events = _assert_cross_engine(cfg, js, mode)
+        codes = {e.code for e in events}
+        assert {schema.PREEMPT_SIGNAL, schema.GRACE_EXPIRE,
+                schema.VACATE, schema.REQUEUE, schema.RESUME} <= codes
+
+    @pytest.mark.parametrize("mode", ["tick", "event"])
+    def test_backfill_markers(self, mode):
+        cfg = _cfg("lrtp", n_nodes=16, seed=3, backfill=True)
+        js = scenarios.build("gang-heavy", cfg)
+        events = _assert_cross_engine(cfg, js, mode)
+        skips = [e.aux for e in events if e.code == schema.BACKFILL]
+        assert skips and all(s > 0 for s in skips)
+
+
+class TestRingBuffer:
+    """Mechanics of the in-jit ring itself."""
+
+    def _traced_states(self, **kw):
+        cfg = _cfg("lrtp", n_nodes=16, seed=3, **kw)
+        js = scenarios.build("gang-heavy", cfg)
+        jobs = sim_jax.jobs_from_jobset(js)
+        return cfg, js, jobs
+
+    def test_tick_vs_event_ring_bitwise(self):
+        """The drain jump's bulk FINISH emission reproduces the
+        tick-mode stream ORDER, not just the set: the whole traced
+        State — ring buffer rows included — is bit-identical across
+        time modes."""
+        cfg, _, jobs = self._traced_states()
+        a = sim_jax.run_jit(cfg, jobs, 3, time_mode="tick", trace=True)
+        b = sim_jax.run_jit(cfg, jobs, 3, time_mode="event", trace=True)
+        assert not sim_jax.state_diff_fields(a, b)
+
+    def test_overflow_counted_with_intact_prefix(self):
+        """An undersized ring drops the tail LOUDLY — overflow is the
+        exact number of rows lost — and the surviving prefix is the
+        first ``capacity`` events of the untruncated stream, bit
+        exact (the dump row never leaks into the decode)."""
+        cfg, js, jobs = self._traced_states()
+        full = sim_jax.run_jit(cfg, jobs, 3, trace=True)
+        events, overflow = sim_jax.decode_trace(full)
+        assert overflow == 0
+        cap = 32
+        small = sim_jax.run_jit(cfg, jobs, 3, trace=True,
+                                trace_capacity=cap)
+        got, lost = sim_jax.decode_trace(small)
+        assert lost == len(events) - cap > 0
+        assert int(sim_jax.trace_overflow(small)) == lost
+        metrics.assert_trace_parity(events[:cap], got)
+
+    def test_untraced_ring_compiled_out(self):
+        """trace=False is structurally zero-cost: the State carries a
+        ZERO-SIZE buffer (no ring, no appends in the compiled step),
+        and the summary reports overflow 0."""
+        cfg, _, jobs = self._traced_states()
+        st = sim_jax.run_jit(cfg, jobs, 3)
+        assert st.ev_buf.size == 0
+        assert int(sim_jax.trace_overflow(st)) == 0
+        events, overflow = sim_jax.decode_trace(st)
+        assert events == [] and overflow == 0
+        assert int(sim_jax.result_summary(jobs, st)["trace_overflow"]) == 0
+
+    def test_default_capacity_fits_saturated_run(self):
+        """The auto-sized ring (``obs.ring.default_capacity``) holds a
+        preemption-heavy run without overflow."""
+        cfg, js, jobs = self._traced_states()
+        cap = sim_jax.resolve_trace_capacity(cfg, jobs)
+        assert cap >= ring.default_capacity(js.n)
+        st = sim_jax.run_jit(cfg, jobs, 3, trace=True)
+        assert int(sim_jax.trace_overflow(st)) == 0
+
+    def test_traced_untraced_same_result(self):
+        """Tracing must observe, not perturb: the non-ring State
+        fields are bit-identical with tracing on and off."""
+        cfg, _, jobs = self._traced_states()
+        a = sim_jax.run_jit(cfg, jobs, 3)
+        b = sim_jax.run_jit(cfg, jobs, 3, trace=True)
+        diff = sim_jax.state_diff_fields(
+            a._replace(ev_buf=b.ev_buf, ev_n=b.ev_n), b)
+        assert not diff
+        np.testing.assert_array_equal(np.asarray(a.finish),
+                                      np.asarray(b.finish))
