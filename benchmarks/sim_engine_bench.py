@@ -32,15 +32,26 @@ zero-cost; enabled, expect ~1-1.7x on CPU (per-op dispatch floor
 of the per-event emission, DESIGN.md §8 — the untraced
 event-compressed step is itself only microseconds long).
 ``--smoke`` round-trips a tiny trace through both export
-formats (``--trace-out`` saves the Perfetto JSON artifact);
+formats (``--trace-out`` saves the Perfetto JSON artifact) and
+re-verifies the streamed-vs-monolithic bit-parity window;
 ``--profile DIR`` captures a ``jax.profiler.trace`` of one jitted
 engine run.
+
+Streaming (DESIGN.md §10): the JSON artifact opens with a ``stream``
+suite — a >=10^5-job synthetic trace through the bounded-memory
+macro-round engine (``core/stream``) at fixed slot-pool capacity,
+run before everything else so its per-row ``max_rss_mb``
+(``resource.getrusage`` high-water mark; every suite records it)
+demonstrates memory scaling with capacity, not trace length, and an
+in-run ``parity`` key for the streamed-vs-monolithic bit-parity
+window that ``--check-parity`` requires.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import resource
 import time
 from typing import Dict, List
 
@@ -51,6 +62,13 @@ from repro.configs.cluster import ClusterSpec, SimConfig, WorkloadSpec
 from repro.core import metrics, policy_registry, sim_jax, simulator, workload
 from repro.core.policy_registry import RNG_ALWAYS
 from repro.core.workload import sparse_long_horizon
+
+
+def _rss_mb() -> float:
+    """Process peak RSS in MB (``ru_maxrss`` is KB on Linux). The
+    counter is a high-water mark — per-row values are peaks SO FAR, so
+    rows that must attribute memory (the stream suite) run first."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
 def bench_tick_vs_event(n_jobs: int = 512, policy: str = "fitgpp",
@@ -80,8 +98,59 @@ def bench_tick_vs_event(n_jobs: int = 512, policy: str = "fitgpp",
                   "jobs_per_sec": metrics.sim_throughput(res_event,
                                                          s_event)},
         "speedup": s_tick / max(s_event, 1e-12),
+        "max_rss_mb": _rss_mb(),
         "parity": True,      # assert_result_parity would have raised
     }
+
+
+def bench_stream(n_jobs: int = 100_000, capacity: int = 2048,
+                 n_nodes: int = 8, policy: str = "fitgpp", seed: int = 0,
+                 load: float = 0.5, parity_jobs: int = 400) -> Dict:
+    """Streaming macro-round engine rows (``core/stream``, DESIGN.md
+    §10): a >=10^5-job synthetic trace replayed through the fixed slot
+    pool, with ``max_rss_mb`` per row. The bounded-memory claim is the
+    near-flat peak RSS between the quarter-length and full-length rows
+    at the SAME capacity — memory scales with the pool, not the trace
+    — which is why this suite runs before everything else inflates the
+    process high-water mark. ``parity`` re-verifies the bit-parity
+    window in-run: streamed per-job results / makespan / rng state on
+    a prefix equal the monolithic engine exactly
+    (``stream.verify_prefix_parity``). Arrivals use sub-critical
+    ``load`` so the open-loop backlog stays bounded; the first row
+    absorbs the round-kernel compile."""
+    from repro.core import stream
+    cfg = api.make_config(policy, n_jobs=n_jobs, n_nodes=n_nodes,
+                          seed=seed)
+    cfg = dataclasses.replace(
+        cfg, workload=dataclasses.replace(cfg.workload, load=load))
+    # window sized for 5 recycling rounds with the score policy's
+    # random fallback never firing (pool-size dependent, so fallback
+    # would leave the bit-parity domain — verify_prefix_parity raises)
+    diff = stream.verify_prefix_parity(cfg, n_jobs=parity_jobs,
+                                       capacity=96, chunk=64)
+    if diff:
+        raise AssertionError(
+            f"stream-vs-monolithic parity violated: {diff}")
+    out: Dict = {
+        "workload": {"kind": "stream_chunks", "n_nodes": n_nodes,
+                     "policy": policy, "seed": seed, "load": load},
+        "capacity": capacity, "parity": True,
+        "parity_window_jobs": parity_jobs,
+    }
+    for label, nj in (("quarter", n_jobs // 4), ("full", n_jobs)):
+        src = stream.JobSource(
+            workload.stream_chunks(cfg, nj, chunk=4096))
+        t0 = time.perf_counter()
+        res = stream.StreamEngine(cfg, src, capacity=capacity).run()
+        s = time.perf_counter() - t0
+        out[label] = {"n_jobs": nj, "seconds": s,
+                      "jobs_per_sec": nj / max(s, 1e-12),
+                      "rounds": res.rounds, "max_live": res.max_live,
+                      "capacity": res.capacity,
+                      "makespan_ticks": res.makespan,
+                      "fallback_count": res.fallback_count,
+                      "max_rss_mb": _rss_mb()}
+    return out
 
 
 def _time_jax(cfg: SimConfig, jobs, seed: int, time_mode: str,
@@ -180,6 +249,7 @@ def bench_scenario_suite(n_jobs: int = 256, n_nodes: int = 8,
         out[name].update(bench_jax_tick_vs_event(cfg, js, seed))
         out[name]["speedup_vs_ref"] = s / max(
             out[name]["jax_event"]["seconds"], 1e-12)
+        out[name]["max_rss_mb"] = _rss_mb()
     return out
 
 
@@ -243,6 +313,7 @@ def bench_score_backend(n_jobs: int = 192, n_nodes: int = 84,
     if not parity:
         raise AssertionError("score-backend parity violated: jnp vs pallas")
     out["parity"] = parity
+    out["max_rss_mb"] = _rss_mb()
     return out
 
 
@@ -269,6 +340,9 @@ def check_parity_rows(out: dict) -> List[str]:
     bad = _falsy_parity(out)
     if "parity" not in out:
         bad.append("missing: parity (reference tick-vs-event)")
+    if "parity" not in out.get("stream", {}):
+        bad.append("missing: stream.parity (streamed-vs-monolithic "
+                   "bit-parity window)")
     suite = out.get("scenario_suite")
     if not suite:
         bad.append("missing: scenario_suite")
@@ -304,7 +378,12 @@ def check_speed_rows(out: dict) -> List[str]:
 
 
 def emit_json(path: str = "BENCH_sim_engine.json") -> dict:
+    # the stream suite runs FIRST: its max_rss_mb rows carry the
+    # bounded-memory claim and ru_maxrss is a process-wide high-water
+    # mark, so nothing may inflate the peak before them
+    stream_rows = bench_stream()
     out = bench_tick_vs_event()
+    out["stream"] = stream_rows
     out["scenario_suite"] = bench_scenario_suite()
     out["njobs_scaling"] = bench_njobs_scaling()
     out["score_backend"] = bench_score_backend()
@@ -366,9 +445,22 @@ def smoke(n_jobs: int = 64, seed: int = 0,
     if trace_out:
         export.write_trace(trace_out, events, fmt="perfetto",
                            n_nodes=cfg.cluster.n_nodes, is_te=js.is_te)
+    # streamed-engine parity window (DESIGN.md §10): the same jobs
+    # through the slot-recycling macro-round engine — with real
+    # recycling (capacity < n_jobs) — must equal the monolithic
+    # engine bit-exactly; sub-critical load keeps the open-loop
+    # backlog inside the pool
+    from repro.core import stream
+    scfg = api.make_config("fitgpp", n_jobs=160, n_nodes=8, seed=seed)
+    scfg = dataclasses.replace(
+        scfg, workload=dataclasses.replace(scfg.workload, load=0.5))
+    sdiff = stream.verify_prefix_parity(scfg, n_jobs=160, capacity=64,
+                                        chunk=48)
+    if sdiff:
+        raise SystemExit(f"smoke: stream-vs-monolithic diff in {sdiff}")
     print(f"smoke ok: {n_jobs} jobs, fused-backend parity verified, "
           f"{len(events)} events trace-parity ok, "
-          f"util {ts.mean_utilization():.2f}"
+          f"util {ts.mean_utilization():.2f}, streamed parity ok"
           + (f", trace -> {trace_out}" if trace_out else ""))
 
 
@@ -449,6 +541,12 @@ def run_all() -> List[tuple]:
         rows.append((f"sim_jax_score_{backend}",
                      sb[backend]["seconds"] * 1e6,
                      f"{sb[backend]['jobs_per_sec']:.0f} jobs/s, parity ok"))
+
+    sr = bench_stream(n_jobs=8192, capacity=1024)
+    rows.append(("sim_stream_8k", sr["full"]["seconds"] * 1e6,
+                 f"{sr['full']['jobs_per_sec']:.0f} jobs/s, "
+                 f"{sr['full']['rounds']} rounds, capacity 1024, "
+                 f"rss {sr['full']['max_rss_mb']:.0f}MB, parity ok"))
 
     t0 = time.perf_counter()
     api.scenario_sweep(

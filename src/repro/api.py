@@ -46,8 +46,9 @@ DEFAULT_SCENARIO = "paper-synthetic"
 __all__ = [
     "DEFAULT_SCENARIO", "ENGINES", "ExperimentResult", "all_policies",
     "compare_policies", "get_policy", "make", "make_config",
-    "policy_names", "run_experiment", "run_sweep", "scenario_names",
-    "scenario_sweep", "score_backend_names", "sensitivity_grid",
+    "policy_names", "run_experiment", "run_stream", "run_sweep",
+    "scenario_names", "scenario_sweep", "score_backend_names",
+    "sensitivity_grid",
 ]
 
 scenario_names = scenarios.scenario_names
@@ -203,6 +204,58 @@ def run_experiment(scenario: str = DEFAULT_SCENARIO,
         table=table, intervals=intervals, preempted_frac=pf,
         makespan=makespan, raw=raw, events=events,
         trace_overflow=overflow, fallback_count=fallback)
+
+
+def run_stream(scenario: str = DEFAULT_SCENARIO,
+               policy: Optional[str] = None, *,
+               cfg: Optional[SimConfig] = None,
+               source=None,
+               capacity: Optional[int] = None,
+               n_jobs: Optional[int] = None,
+               n_nodes: Optional[int] = None,
+               seed: Optional[int] = None,
+               mode: Optional[str] = None,
+               trace: bool = False,
+               trace_capacity: Optional[int] = None) -> ExperimentResult:
+    """Replay a scenario through the streaming macro-round engine
+    (``core/stream``, DESIGN.md §10) — bounded memory, arbitrary trace
+    length, results bit-identical to ``engine="jax"`` on the same
+    workload.
+
+    The workload comes from the scenario's registered streaming
+    ``source`` (trace readers / chunked generators; scenarios without
+    one fall back to a chunked view of the built JobSet), or from an
+    explicit ``source`` (a ``core.stream.JobSource``). ``capacity``
+    bounds in-flight jobs — memory scales with it, not with the trace
+    (default ``stream.default_capacity(cfg)``). ``.raw`` holds the
+    :class:`repro.core.stream.StreamResult` (per-job arrays, round
+    count, peak live jobs); ``.events`` the gid-remapped canonical
+    stream when traced.
+    """
+    from repro.core import stream
+    if mode not in (None, "event", "tick"):
+        raise ValueError(f"unknown mode {mode!r}; one of ('event', 'tick')")
+    cfg = make_config(policy, base=cfg, n_jobs=n_jobs, n_nodes=n_nodes,
+                      seed=seed)
+    if mode is None:
+        mode = cfg.time_mode
+    if source is None:
+        source = scenarios.get_source(scenario, cfg)
+    eng = stream.StreamEngine(cfg, source, capacity=capacity,
+                              time_mode=mode, trace=trace,
+                              trace_capacity=trace_capacity)
+    res = eng.run()
+    summary = res.summary()
+    table = {k: {p: float(v) for p, v in summary[k].items()}
+             for k in ("TE", "BE")}
+    intervals = {p: float(v) for p, v in summary["intervals"].items()}
+    return ExperimentResult(
+        scenario=scenario, policy=cfg.policy, engine="stream", cfg=cfg,
+        table=table, intervals=intervals,
+        preempted_frac=float(summary["preempted_frac"]),
+        makespan=res.makespan, raw=res, events=res.events,
+        trace_overflow=res.trace_overflow,
+        fallback_count=res.fallback_count)
 
 
 def compare_policies(policies, scenario: str = DEFAULT_SCENARIO,

@@ -117,6 +117,17 @@ class Jobs(NamedTuple):
     gp: jax.Array            # (N,) i32
     width: jax.Array         # (N,) i32 gang width (>= 1)
     valid: jax.Array         # (N,) bool
+    # (N,) f32 GLOBAL arrival-order key, or None (the default). None
+    # means row index == arrival order (every monolithic jobset: rows
+    # are submit-sorted) and the engine keys queues by ``arange(N)``.
+    # The streaming engine (core/stream/) recycles slots, so slot
+    # index no longer encodes arrival order; it stamps each packed
+    # job's global sequence number here and every order-sensitive
+    # site — arrival queue keys, vacate requeue ranks, victim-pick
+    # tie-breaks — keys on ``akey`` instead, which is what makes a
+    # slot-recycled run bit-identical to the monolithic one
+    # (DESIGN.md §10). f32 is exact for sequence numbers < 2^24.
+    akey: jax.Array = None
 
 
 class State(NamedTuple):
@@ -246,12 +257,22 @@ class _Cache(NamedTuple):
     n_queued: jax.Array       # () i32
 
 
-def _cache_from_state(jobs: Jobs, st: State) -> _Cache:
+def _cache_from_state(jobs: Jobs, st: State,
+                      ext_arrival=None) -> _Cache:
+    """``ext_arrival`` (absolute tick or None) is the submit time of
+    the earliest job NOT in this pool — the streaming engine's round
+    boundary. Folding it into ``next_arrival`` at every recompute site
+    is what keeps the event jump (the empty-queue drain branch
+    especially) from overshooting the boundary: the jump lands ON the
+    external arrival's tick exactly as the monolithic engine would."""
     in_grace = st.state == GRACE
     queued = st.state == QUEUED
+    nxt = jnp.min(jnp.where(st.state == NOT_ARRIVED,
+                            jobs.submit, _BIG)).astype(jnp.int32)
+    if ext_arrival is not None:
+        nxt = jnp.minimum(nxt, jnp.asarray(ext_arrival, jnp.int32))
     return _Cache(
-        next_arrival=jnp.min(jnp.where(st.state == NOT_ARRIVED,
-                                       jobs.submit, _BIG)).astype(jnp.int32),
+        next_arrival=nxt,
         next_vacate=jnp.where(
             in_grace.any(),
             st.t + jnp.min(jnp.where(in_grace, st.grace_left, _BIG)),
@@ -307,6 +328,30 @@ def _best_victim_node(free: jax.Array, assign: jax.Array,
 
 def _onehot(N: int, j: jax.Array) -> jax.Array:
     return jnp.arange(N) == j
+
+
+def _argmin_key(mask: jax.Array, val, akey) -> jax.Array:
+    """Masked argmin with GLOBAL-ORDER tie-breaking: among tied
+    minima, the smallest ``akey`` (arrival order) wins. With ``akey``
+    None — every monolithic jobset, where row index IS arrival order —
+    this is plain ``jnp.argmin`` (first minimum), byte-identical to
+    the engine's historical behavior. The streaming engine's recycled
+    pools set ``akey``, where first-slot ties would otherwise depend
+    on which slot a job happened to land in."""
+    if akey is None:
+        return jnp.argmin(jnp.where(mask, val, _INF)).astype(jnp.int32)
+    best = jnp.min(jnp.where(mask, val, _INF))
+    tied = mask & (val == best)
+    return jnp.argmin(jnp.where(tied, akey, _INF)).astype(jnp.int32)
+
+
+def _argmax_key(mask: jax.Array, val, akey) -> jax.Array:
+    """Masked argmax twin of :func:`_argmin_key` (ties -> min akey)."""
+    if akey is None:
+        return jnp.argmax(jnp.where(mask, val, -_INF)).astype(jnp.int32)
+    best = jnp.max(jnp.where(mask, val, -_INF))
+    tied = mask & (val == best)
+    return jnp.argmin(jnp.where(tied, akey, _INF)).astype(jnp.int32)
 
 
 def _gang_release(assign: jax.Array, demand: jax.Array,
@@ -506,7 +551,7 @@ def _score_select(st: State, jobs: Jobs, te: jax.Array, pol, node_cap, s,
                                           jobs.demand[te])
         elig = best_slack >= -_EPS
         mask = cand & elig & under
-        main = jnp.argmin(jnp.where(mask, score, _INF)).astype(jnp.int32)
+        main = _argmin_key(mask, score, jobs.akey)
         mask_any = mask.any()
 
     rng, sub = jax.random.split(st.rng)
@@ -567,7 +612,7 @@ def _until_fits_select(st: State, jobs: Jobs, te: jax.Array, rank_val,
         # would swallow rank_val and break the ordering)
         m1 = cand & under
         pick_from = jnp.where(m1.any(), m1, cand)
-        v = jnp.argmax(jnp.where(pick_from, rank_val, -_INF)).astype(jnp.int32)
+        v = _argmax_key(pick_from, rank_val, jobs.akey)
         node = best_node[v]
         st = st._replace(
             fallback_count=st.fallback_count + (~m1.any()).astype(jnp.int32))
@@ -620,7 +665,7 @@ def _gang_select(st: State, jobs: Jobs, te: jax.Array, rank_val, P,
                                 axis=2), axis=1)
         pool = cand0 & jnp.where((cand0 & under0).any(), under0, True)
         single = pool & (nfit1 >= w)
-        v1 = jnp.argmin(jnp.where(single, score, _INF)).astype(jnp.int32)
+        v1 = _argmin_key(single, score, jobs.akey)
         have_single = single.any()
     else:
         v1 = jnp.int32(0)
@@ -638,7 +683,7 @@ def _gang_select(st: State, jobs: Jobs, te: jax.Array, rank_val, P,
         c = cand0 & ~taken
         m1 = c & under0
         pick = jnp.where(m1.any(), m1, c)
-        v = jnp.argmax(jnp.where(pick, rank_val, -_INF)).astype(jnp.int32)
+        v = _argmax_key(pick, rank_val, jobs.akey)
         pending = pending + jobs.demand[v][None, :] \
             * st.assign[v][:, None].astype(jnp.float32)
         return (taken | _onehot(N, v), pending, n_fit(pending) >= w,
@@ -821,7 +866,8 @@ def _make_would_act_cached(jobs: Jobs, preemptive: bool,
 
 def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
                s=None, P=None, time_mode: str = None,
-               max_ticks: int = 1 << 22, trace: bool = False):
+               max_ticks: int = 1 << 22, trace: bool = False,
+               ext_arrival=None):
     """Build the ``(State, _Cache) -> (State, _Cache)`` while-loop
     body: one scheduling tick, plus — in ``"event"`` time mode — the
     event jump that compresses the following run of provably no-op
@@ -842,7 +888,13 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
     stall jump and must match the driving loop's bound. ``trace``
     (Python-static) builds the in-jit event emission — off, none of it
     exists in the compiled program (zero cost); on, the State must
-    carry a real ring buffer (``init_state(trace_capacity=...)``)."""
+    carry a real ring buffer (``init_state(trace_capacity=...)``).
+
+    ``ext_arrival`` (None, or an absolute tick, possibly traced) is
+    the streaming engine's round boundary: the submit time of the
+    earliest job NOT materialized in this pool. It is folded into
+    ``cache.next_arrival`` wherever that scalar is recomputed, so no
+    event jump can skip past it (see :func:`_cache_from_state`)."""
     node_cap = jnp.asarray(cfg.cluster.node.as_tuple(), jnp.float32)
     N = jobs.submit.shape[0]
     time_mode = cfg.time_mode if time_mode is None else time_mode
@@ -1023,11 +1075,14 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
         # queue so the caller's gate re-evaluation sees tick semantics
         return st, queue_pass(st, head_mask(st))
 
-    arrival_keys = jnp.arange(N, dtype=jnp.float32)
+    arrival_keys = (jnp.arange(N, dtype=jnp.float32)
+                    if jobs.akey is None else
+                    jobs.akey.astype(jnp.float32))
 
     def arrivals(st: State, cache: _Cache):
-        """Queue every submitted job (key = submit-order index; jobs
-        pre-sorted) — gated on the cached next-arrival tick, so ticks
+        """Queue every submitted job (key = global arrival order:
+        slot index for monolithic jobsets, ``Jobs.akey`` for recycled
+        pools) — gated on the cached next-arrival tick, so ticks
         between arrivals skip the whole phase."""
         def fire(args):
             st, cache = args
@@ -1038,10 +1093,14 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
             st = st._replace(
                 state=state,
                 queue_key=jnp.where(arrive, arrival_keys, st.queue_key))
+            nxt = jnp.min(jnp.where(
+                state == NOT_ARRIVED, jobs.submit,
+                _BIG)).astype(jnp.int32)
+            if ext_arrival is not None:
+                nxt = jnp.minimum(nxt,
+                                  jnp.asarray(ext_arrival, jnp.int32))
             cache = cache._replace(
-                next_arrival=jnp.min(jnp.where(
-                    state == NOT_ARRIVED, jobs.submit,
-                    _BIG)).astype(jnp.int32),
+                next_arrival=nxt,
                 n_q_te=cache.n_q_te + jnp.sum(
                     arrive & jobs.is_te).astype(jnp.int32),
                 n_queued=cache.n_queued
@@ -1081,7 +1140,17 @@ def _make_step(cfg: SimConfig, jobs: Jobs, n_nodes: int,
 
                 st, _ = jax.lax.while_loop(lambda c: c[1].any(), vbody,
                                            (st, vac))
-            rank = jnp.cumsum(vac) - 1
+            if jobs.akey is None:
+                # rank among the vacating set in slot order (== global
+                # arrival order for monolithic jobsets)
+                rank = jnp.cumsum(vac) - 1
+            else:
+                # recycled pool: slot order is arbitrary — rank the
+                # vacating set by global arrival order so the requeue
+                # keys (top-of-lane, FIFO among same-tick vacates)
+                # match the monolithic engine bit-for-bit
+                ok = jnp.where(vac, jobs.akey, _INF)
+                rank = jnp.sum(ok[None, :] < ok[:, None], axis=1)
             n_vac = jnp.sum(vac)
             te_dec = jnp.zeros((N,), jnp.int32).at[
                 jnp.where(vac, st.victim_of, N)].add(1, mode="drop")
@@ -1354,20 +1423,31 @@ def run(cfg: SimConfig, jobs: Jobs, seed=0,
 
 
 def _run_loop(cfg: SimConfig, jobs: Jobs, st: State, max_ticks: int,
-              s, P, time_mode: str, trace: bool = False) -> State:
+              s, P, time_mode: str, trace: bool = False,
+              round_end=None) -> State:
     """The traceable core of :func:`run`: drive ``_make_step`` from an
     existing initial State (so :func:`run_jit` can build it eagerly
-    and donate its buffers into the jitted loop)."""
+    and donate its buffers into the jitted loop).
+
+    ``round_end`` (None, or an absolute tick — may be traced) turns
+    the loop into ONE streaming macro-round: run until every pool job
+    is DONE or ``t`` reaches ``round_end`` (the earliest submit not in
+    this pool). The boundary tick itself is NOT executed — the next
+    round's first iteration processes it, with the new arrivals packed
+    in, exactly as the monolithic loop would have (DESIGN.md §10)."""
     step = _make_step(cfg, jobs, cfg.cluster.n_nodes, s=s, P=P,
                       time_mode=time_mode, max_ticks=max_ticks,
-                      trace=trace)
+                      trace=trace, ext_arrival=round_end)
     N = jobs.submit.shape[0]
 
     def cond(carry):
-        return (carry[0].n_done < N) & (carry[0].t < max_ticks)
+        c = (carry[0].n_done < N) & (carry[0].t < max_ticks)
+        if round_end is not None:
+            c = c & (carry[0].t < round_end)
+        return c
 
-    st, _ = jax.lax.while_loop(cond, step,
-                               (st, _cache_from_state(jobs, st)))
+    st, _ = jax.lax.while_loop(
+        cond, step, (st, _cache_from_state(jobs, st, round_end)))
     return st
 
 
@@ -1398,6 +1478,31 @@ def run_jit(cfg: SimConfig, jobs: Jobs, seed: int = 0,
         seed = jnp.asarray(seed, jnp.int32)
     cap = resolve_trace_capacity(cfg, jobs, trace_capacity) if trace else 0
     return _run_jit_full(cfg, jobs, seed, time_mode, trace, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "time_mode", "trace"))
+def _run_round_jit(cfg: SimConfig, jobs: Jobs, st: State, round_end,
+                   time_mode: str, trace: bool) -> State:
+    return _run_loop(cfg, jobs, st, 1 << 22, None, None, time_mode,
+                     trace=trace, round_end=round_end)
+
+
+def run_round(cfg: SimConfig, jobs: Jobs, st: State, round_end=None,
+              time_mode: str = None, trace: bool = False) -> State:
+    """Resume an in-flight State for one jitted macro-round.
+
+    The streaming engine's inner step (DESIGN.md §10): run the fused
+    tick/event loop until every pool job is DONE or ``st.t`` reaches
+    ``round_end`` — the submit tick of the earliest job that has not
+    been packed into the pool yet (None = no more external arrivals;
+    run to completion). ``round_end`` is traced, so every round of a
+    streamed replay reuses one compilation; ``jobs`` carries the
+    recycled slot pool and MUST have ``Jobs.akey`` stamped with global
+    arrival order for queue keys / tie-breaks to match the monolithic
+    engine (parity-window contract; use ``score_backend='jnp'`` — the
+    fused kernels tie-break by slot index)."""
+    re = jnp.asarray(_BIG if round_end is None else round_end, jnp.int32)
+    return _run_round_jit(cfg, jobs, st, re, time_mode, trace)
 
 
 def trace_overflow(st: State) -> jax.Array:

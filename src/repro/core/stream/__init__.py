@@ -1,0 +1,27 @@
+"""Streaming macro-round engine (DESIGN.md §10).
+
+Bounded-memory replay of 10^5-10^6-job traces: a fixed-capacity slot
+pool over ``sim_jax`` (``StreamEngine``), fed by chunked
+:class:`JobSource` iterators (synthetic ``workload.stream_chunks``,
+streaming trace readers, or any jobset via ``from_jobset``), with
+per-round event/result draining. Memory scales with ``capacity``
+(in-flight jobs), not trace length; results are bit-identical to the
+monolithic engine (``verify_prefix_parity``).
+
+    from repro.core import stream, workload
+    src = stream.JobSource(workload.stream_chunks(cfg, 100_000))
+    res = stream.StreamEngine(cfg, src, capacity=512).run()
+    res.summary()["BE"]["p95"], res.rounds, res.max_live
+"""
+from repro.core.stream.engine import (DEFAULT_SLOTS_PER_NODE,
+                                      StreamEngine, StreamResult,
+                                      default_capacity,
+                                      verify_prefix_parity)
+from repro.core.stream.source import (JobSource, ScanStats, from_jobset,
+                                      materialize, scan)
+
+__all__ = [
+    "DEFAULT_SLOTS_PER_NODE", "JobSource", "ScanStats", "StreamEngine",
+    "StreamResult", "default_capacity", "from_jobset", "materialize",
+    "scan", "verify_prefix_parity",
+]

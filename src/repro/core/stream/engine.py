@@ -1,0 +1,419 @@
+"""StreamEngine: bounded-memory replay of arbitrarily long traces.
+
+The macro-round idiom (DESIGN.md §10): a fixed-capacity slot pool of
+``sim_jax`` state — ``capacity`` rows, O(capacity x nodes) memory, one
+compilation — driven by an outer host loop that alternates
+
+  1. *pack*: pull the next arrivals from a :class:`JobSource` and
+     scatter them into recycled DONE slots (jitted ``_pack``),
+     stamping each job's global sequence number into ``Jobs.akey`` so
+     queue keys, requeue ranks and victim tie-breaks keep GLOBAL
+     arrival order despite arbitrary slot placement;
+  2. *run*: one jitted macro-round (``sim_jax.run_round``) — the
+     existing fused ``_Pass``/event-jump loop — until every pool job
+     is DONE or ``t`` reaches the round boundary (the earliest submit
+     NOT yet packed, folded into the engine's next-arrival cache so no
+     event jump can overshoot it);
+  3. *drain*: decode the per-round ring buffer (sized off CAPACITY,
+     ``obs.ring.round_capacity``), remap slot ids to global job ids,
+     and stream events/results out (callback sinks or accumulation).
+
+State (``t``, rng, ``top_key``, free vectors, ``fallback_count``, the
+live rows) carries across rounds untouched, which is what makes the
+streamed run BIT-IDENTICAL to the monolithic engine on the same
+workload — the parity-window contract, checked by
+:func:`verify_prefix_parity` (deterministic policies on the jnp score
+backend; ``fallback_count`` must stay 0).
+
+A slot is recyclable when its job is DONE and no in-grace victim
+still references it (``victim_of`` points at TE slots; vacates
+decrement ``te_pending`` through it, so a referenced slot must
+survive until the grace period resolves). When the pool is full and
+an unpacked arrival is overdue the engine raises loudly — a pool of
+``capacity`` slots provably cannot represent that backlog, and any
+silent fallback would break the parity contract.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.cluster import SimConfig
+from repro.core import sim_jax, workload
+from repro.core.stream.source import JobSource, materialize
+from repro.obs import ring as obs_ring
+from repro.obs import schema as obs_schema
+
+# Default pool size: K slots per (node x preemption-budget) unit —
+# enough for the queue depths the repo's open-loop loads produce.
+DEFAULT_SLOTS_PER_NODE = 32
+
+_MAX_TICKS = 1 << 22       # must match sim_jax's stall terminal
+
+# aux carries a TE job id (not a count) on these codes — remapped
+# slot->gid at drain time like the job column itself
+_AUX_JOB_CODES = (obs_schema.PREEMPT_SIGNAL, obs_schema.VACATE)
+
+_RESULT_COLS = ("submit", "exec_total", "is_te", "width", "finish",
+                "preempt_count", "last_signal", "last_vacate",
+                "last_resume")
+
+
+def default_capacity(cfg: SimConfig, P: Optional[int] = None) -> int:
+    P = cfg.max_preemptions if P is None else P
+    return max(64, DEFAULT_SLOTS_PER_NODE * cfg.cluster.n_nodes
+               * max(int(P), 1))
+
+
+def _empty_pool(capacity: int, n_nodes: int) -> sim_jax.Jobs:
+    """An all-sentinel pool: every slot invalid (born DONE), ready to
+    be recycled by the first pack."""
+    return sim_jax.Jobs(
+        submit=jnp.zeros((capacity,), jnp.int32),
+        exec_total=jnp.ones((capacity,), jnp.int32),
+        demand=jnp.zeros((capacity, 3), jnp.float32),
+        is_te=jnp.zeros((capacity,), bool),
+        gp=jnp.zeros((capacity,), jnp.int32),
+        width=jnp.ones((capacity,), jnp.int32),
+        valid=jnp.zeros((capacity,), bool),
+        akey=jnp.full((capacity,), jnp.inf, jnp.float32),
+    )
+
+
+@jax.jit
+def _pack(jobs: sim_jax.Jobs, st: sim_jax.State, slots: jax.Array,
+          chunk: sim_jax.Jobs, n_new: jax.Array):
+    """Scatter ``chunk`` (padded to a fixed width) into the DONE slots
+    ``slots`` (padding rows point at ``capacity`` and drop), resetting
+    every per-slot State field the previous tenant touched. All shapes
+    are fixed by ``capacity``, so every round of a replay reuses this
+    one compilation. The recycled slots were DONE, so un-DONE-ing
+    ``n_new`` of them is the only ``n_done`` adjustment needed."""
+    def put(arr, val):
+        return arr.at[slots].set(val, mode="drop")
+
+    jobs = jobs._replace(
+        submit=put(jobs.submit, chunk.submit),
+        exec_total=put(jobs.exec_total, chunk.exec_total),
+        demand=put(jobs.demand, chunk.demand),
+        is_te=put(jobs.is_te, chunk.is_te),
+        gp=put(jobs.gp, chunk.gp),
+        width=put(jobs.width, chunk.width),
+        valid=put(jobs.valid, True),
+        akey=put(jobs.akey, chunk.akey),
+    )
+    st = st._replace(
+        state=put(st.state, sim_jax.NOT_ARRIVED),
+        remaining=put(st.remaining, chunk.exec_total),
+        assign=put(st.assign, False),
+        preempt_count=put(st.preempt_count, 0),
+        grace_left=put(st.grace_left, 0),
+        queue_key=put(st.queue_key, jnp.inf),
+        finish=put(st.finish, -1),
+        te_pending=put(st.te_pending, 0),
+        victim_of=put(st.victim_of, -1),
+        last_signal=put(st.last_signal, -1),
+        last_vacate=put(st.last_vacate, -1),
+        last_resume=put(st.last_resume, -1),
+        awaiting_resume=put(st.awaiting_resume, False),
+        n_done=st.n_done - n_new.astype(jnp.int32),
+    )
+    return jobs, st
+
+
+def _np_masked_percentiles(vals, mask, ps) -> Dict[str, float]:
+    """numpy twin of ``sim_jax.masked_percentiles`` (same NaN-safe
+    empty-class semantics, same linear interpolation)."""
+    if not mask.any():
+        return {f"p{p}": float("nan") for p in ps}
+    v = np.where(mask, vals, np.nan).astype(np.float64)
+    return {f"p{p}": float(np.nanpercentile(v, p)) for p in ps}
+
+
+@dataclass
+class StreamResult:
+    """Per-job results of a streamed replay, gid-ordered (gid = global
+    arrival sequence number). ``summary()`` mirrors
+    ``sim_jax.result_summary`` so downstream table formatting is
+    engine-agnostic. ``events`` is the remapped canonical stream when
+    tracing without an ``event_sink``, else None."""
+    n_jobs: int
+    capacity: int
+    rounds: int
+    makespan: int
+    fallback_count: int
+    trace_overflow: int
+    max_live: int
+    final_rng: np.ndarray = field(repr=False)
+    submit: np.ndarray = field(repr=False)
+    exec_total: np.ndarray = field(repr=False)
+    is_te: np.ndarray = field(repr=False)
+    width: np.ndarray = field(repr=False)
+    finish: np.ndarray = field(repr=False)
+    preempt_count: np.ndarray = field(repr=False)
+    last_signal: np.ndarray = field(repr=False)
+    last_vacate: np.ndarray = field(repr=False)
+    last_resume: np.ndarray = field(repr=False)
+    events: Optional[List] = field(repr=False, default=None)
+
+    def slowdown(self) -> np.ndarray:
+        waiting = self.finish - self.submit - self.exec_total
+        return 1.0 + waiting / self.exec_total
+
+    def summary(self) -> dict:
+        sd = self.slowdown()
+        te, be = self.is_te, ~self.is_te
+        out = {"TE": _np_masked_percentiles(sd, te, (50, 95, 99)),
+               "BE": _np_masked_percentiles(sd, be, (50, 95, 99))}
+        out["preempted_frac"] = (
+            float((self.preempt_count[be] > 0).mean()) if be.any()
+            else float("nan"))
+        iv = (self.last_resume - self.last_signal).astype(np.float64)
+        out["intervals"] = _np_masked_percentiles(
+            iv, self.last_resume >= 0, (50, 75, 95, 99))
+        out["fallback_count"] = self.fallback_count
+        out["trace_overflow"] = self.trace_overflow
+        return out
+
+
+class StreamEngine:
+    """Host driver for the macro-round loop (module docstring).
+
+    ``event_sink`` / ``result_sink``: optional per-round callbacks
+    (``sink(list_of_events)`` / ``sink(dict_of_np_arrays)``). With a
+    sink, the corresponding stream is NOT accumulated — true
+    O(capacity) memory end to end; without one, results (a few scalars
+    per job) and traced events are collected into the result.
+    """
+
+    def __init__(self, cfg: SimConfig, source: JobSource,
+                 capacity: Optional[int] = None,
+                 time_mode: Optional[str] = None,
+                 trace: bool = False,
+                 trace_capacity: Optional[int] = None,
+                 event_sink: Optional[Callable] = None,
+                 result_sink: Optional[Callable] = None):
+        self.cfg = cfg
+        self.source = source
+        self.capacity = int(capacity if capacity is not None
+                            else default_capacity(cfg))
+        self.time_mode = cfg.time_mode if time_mode is None else time_mode
+        self.trace = bool(trace)
+        self.trace_capacity = (
+            int(trace_capacity) if trace_capacity is not None
+            else obs_ring.round_capacity(self.capacity,
+                                         cfg.max_preemptions))
+        self.event_sink = event_sink
+        self.result_sink = result_sink
+
+    # -- host-side round phases --------------------------------------
+
+    def _pack_round(self, jobs, st, state_h):
+        """Recycle free slots with the next arrivals; returns the
+        updated pool and the round boundary (next unpacked submit)."""
+        cap = self.capacity
+        # a DONE TE slot referenced by an in-grace victim is NOT
+        # recyclable: its vacate still decrements te_pending there
+        ref = np.zeros(cap, bool)
+        grace = state_h == sim_jax.GRACE
+        if grace.any():
+            vo = np.asarray(st.victim_of)[grace]
+            ref[vo[vo >= 0]] = True
+        free = np.flatnonzero((state_h == sim_jax.DONE) & ~ref)
+        n_packed = 0
+        if free.size:
+            js = self.source.take(int(free.size))
+            if js is not None:
+                n_packed = js.n
+                slots = np.full(cap, cap, np.int32)    # cap = dropped
+                slots[:n_packed] = free[:n_packed]
+                gids = np.arange(self._n_seen,
+                                 self._n_seen + n_packed, dtype=np.int64)
+                chunk = sim_jax.Jobs(
+                    submit=self._pad(js.submit, np.int32),
+                    exec_total=self._pad(js.exec_total, np.int32),
+                    demand=self._pad(js.demand, np.float32),
+                    is_te=self._pad(js.is_te, bool),
+                    gp=self._pad(js.gp, np.int32),
+                    width=self._pad(js.n_nodes, np.int32),
+                    valid=jnp.ones((cap,), bool),
+                    akey=self._pad(gids, np.float32),
+                )
+                jobs, st = _pack(jobs, st, jnp.asarray(slots), chunk,
+                                 jnp.asarray(n_packed, jnp.int32))
+                self._slot_gid[free[:n_packed]] = gids
+                self._harvested[free[:n_packed]] = False
+                self._n_seen += n_packed
+        nxt = self.source.peek_submit()
+        if (nxt is not None and nxt <= int(st.t)
+                and free.size - n_packed == 0):
+            raise RuntimeError(
+                f"stream pool starved: all {cap} slots hold unfinished "
+                f"jobs but job {self._n_seen} (submit t={nxt}) is "
+                f"already due at t={int(st.t)} — the in-flight backlog "
+                "exceeds the pool; raise capacity (--capacity / "
+                "StreamEngine(capacity=...))")
+        return jobs, st, nxt
+
+    def _pad(self, a, dtype):
+        out = np.zeros((self.capacity,) + np.shape(a)[1:], dtype)
+        out[:len(a)] = a
+        return out
+
+    def _drain_events(self, st):
+        """Decode + slot->gid remap this round's ring; returns the
+        State with ``ev_n`` reset for the next round."""
+        if not self.trace:
+            return st
+        events, overflow = obs_ring.decode_ring(st.ev_buf, st.ev_n)
+        self._overflow += int(overflow)
+        gid = self._slot_gid
+        remapped = [
+            obs_schema.Event(
+                t=e.t, code=e.code, job=int(gid[e.job]),
+                aux=(int(gid[e.aux])
+                     if e.code in _AUX_JOB_CODES and e.aux >= 0
+                     else e.aux),
+                nodes=e.nodes)
+            for e in events]
+        if self.event_sink is not None:
+            self.event_sink(remapped)
+        else:
+            self._events.extend(remapped)
+        return st._replace(ev_n=jnp.zeros((), jnp.int32))
+
+    def _harvest(self, jobs, st, state_h):
+        """Collect per-job results for newly finished slots."""
+        done = ((state_h == sim_jax.DONE) & np.asarray(jobs.valid)
+                & ~self._harvested)
+        idx = np.flatnonzero(done)
+        if idx.size == 0:
+            return 0
+        self._harvested[idx] = True
+        batch = {"gid": self._slot_gid[idx]}
+        pool = {"submit": jobs.submit, "exec_total": jobs.exec_total,
+                "is_te": jobs.is_te, "width": jobs.width,
+                "finish": st.finish, "preempt_count": st.preempt_count,
+                "last_signal": st.last_signal,
+                "last_vacate": st.last_vacate,
+                "last_resume": st.last_resume}
+        for k, arr in pool.items():
+            batch[k] = np.asarray(arr)[idx]
+        if self.result_sink is not None:
+            self.result_sink(batch)
+        else:
+            self._batches.append(batch)
+        return idx.size
+
+    # -- the macro-round loop ----------------------------------------
+
+    def run(self) -> StreamResult:
+        cfg, cap = self.cfg, self.capacity
+        n_nodes = cfg.cluster.n_nodes
+        jobs = _empty_pool(cap, n_nodes)
+        st = sim_jax.init_state(
+            jobs, n_nodes, cfg.cluster.node.as_tuple(), cfg.seed,
+            trace_capacity=self.trace_capacity if self.trace else 0)
+        self._slot_gid = np.full(cap, -1, np.int64)
+        self._harvested = np.zeros(cap, bool)
+        self._n_seen = 0
+        self._overflow = 0
+        self._events: List = []
+        self._batches: List[dict] = []
+        rounds, n_done, max_live = 0, 0, 0
+
+        while True:
+            state_h = np.asarray(st.state)
+            jobs, st, nxt = self._pack_round(jobs, st, state_h)
+            live = cap - int(st.n_done)
+            max_live = max(max_live, live)
+            if live == 0 and nxt is None:
+                break                      # drained: nothing left anywhere
+            before = (int(st.t), n_done, self._n_seen)
+            st = sim_jax.run_round(cfg, jobs, st, round_end=nxt,
+                                   time_mode=self.time_mode,
+                                   trace=self.trace)
+            rounds += 1
+            if int(st.t) >= _MAX_TICKS:
+                raise RuntimeError(
+                    f"streamed run stalled: t reached the {_MAX_TICKS}"
+                    "-tick terminal with jobs unfinished")
+            st = self._drain_events(st)
+            state_h = np.asarray(st.state)
+            n_done += self._harvest(jobs, st, state_h)
+            if (int(st.t), n_done, self._n_seen) == before:
+                raise RuntimeError(
+                    "streamed run made no progress in a round "
+                    f"(t={int(st.t)}, done={n_done}) — engine bug")
+
+        return self._finalize(st, rounds, n_done, max_live)
+
+    def _finalize(self, st, rounds, n_done, max_live) -> StreamResult:
+        if self.result_sink is None:
+            gids = np.concatenate([b["gid"] for b in self._batches]) \
+                if self._batches else np.zeros(0, np.int64)
+            order = np.argsort(gids)
+            gids = gids[order]
+            if not (gids == np.arange(len(gids))).all():
+                raise RuntimeError(
+                    "slot recycling lost or duplicated global job ids")
+            cols = {k: np.concatenate([b[k] for b in self._batches])[order]
+                    if self._batches else np.zeros(0, np.int64)
+                    for k in _RESULT_COLS}
+        else:
+            cols = {k: np.zeros(0, np.int64) for k in _RESULT_COLS}
+        return StreamResult(
+            n_jobs=n_done, capacity=self.capacity, rounds=rounds,
+            makespan=int(st.t), fallback_count=int(st.fallback_count),
+            trace_overflow=self._overflow, max_live=max_live,
+            final_rng=np.asarray(jax.random.key_data(st.rng)),
+            events=(self._events if self.trace
+                    and self.event_sink is None else None),
+            **cols)
+
+
+def verify_prefix_parity(cfg: SimConfig, n_jobs: int = 512,
+                         capacity: int = 160, chunk: int = 128,
+                         time_mode: Optional[str] = None) -> List[str]:
+    """The parity-window contract, executable: stream a synthetic
+    prefix through the macro-round engine AND run the identical
+    materialized jobset through the monolithic ``sim_jax`` engine;
+    return the names of any per-job/result fields that differ (empty
+    list == bit-exact parity). Raises if either run leaves the
+    deterministic domain (``fallback_count != 0``). Used by the bench
+    parity rows, the CI smoke and the stream test suite."""
+    from repro.core import policy_registry
+    src = JobSource(workload.stream_chunks(cfg, n_jobs, chunk=chunk))
+    res = StreamEngine(cfg, src, capacity=capacity,
+                       time_mode=time_mode).run()
+    js = materialize(JobSource(
+        workload.stream_chunks(cfg, n_jobs, chunk=chunk)))
+    jobs = sim_jax.jobs_from_jobset(js)
+    st = sim_jax.run_jit(cfg, jobs, cfg.seed, time_mode=time_mode)
+    # Score policies' random fallback draws from a pool-size-dependent
+    # categorical — any such draw leaves the parity domain. Rank
+    # policies' fallback counter (over-P-cap last resort) is
+    # deterministic and stays inside it.
+    if policy_registry.get_policy(cfg.policy).jax_kind == "score" and (
+            res.fallback_count or int(st.fallback_count)):
+        raise ValueError(
+            "parity window needs fallback_count == 0 for score "
+            "policies (the random fallback draw is pool-size "
+            f"dependent); got stream={res.fallback_count} "
+            f"monolithic={int(st.fallback_count)}")
+    mono = {"finish": st.finish, "preempt_count": st.preempt_count,
+            "last_signal": st.last_signal,
+            "last_vacate": st.last_vacate,
+            "last_resume": st.last_resume}
+    diff = [k for k, v in mono.items()
+            if not (np.asarray(v) == getattr(res, k)).all()]
+    if res.makespan != int(st.t):
+        diff.append("t")
+    if not (res.final_rng
+            == np.asarray(jax.random.key_data(st.rng))).all():
+        diff.append("rng")
+    return diff

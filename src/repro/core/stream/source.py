@@ -1,0 +1,166 @@
+"""JobSource: the host side of the streaming macro-round engine.
+
+A *job source* is any iterator of submit-sorted :class:`JobSet`
+chunks whose submit times are non-decreasing ACROSS chunks too — the
+chunked synthetic generator (``core/workload.stream_chunks``), the
+streaming trace readers (``scenarios/traces.iter_trace_csv``) and
+:func:`from_jobset` all qualify. :class:`JobSource` wraps one with
+the two operations the engine's pack loop needs — ``take(k)`` (pull
+up to k jobs) and ``peek_submit()`` (the round boundary) — holding at
+most one chunk in memory, and validates the ordering contract loudly
+at the boundary where it would otherwise silently corrupt queue keys.
+
+``scan`` and ``materialize`` consume a source whole: ``scan`` in one
+O(chunk)-memory pass (the CLI ``describe`` path for trace scenarios),
+``materialize`` into a monolithic ``JobSet`` (the registry adapter —
+and the definition of "the same workload" the parity-window tests
+compare the streamed engine against).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.types import JobSet
+
+_FIELDS = ("submit", "exec_total", "demand", "is_te", "gp", "n_nodes")
+
+
+class JobSource:
+    """Buffered pull interface over an iterator of JobSet chunks.
+
+    ``stats`` is an optional passthrough for reader-side accounting
+    (e.g. ``scenarios.traces.TraceStats`` drop counters) so one-pass
+    consumers can report it without a second read.
+    """
+
+    def __init__(self, chunks: Iterable[JobSet], stats=None):
+        self._it: Optional[Iterator[JobSet]] = iter(chunks)
+        self._head: Optional[JobSet] = None
+        self._off = 0
+        self._last_submit: Optional[int] = None
+        self.stats = stats
+        self.n_taken = 0
+
+    def _refill(self) -> bool:
+        """Ensure the head chunk has an unread row; False = exhausted."""
+        while self._head is None or self._off >= self._head.n:
+            if self._it is None:
+                return False
+            try:
+                js = next(self._it)
+            except StopIteration:
+                self._it, self._head = None, None
+                return False
+            if js.n == 0:
+                continue
+            if not (np.diff(js.submit) >= 0).all():
+                raise ValueError("JobSource chunk is not submit-sorted")
+            if (self._last_submit is not None
+                    and int(js.submit[0]) < self._last_submit):
+                raise ValueError(
+                    "JobSource submit times decrease across chunks "
+                    f"({self._last_submit} -> {int(js.submit[0])}); the "
+                    "stream contract requires globally non-decreasing "
+                    "submits")
+            self._last_submit = int(js.submit[-1])
+            self._head, self._off = js, 0
+        return True
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._refill()
+
+    def peek_submit(self) -> Optional[int]:
+        """Submit tick of the next un-taken job; None when exhausted.
+        This is the streaming engine's round boundary."""
+        if not self._refill():
+            return None
+        return int(self._head.submit[self._off])
+
+    def take(self, k: int) -> Optional[JobSet]:
+        """Pull up to ``k`` jobs (in stream order) as one JobSet;
+        None when the source is exhausted."""
+        parts: List[tuple] = []
+        got = 0
+        while got < k and self._refill():
+            js, off = self._head, self._off
+            n = min(k - got, js.n - off)
+            parts.append((js, off, off + n))
+            self._off = off + n
+            got += n
+        if got == 0:
+            return None
+        self.n_taken += got
+
+        def cat(f):
+            return np.concatenate(
+                [getattr(js, f)[a:b] for js, a, b in parts])
+
+        return JobSet(**{f: cat(f) for f in _FIELDS})
+
+
+@dataclass
+class ScanStats:
+    """One-pass stream summary (CLI ``describe`` on trace scenarios)."""
+    n_jobs: int = 0
+    n_te: int = 0
+    n_gang: int = 0
+    first_submit: int = -1
+    last_submit: int = -1
+    total_exec_min: int = 0
+    stats: object = field(default=None, repr=False)   # reader accounting
+
+    @property
+    def n_be(self) -> int:
+        return self.n_jobs - self.n_te
+
+    @property
+    def horizon(self) -> int:
+        return max(self.last_submit - max(self.first_submit, 0), 0)
+
+
+def scan(source: JobSource, chunk: int = 8192) -> ScanStats:
+    """Consume ``source`` in one bounded-memory pass and summarize."""
+    out = ScanStats()
+    while True:
+        js = source.take(chunk)
+        if js is None:
+            break
+        if out.n_jobs == 0:
+            out.first_submit = int(js.submit[0])
+        out.last_submit = int(js.submit[-1])
+        out.n_jobs += js.n
+        out.n_te += int(js.is_te.sum())
+        out.n_gang += int((np.asarray(js.n_nodes) > 1).sum())
+        out.total_exec_min += int(js.exec_total.sum())
+    out.stats = source.stats
+    return out
+
+
+def materialize(source: JobSource, chunk: int = 65536) -> JobSet:
+    """Concatenate a whole source into one monolithic JobSet."""
+    parts: List[JobSet] = []
+    while True:
+        js = source.take(chunk)
+        if js is None:
+            break
+        parts.append(js)
+    if not parts:
+        raise ValueError("materialize() of an empty job source")
+    return JobSet(**{
+        f: np.concatenate([getattr(js, f) for js in parts])
+        for f in _FIELDS})
+
+
+def from_jobset(js: JobSet, chunk: int = 4096) -> JobSource:
+    """A JobSource over an already-materialized JobSet (chunked views;
+    no copies) — how a registered trace fixture replays streamed."""
+    def gen():
+        for a in range(0, js.n, int(chunk)):
+            b = min(a + int(chunk), js.n)
+            yield JobSet(**{f: getattr(js, f)[a:b] for f in _FIELDS})
+
+    return JobSource(gen())

@@ -161,6 +161,77 @@ def generate_trace_proxy(cfg: SimConfig, seed: int = None) -> JobSet:
     return js
 
 
+def stream_rate(cfg: SimConfig, seed: int = None,
+                probe_n: int = 2048) -> float:
+    """Open-loop arrival rate (jobs / minute) for the streamed
+    synthetic generator: FIFO-normalized load ``wl.load`` over the
+    EXPECTED per-job work, estimated from a fixed-size probe sample
+    drawn from its own rng stream — deterministic given the seed and
+    independent of both the total job count and the chunk size (so
+    chunked and materialized streams agree exactly)."""
+    wl = cfg.workload
+    rng = np.random.default_rng(((cfg.seed if seed is None else seed),
+                                 0xA11))
+    is_te = rng.random(probe_n) < wl.te_fraction
+    n_te = int(is_te.sum())
+    exec_total = np.zeros(probe_n, np.int64)
+    demand = np.zeros((probe_n, 3))
+    exec_total[is_te], demand[is_te] = sample_class(
+        rng, wl.te, n_te, wl.gpu_quanta)
+    exec_total[~is_te], demand[~is_te] = sample_class(
+        rng, wl.be, probe_n - n_te, wl.gpu_quanta)
+    n_nodes = sample_gang_widths(rng, wl, probe_n)
+    cluster_cap = (np.asarray(cfg.cluster.node.as_tuple())
+                   * cfg.cluster.n_nodes)
+    work = exec_total * cluster_fraction(demand, cluster_cap) * n_nodes
+    return wl.load / float(work.mean())
+
+
+def stream_chunks(cfg: SimConfig, n_jobs: int = None, chunk: int = 1024,
+                  seed: int = None):
+    """Chunked, seeded synthetic job stream (DESIGN.md §10): yields
+    submit-sorted ``JobSet`` chunks totalling ``n_jobs`` jobs, O(chunk)
+    memory. Chunk ``k`` is drawn entirely from
+    ``default_rng((seed, k))`` and the arrival clock is the ONLY state
+    carried between chunks — so concatenating the chunks IS the
+    monolithic equivalent of the stream (the streaming engine's
+    parity-window tests and ``stream.materialize`` rely on this), and
+    any chunk is reproducible without generating its prefix.
+
+    Arrivals are open-loop (exponential gaps at the :func:`stream_rate`
+    rate, the §4.4 trace-proxy model): the paper's §4.2 closed-loop
+    admission needs a full FIFO simulation over the whole jobset and
+    cannot stream. Class/GP/width sampling matches :func:`generate`'s
+    samplers per chunk."""
+    wl = cfg.workload
+    seed = cfg.seed if seed is None else seed
+    n_total = int(wl.n_jobs if n_jobs is None else n_jobs)
+    lam = stream_rate(cfg, seed)
+    clock = 0.0
+    start, k = 0, 0
+    while start < n_total:
+        n = min(int(chunk), n_total - start)
+        rng = np.random.default_rng((seed, k))
+        is_te = rng.random(n) < wl.te_fraction
+        n_te = int(is_te.sum())
+        exec_total = np.zeros(n, np.int64)
+        demand = np.zeros((n, 3))
+        exec_total[is_te], demand[is_te] = sample_class(
+            rng, wl.te, n_te, wl.gpu_quanta)
+        exec_total[~is_te], demand[~is_te] = sample_class(
+            rng, wl.be, n - n_te, wl.gpu_quanta)
+        gp = np.round(sample_trunc_normal(
+            rng, wl.scaled_gp(), n)).astype(np.int64)
+        n_nodes = sample_gang_widths(rng, wl, n)
+        at = clock + np.cumsum(rng.exponential(1.0 / lam, n))
+        clock = float(at[-1])
+        yield JobSet(submit=np.floor(at).astype(np.int64),
+                     exec_total=exec_total, demand=demand,
+                     is_te=is_te, gp=gp, n_nodes=n_nodes)
+        start += n
+        k += 1
+
+
 def sparse_long_horizon(n: int = 512, seed: int = 0,
                         gap_mean: float = 180.0) -> JobSet:
     """Trickle arrivals (exponential gaps, mean ``gap_mean`` minutes)

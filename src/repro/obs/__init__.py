@@ -5,10 +5,10 @@ Layering: ``obs`` depends only on numpy + the schema itself — both
 engines import FROM here (event codes, ``default_capacity``), never
 the other way around, so every consumer of a trace is engine-agnostic.
 """
-from repro.obs.export import (read_csv, to_csv, to_perfetto,  # noqa: F401
-                              write_trace)
+from repro.obs.export import (CsvTraceWriter, read_csv,  # noqa: F401
+                              to_csv, to_perfetto, write_trace)
 from repro.obs.ring import (decode_ring, default_capacity,  # noqa: F401
-                            n_node_words)
+                            n_node_words, round_capacity)
 from repro.obs.schema import (BACKFILL, EVENT_NAMES, FINISH,  # noqa: F401
                               GRACE_EXPIRE, PREEMPT_SIGNAL, REQUEUE,
                               RESUME, START, SUBMIT, VACATE, Event,

@@ -169,6 +169,43 @@ def to_perfetto(events: Sequence[Event], n_nodes: Optional[int] = None,
             "otherData": {"ts_per_minute": TS_PER_MIN}}
 
 
+class CsvTraceWriter:
+    """Incremental trace-CSV writer for streamed runs (DESIGN.md §10).
+
+    Same dialect as :func:`to_csv` / :func:`read_csv`, but appends
+    batches as they drain instead of holding the whole stream — pass
+    ``writer.write`` as ``core.stream.StreamEngine``'s ``event_sink``
+    and the trace lands on disk round by round in O(batch) memory:
+
+        with CsvTraceWriter(path) as w:
+            stream.StreamEngine(cfg, src, trace=True,
+                                event_sink=w.write).run()
+        read_csv(open(path).read())     # == the full event stream
+    """
+
+    def __init__(self, path: str):
+        self._f = open(path, "w", newline="")
+        self._w = csv.writer(self._f)
+        self._w.writerow(CSV_FIELDS)
+        self.n_written = 0
+
+    def write(self, events: Sequence[Event]) -> None:
+        for ev in events:
+            self._w.writerow([ev.t, ev.name, ev.job, ev.aux,
+                              "+".join(str(n) for n in ev.nodes)])
+        self.n_written += len(events)
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "CsvTraceWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
 def write_trace(path: str, events: Sequence[Event], fmt: str = "perfetto",
                 n_nodes: Optional[int] = None, is_te=None,
                 preemptive: bool = True) -> None:

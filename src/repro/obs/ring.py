@@ -54,6 +54,17 @@ def default_capacity(n_jobs: int, max_preemptions: int = 1) -> int:
     return 64 + int(n_jobs) * per_job
 
 
+def round_capacity(n_slots: int, max_preemptions: int = 1) -> int:
+    """Per-round ring capacity for the streaming engine's recycled
+    slot pool (``core/stream/``): the ring is drained (and ``ev_n``
+    reset) between macro-rounds, a slot hosts at most ONE job within
+    a round, and a job's whole-lifetime emission is bounded by
+    :func:`default_capacity`'s per-job budget — so the same bound
+    applied to SLOTS covers any single round. This is what keeps a
+    streamed run's trace memory O(capacity), not O(total jobs)."""
+    return default_capacity(n_slots, max_preemptions)
+
+
 def decode_ring(ev_buf, ev_n) -> Tuple[List[Event], int]:
     """Decode a device ring buffer into canonical :class:`Event` rows.
 

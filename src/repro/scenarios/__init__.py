@@ -13,16 +13,17 @@ CLI: ``PYTHONPATH=src python -m repro.scenarios list|describe|run|sweep``.
 """
 from repro.scenarios.registry import (SYNTHETIC, TRACE, Scenario, build,
                                       all_scenarios, get_scenario,
-                                      register_scenario, scenario_names)
+                                      get_source, register_scenario,
+                                      scenario_names)
 # importing these modules populates the registry
 from repro.scenarios import library as library          # noqa: F401
 from repro.scenarios import traces as traces            # noqa: F401
-from repro.scenarios.traces import (TraceStats, load_pai_csv,
-                                    load_philly_csv)
+from repro.scenarios.traces import (TraceStats, iter_trace_csv,
+                                    load_pai_csv, load_philly_csv)
 
 __all__ = [
     "SYNTHETIC", "TRACE", "Scenario", "TraceStats",
-    "all_scenarios", "build", "get_scenario", "library",
-    "load_pai_csv", "load_philly_csv", "register_scenario",
-    "scenario_names", "traces",
+    "all_scenarios", "build", "get_scenario", "get_source",
+    "iter_trace_csv", "library", "load_pai_csv", "load_philly_csv",
+    "register_scenario", "scenario_names", "traces",
 ]

@@ -1,20 +1,26 @@
 """Scenario runner CLI.
 
     PYTHONPATH=src python -m repro.scenarios list [--kind synthetic|trace]
-    PYTHONPATH=src python -m repro.scenarios describe NAME
+    PYTHONPATH=src python -m repro.scenarios describe NAME [--n-jobs 512]
     PYTHONPATH=src python -m repro.scenarios run NAME [--policy fitgpp]
         [--engine reference|jax] [--score-backend jnp|pallas]
         [--n-jobs 512] [--nodes 16] [--seed 0] [--mode event|tick]
         [--trace out.json [--trace-format perfetto|csv]]
+        [--stream [--capacity N]]
     PYTHONPATH=src python -m repro.scenarios sweep NAME [NAME ...]
         [--seeds 0,1] [--n-jobs 256] [--policy fitgpp]
         [--mode event|tick]
 
 ``run`` replays one scenario through ``repro.api.run_experiment`` on
 either engine (any registered policy — the choices come from the
-policy registry) and prints the paper-style slowdown table; ``sweep``
+policy registry) and prints the paper-style slowdown table; with
+``--stream`` it goes through the bounded-memory macro-round engine
+(``repro.api.run_stream``, DESIGN.md §10) instead, whose memory
+scales with ``--capacity`` rather than the trace length. ``sweep``
 batches every (scenario, seed) trial — ragged job counts included —
-into one vmapped JAX sweep.
+into one vmapped JAX sweep. ``describe`` adds one-pass streamed
+workload stats (job counts, TE/BE split, reader drop accounting) for
+scenarios with a registered streaming source.
 """
 from __future__ import annotations
 
@@ -59,10 +65,58 @@ def cmd_describe(args) -> None:
         print("\n  knobs:")
         for k, v in sc.knobs:
             print(f"    {k:28s} {v}")
+    if sc.source is not None:
+        # one bounded-memory pass over the registered stream: job
+        # counts, class split and reader drop accounting in one read
+        from repro.core import stream
+        cfg = SimConfig(cluster=ClusterSpec(n_nodes=args.nodes),
+                        workload=WorkloadSpec(n_jobs=args.n_jobs),
+                        seed=args.seed)
+        info = stream.scan(sc.source(cfg))
+        print(f"\n  stream (one pass, n_jobs={args.n_jobs}):")
+        print(f"    {info.n_jobs} jobs: {info.n_te} TE / {info.n_be} BE, "
+              f"{info.n_gang} gangs; horizon {info.horizon} min, "
+              f"{info.total_exec_min} exec-min total")
+        ts = info.stats
+        if ts is not None:
+            print(f"    kept {ts.n_jobs}/{ts.n_rows} rows (dropped: "
+                  f"{ts.n_malformed} malformed, {ts.n_zero_runtime} "
+                  f"zero-runtime, {ts.n_too_wide} too-wide, "
+                  f"{ts.n_filtered_status} status-filtered)")
 
 
 def cmd_run(args) -> None:
     cfg = _cfg(args)
+    if args.stream:
+        r = api.run_stream(args.name, cfg.policy, cfg=cfg,
+                           capacity=args.capacity, mode=args.mode,
+                           trace=bool(args.trace))
+        res = r.raw
+        print(f"{args.name}: {res.n_jobs} jobs streamed through "
+              f"{res.capacity} slots in {res.rounds} rounds "
+              f"(peak live {res.max_live}), policy={cfg.policy}, "
+              f"engine=stream, nodes={cfg.cluster.n_nodes}")
+        print(metrics.format_table(
+            {r.policy: r.table},
+            f"slowdown percentiles (makespan {r.makespan} min)"))
+        print(f"resched intervals [min]: p50={r.intervals['p50']:.1f} "
+              f"p95={r.intervals['p95']:.1f}   preempted "
+              f"{r.preempted_frac * 100:.1f}% of BE jobs")
+        print(f"fallback_count={r.fallback_count} "
+              f"trace_overflow={r.trace_overflow}")
+        if args.trace:
+            from repro.obs import export
+            export.write_trace(args.trace, r.events,
+                               fmt=args.trace_format,
+                               n_nodes=cfg.cluster.n_nodes,
+                               is_te=res.is_te,
+                               preemptive=api.get_policy(
+                                   cfg.policy).preemptive)
+            print(f"{len(r.events)} events -> {args.trace} "
+                  f"[{args.trace_format}]"
+                  + (f" (WARNING: {r.trace_overflow} rows dropped)"
+                     if r.trace_overflow else ""))
+        return
     js = scenarios.build(args.name, cfg)
     gangs = int((np.asarray(js.n_nodes) > 1).sum())
     print(f"{args.name}: {js.n} jobs ({int(js.is_te.sum())} TE, "
@@ -119,8 +173,14 @@ def main(argv=None) -> None:
                    default=None)
     p.set_defaults(fn=cmd_list)
 
-    p = sub.add_parser("describe", help="knobs + doc for one scenario")
+    p = sub.add_parser("describe", help="knobs + doc for one scenario "
+                                        "(+ one-pass stream stats when "
+                                        "it has a streaming source)")
     p.add_argument("name")
+    p.add_argument("--n-jobs", type=int, default=512,
+                   help="stream length for the one-pass stats (512)")
+    p.add_argument("--nodes", type=int, default=16)
+    p.add_argument("--seed", type=int, default=0)
     p.set_defaults(fn=cmd_describe)
 
     def sim_args(p):
@@ -149,6 +209,13 @@ def main(argv=None) -> None:
                    choices=("perfetto", "csv"),
                    help="trace file format: Chrome/Perfetto JSON "
                         "(load in ui.perfetto.dev) or lossless CSV")
+    p.add_argument("--stream", action="store_true",
+                   help="replay through the bounded-memory streaming "
+                        "engine (core/stream): memory scales with "
+                        "--capacity, not --n-jobs")
+    p.add_argument("--capacity", type=int, default=None,
+                   help="streaming slot-pool size (default "
+                        "32 x nodes x max_preemptions)")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("sweep", help="ragged multi-scenario JAX sweep")

@@ -335,3 +335,29 @@ def heterogeneous_gp(cfg: SimConfig, zero_gp_frac: float = 0.5) -> JobSet:
     gaps = rng.exponential(1.0 / lam, n)
     return _sorted_jobset(_submit_from_gaps(gaps), exec_total, demand,
                           is_te, gp)
+
+
+def _stream_synthetic_source(cfg: SimConfig):
+    from repro.core.stream.source import JobSource
+    return JobSource(workload.stream_chunks(cfg))
+
+
+@register_scenario(
+    "stream-synthetic", kind=SYNTHETIC,
+    source=_stream_synthetic_source,
+    knobs={"n_jobs": "total jobs (workload.n_jobs; streams O(chunk))",
+           "load": "open-loop arrival intensity (workload.load)",
+           "chunk": "generator chunk size, jobs (1024)"})
+def stream_synthetic(cfg: SimConfig) -> JobSet:
+    """Open-loop chunked synthetic stream (workload.stream_chunks).
+
+    The §4.4 trace-proxy arrival model in streamable form: chunk k is
+    drawn entirely from ``rng((seed, k))``, so any window of the
+    stream regenerates without its prefix and the streaming engine
+    replays 10^5-10^6 jobs in O(capacity) memory (DESIGN.md §10).
+    Unlike ``paper-synthetic``, arrivals are open-loop — sub-critical
+    ``workload.load`` (< ~0.9) keeps the backlog bounded. This
+    registry entry materializes the same stream for the monolithic
+    engines."""
+    from repro.core.stream.source import materialize
+    return materialize(_stream_synthetic_source(cfg))

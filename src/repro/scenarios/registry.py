@@ -18,7 +18,7 @@ re-validates every JobSet against the node shape before handing it out.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Mapping, Optional, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -30,6 +30,9 @@ TRACE = "trace"
 _KINDS = (SYNTHETIC, TRACE)
 
 ScenarioFn = Callable[[SimConfig], JobSet]
+# SimConfig -> core.stream.JobSource (typed loosely to keep the
+# registry import-light; core/stream is only imported on use)
+SourceFn = Callable[[SimConfig], Any]
 
 
 @dataclass(frozen=True)
@@ -39,6 +42,10 @@ class Scenario:
     kind: str                          # SYNTHETIC | TRACE
     description: str                   # one line, shown by ``list``
     knobs: Tuple[Tuple[str, str], ...]  # (knob, meaning) pairs
+    # Optional streaming variant: builds a chunked JobSource over the
+    # SAME workload ``fn`` describes, without materializing it (trace
+    # readers, chunked synthetic generators). DESIGN.md §10.
+    source: Optional[SourceFn] = None
 
     def build(self, cfg: SimConfig) -> JobSet:
         js = self.fn(cfg)
@@ -51,11 +58,16 @@ _REGISTRY: Dict[str, Scenario] = {}
 
 def register_scenario(name: str, *, kind: str = SYNTHETIC,
                       description: str = "",
-                      knobs: Optional[Mapping[str, str]] = None):
+                      knobs: Optional[Mapping[str, str]] = None,
+                      source: Optional[SourceFn] = None):
     """Decorator registering ``fn`` as scenario ``name``.
 
     ``description`` defaults to the first line of the docstring; knobs
     document the tunable parameters (config fields or closure defaults).
+    ``source`` optionally registers a streaming variant (a
+    ``SimConfig -> JobSource`` factory over the same workload) for the
+    bounded-memory engine; scenarios without one still stream via
+    :func:`get_source`'s materialized fallback.
     """
     if kind not in _KINDS:
         raise ValueError(f"kind must be one of {_KINDS}, got {kind!r}")
@@ -71,7 +83,7 @@ def register_scenario(name: str, *, kind: str = SYNTHETIC,
                 "description=... or give the function a docstring)")
         _REGISTRY[name] = Scenario(
             name=name, fn=fn, kind=kind, description=desc,
-            knobs=tuple(sorted((knobs or {}).items())))
+            knobs=tuple(sorted((knobs or {}).items())), source=source)
         return fn
 
     return deco
@@ -98,3 +110,18 @@ def all_scenarios(kind: Optional[str] = None) -> List[Scenario]:
 def build(name: str, cfg: SimConfig) -> JobSet:
     """Build + validate the named scenario's JobSet for ``cfg``."""
     return get_scenario(name).build(cfg)
+
+
+def get_source(name: str, cfg: SimConfig):
+    """JobSource for the named scenario (the streaming engine's input).
+
+    Scenarios with a registered ``source`` stream without ever
+    materializing the workload (trace readers, chunked generators);
+    the rest fall back to a chunked view over the built JobSet —
+    same jobs, but O(n_jobs) host memory during the build.
+    """
+    sc = get_scenario(name)
+    from repro.core.stream.source import from_jobset
+    if sc.source is None:
+        return from_jobset(sc.build(cfg))
+    return sc.source(cfg)

@@ -24,7 +24,8 @@ NEW_SCENARIOS = ("diurnal", "burst-storm", "gang-heavy", "gang-trace-mix",
                  "load-ramp", "te-flood", "long-tail-be",
                  "maintenance-drain", "heterogeneous-gp")
 PAPER_SCENARIOS = ("paper-synthetic", "trace-proxy", "sparse-long-horizon")
-TRACE_SCENARIOS = ("philly-sample", "pai-sample")
+TRACE_SCENARIOS = ("philly-sample", "pai-sample",
+                   "philly-tiled", "pai-tiled")
 
 
 class TestRegistry:
@@ -66,7 +67,7 @@ class TestRegistry:
         out = buf.getvalue()
         for name in NEW_SCENARIOS + PAPER_SCENARIOS + TRACE_SCENARIOS:
             assert name in out
-        assert "2 trace adapters" in out
+        assert f"{len(TRACE_SCENARIOS)} trace adapters" in out
 
 
 class TestScenarioRuns:

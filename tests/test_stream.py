@@ -1,0 +1,238 @@
+"""Streaming macro-round engine (core/stream, DESIGN.md §10).
+
+Locked down here:
+
+* the bit-parity window: streamed per-job results / makespan / final
+  rng state on a prefix equal the monolithic ``sim_jax`` run exactly,
+  across policies and both time modes, WITH real slot recycling
+  (capacity << n_jobs);
+* slot-recycling invariants: no global job id lost or double-assigned
+  across rounds (capacity changes the recycling pattern but not one
+  output bit), and the pool starving loudly instead of deadlocking;
+* the per-round event drain: gid-remapped streams are schema-valid,
+  satisfy the §8 slowdown-decomposition identity, never overflow the
+  default per-round ring, and round-trip through the incremental CSV
+  writer;
+* the source layer: ordering contract enforcement, chunked synthetic
+  determinism, streaming trace readers vs the monolithic loaders, and
+  the tiled-fixture long trace;
+* the facade: ``api.run_stream`` + the scenarios CLI ``--stream`` /
+  streamed ``describe``.
+
+Engine configs use sub-critical load (0.5): arrivals are open-loop, so
+near-saturation load grows the arrived-unfinished backlog past any
+fixed pool (that is the starvation test).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api, scenarios
+from repro.core import stream, workload
+from repro.core.types import JobSet
+from repro.obs import export, ring, schema, timeseries
+from repro.scenarios import traces
+
+
+def _cfg(policy="fitgpp", n_jobs=400, n_nodes=8, seed=0, load=0.5):
+    cfg = api.make_config(policy, n_jobs=n_jobs, n_nodes=n_nodes,
+                          seed=seed)
+    return dataclasses.replace(
+        cfg, workload=dataclasses.replace(cfg.workload, load=load))
+
+
+def _mk_chunk(submits, exec_total=5):
+    n = len(submits)
+    return JobSet(submit=np.asarray(submits, np.int64),
+                  exec_total=np.full(n, exec_total, np.int64),
+                  demand=np.tile([1.0, 1.0, 1.0], (n, 1)),
+                  is_te=np.zeros(n, bool),
+                  gp=np.zeros(n, np.int64),
+                  n_nodes=np.ones(n, np.int64))
+
+
+# ---------------------------------------------------------------- parity
+
+@pytest.mark.parametrize("policy,mode", [("fitgpp", "event"),
+                                         ("lrtp", "tick")])
+def test_parity_window(policy, mode):
+    """Streamed == monolithic, bit-exact, with 5 recycling rounds."""
+    diff = stream.verify_prefix_parity(_cfg(policy), n_jobs=400,
+                                       capacity=96, chunk=64,
+                                       time_mode=mode)
+    assert diff == []
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy,mode", [("fitgpp", "tick"),
+                                         ("lrtp", "event"),
+                                         ("srtp", "event"),
+                                         ("fifo", "event")])
+def test_parity_window_full_matrix(policy, mode):
+    diff = stream.verify_prefix_parity(_cfg(policy), n_jobs=400,
+                                       capacity=96, chunk=64,
+                                       time_mode=mode)
+    assert diff == []
+
+
+# ------------------------------------------------- recycling invariants
+
+def test_no_gid_lost_or_duplicated_across_capacities():
+    """Different capacities = different recycling patterns; the
+    per-gid results must not change by one bit, and _finalize's
+    completeness check (every gid exactly once) must hold."""
+    cfg = _cfg(n_jobs=300)
+    results = {}
+    for cap in (96, 160):
+        src = stream.JobSource(workload.stream_chunks(cfg, 300, chunk=64))
+        results[cap] = stream.StreamEngine(cfg, src, capacity=cap).run()
+    a, b = results[96], results[160]
+    assert a.n_jobs == b.n_jobs == 300
+    assert a.rounds > 1 and b.rounds > 1    # recycling actually happened
+    assert a.max_live <= 96 and b.max_live <= 160
+    for f in ("submit", "exec_total", "is_te", "finish", "preempt_count",
+              "last_signal", "last_vacate", "last_resume"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), f)
+    assert (a.finish >= a.submit).all()
+
+
+def test_pool_starvation_raises():
+    """Saturating load overflows any fixed pool: the engine must stop
+    loudly (capacity too small for the backlog), not deadlock."""
+    cfg = _cfg(n_jobs=200, load=2.0)
+    src = stream.JobSource(workload.stream_chunks(cfg, 200, chunk=64))
+    with pytest.raises(RuntimeError, match="starved"):
+        stream.StreamEngine(cfg, src, capacity=16).run()
+
+
+# ------------------------------------------------------ per-round drain
+
+def test_streamed_trace_decomposition_and_drain(tmp_path):
+    """One traced streamed run: schema-valid gid-remapped events, §8
+    decomposition identity on every job, no overflow at the default
+    per-round ring size, and the incremental CSV writer reproducing
+    the in-memory stream byte for byte."""
+    cfg = _cfg(n_jobs=300)
+    src = stream.JobSource(workload.stream_chunks(cfg, 300, chunk=64))
+    res = stream.StreamEngine(cfg, src, capacity=96, trace=True).run()
+    assert res.trace_overflow == 0
+    schema.validate_events(res.events, n_jobs=res.n_jobs,
+                           n_nodes=cfg.cluster.n_nodes)
+    dec = timeseries.slowdown_decomposition(res.events)
+    assert len(dec) == res.n_jobs
+    for gid, d in dec.items():
+        assert d.identity_holds(), f"identity broken for gid {gid}"
+        assert d.finish == int(res.finish[gid])
+        assert d.submit == int(res.submit[gid])
+    # event_sink path: per-round CSV append == the in-memory stream
+    src2 = stream.JobSource(workload.stream_chunks(cfg, 300, chunk=64))
+    path = tmp_path / "trace.csv"
+    with export.CsvTraceWriter(str(path)) as w:
+        res2 = stream.StreamEngine(cfg, src2, capacity=96, trace=True,
+                                   event_sink=w.write).run()
+    assert res2.events is None              # sink consumed them
+    assert w.n_written == len(res.events)
+    assert export.read_csv(path.read_text()) == res.events
+
+
+def test_round_capacity_sizes_off_slots():
+    assert ring.round_capacity(128, 2) == ring.default_capacity(128, 2)
+    # the whole point: a streamed ring is sized by the POOL, not the trace
+    assert ring.round_capacity(256, 1) < ring.default_capacity(100_000, 1)
+
+
+# ------------------------------------------------------------- sources
+
+def test_jobsource_ordering_contract():
+    with pytest.raises(ValueError, match="not submit-sorted"):
+        stream.JobSource([_mk_chunk([5, 3])]).take(2)
+    with pytest.raises(ValueError, match="decrease across chunks"):
+        src = stream.JobSource([_mk_chunk([0, 10]), _mk_chunk([4, 20])])
+        src.take(4)
+
+
+def test_jobsource_take_and_scan():
+    src = stream.JobSource([_mk_chunk([0, 1, 2]), _mk_chunk([3, 4])])
+    js = src.take(4)
+    assert js.n == 4 and src.take(10).n == 1 and src.take(1) is None
+    info = stream.scan(stream.JobSource([_mk_chunk([0, 1, 2]),
+                                         _mk_chunk([3, 4])]))
+    assert info.n_jobs == 5 and info.first_submit == 0
+    assert info.last_submit == 4 and info.n_be == 5
+
+
+def test_stream_chunks_deterministic():
+    cfg = _cfg(n_jobs=256)
+    a = stream.materialize(
+        stream.JobSource(workload.stream_chunks(cfg, 256, chunk=64)))
+    b = stream.materialize(
+        stream.JobSource(workload.stream_chunks(cfg, 256, chunk=64)))
+    for f in ("submit", "exec_total", "demand", "is_te", "gp", "n_nodes"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), f)
+    assert a.n == 256 and (np.diff(a.submit) >= 0).all()
+
+
+# -------------------------------------------------- streaming readers
+
+@pytest.mark.parametrize("path,dialect,loader", [
+    (traces.PHILLY_SAMPLE, "philly", traces.load_philly_csv),
+    (traces.PAI_SAMPLE, "pai", traces.load_pai_csv)])
+def test_trace_reader_matches_monolithic(path, dialect, loader):
+    """Same rows, same normalization, same drop accounting as the
+    monolithic loader in one streaming pass (gp excluded: the stream
+    draws per chunk by contract)."""
+    cfg = _cfg()
+    mono, mstats = loader(path, cfg, return_stats=True)
+    src = traces.trace_source(path, cfg, dialect, chunk=7)
+    got = stream.materialize(src)
+    for f in ("submit", "exec_total", "demand", "is_te", "n_nodes"):
+        np.testing.assert_array_equal(getattr(got, f), getattr(mono, f), f)
+    assert src.stats == mstats
+
+
+def test_trace_reader_unsorted_raises(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("jobid,vc,submit_time,start_time,end_time,gpus,status\n"
+                 "a,vc1,7200,7300,12000,1,Pass\n"
+                 "b,vc1,600,700,6000,1,Pass\n")
+    with pytest.raises(ValueError, match="not submit-ordered"):
+        list(traces.iter_trace_csv(str(p), _cfg(), "philly"))
+
+
+def test_tiled_fixture_stream():
+    cfg = _cfg(n_jobs=120)
+    js = stream.materialize(
+        traces.tiled_source(traces.PHILLY_SAMPLE, cfg, "philly",
+                            repeats=5))
+    assert js.n == 5 * 26 and (np.diff(js.submit) >= 0).all()
+    # registry entry honors workload.n_jobs through the repeat count
+    built = scenarios.build("philly-tiled", cfg)
+    assert built.n >= 120 and built.n == -(-120 // 26) * 26
+
+
+def test_get_source_fallback_matches_build():
+    """Scenarios without a registered source stream the exact jobset
+    the monolithic build produces."""
+    cfg = _cfg(n_jobs=64)
+    js = scenarios.build("burst-storm", cfg)
+    got = stream.materialize(scenarios.get_source("burst-storm", cfg))
+    for f in ("submit", "exec_total", "demand", "is_te", "gp", "n_nodes"):
+        np.testing.assert_array_equal(getattr(got, f), getattr(js, f), f)
+
+
+# --------------------------------------------------------------- facade
+
+def test_run_stream_api_and_cli(capsys):
+    r = api.run_stream("philly-tiled", "fitgpp", n_jobs=120, n_nodes=8)
+    assert r.engine == "stream"
+    assert r.raw.n_jobs == len(r.raw.finish) == 130
+    assert set(r.table) == {"TE", "BE"} and r.makespan > 0
+    from repro.scenarios.__main__ import main
+    main(["run", "philly-tiled", "--stream", "--n-jobs", "120",
+          "--nodes", "8"])
+    out = capsys.readouterr().out
+    assert "engine=stream" in out and "slowdown percentiles" in out
+    main(["describe", "philly-sample"])
+    out = capsys.readouterr().out
+    assert "stream (one pass" in out and "kept 26/28 rows" in out
