@@ -41,10 +41,15 @@ Streaming (DESIGN.md §10): the JSON artifact opens with a ``stream``
 suite — a >=10^5-job synthetic trace through the bounded-memory
 macro-round engine (``core/stream``) at fixed slot-pool capacity,
 run before everything else so its per-row ``max_rss_mb``
-(``resource.getrusage`` high-water mark; every suite records it)
-demonstrates memory scaling with capacity, not trace length, and an
-in-run ``parity`` key for the streamed-vs-monolithic bit-parity
-window that ``--check-parity`` requires.
+(``resource.getrusage`` high-water mark, platform-aware units; every
+suite records it) demonstrates memory scaling with capacity, not
+trace length, and an in-run ``parity`` key for the
+streamed-vs-monolithic bit-parity window that ``--check-parity``
+requires — followed by a ``stream_closed_loop`` suite replaying the
+paper's §4.2 load-2.0 closed-loop regime through the same pool
+(``StreamEngine(admission=True)``), with its own required ``parity``
+key (admit ticks and scheduler outcome bit-exact with the monolithic
+``closed_loop_submit_times`` pipeline) and ``n_spilled`` per row.
 """
 from __future__ import annotations
 
@@ -52,6 +57,7 @@ import argparse
 import dataclasses
 import json
 import resource
+import sys
 import time
 from typing import Dict, List
 
@@ -64,11 +70,21 @@ from repro.core.policy_registry import RNG_ALWAYS
 from repro.core.workload import sparse_long_horizon
 
 
+def _rss_divisor(platform: str = None) -> int:
+    """``ru_maxrss`` unit per platform: kilobytes everywhere except
+    macOS, where getrusage reports BYTES (the BSD lineage). Returns
+    the divisor that yields MB."""
+    platform = sys.platform if platform is None else platform
+    return (1 << 20) if platform == "darwin" else (1 << 10)
+
+
 def _rss_mb() -> float:
-    """Process peak RSS in MB (``ru_maxrss`` is KB on Linux). The
-    counter is a high-water mark — per-row values are peaks SO FAR, so
-    rows that must attribute memory (the stream suite) run first."""
-    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    """Process peak RSS in MB (platform-aware ``ru_maxrss`` units, see
+    :func:`_rss_divisor`). The counter is a high-water mark — per-row
+    values are peaks SO FAR, so rows that must attribute memory (the
+    stream suites) run first."""
+    return (resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+            / _rss_divisor())
 
 
 def bench_tick_vs_event(n_jobs: int = 512, policy: str = "fitgpp",
@@ -149,6 +165,63 @@ def bench_stream(n_jobs: int = 100_000, capacity: int = 2048,
                       "capacity": res.capacity,
                       "makespan_ticks": res.makespan,
                       "fallback_count": res.fallback_count,
+                      "max_rss_mb": _rss_mb()}
+    return out
+
+
+def bench_stream_closed_loop(n_jobs: int = 100_000, capacity: int = 2048,
+                             n_nodes: int = 8, policy: str = "fitgpp",
+                             seed: int = 0, load: float = 2.0,
+                             parity_jobs: int = 400) -> Dict:
+    """Streamed closed-loop admission rows (paper §4.2, DESIGN.md
+    §10): the load-2.0 saturated regime through the macro-round engine
+    with ``admission=True`` — the arrival process the paper's headline
+    tables use, previously monolithic-only. The bounded-memory claim
+    is the near-flat ``max_rss_mb`` between the quarter and full rows:
+    the closed loop bounds the FIFO backlog, so saturated load streams
+    without starving the pool (``n_spilled`` stays 0). ``parity``
+    re-verifies the whole streamed path in-run — admit ticks AND
+    scheduler outcome bit-exact with the monolithic
+    ``closed_loop_submit_times`` + ``run_jit`` pipeline
+    (``stream.verify_closed_loop_parity``; lrtp — rank policies stay
+    in the deterministic domain at saturation, where score policies'
+    random fallback fires)."""
+    from repro.core import stream
+    pcfg = api.make_config("lrtp", n_jobs=parity_jobs, n_nodes=n_nodes,
+                           seed=seed)
+    pcfg = dataclasses.replace(
+        pcfg, workload=dataclasses.replace(pcfg.workload, load=load))
+    diff = stream.verify_closed_loop_parity(pcfg, n_jobs=parity_jobs,
+                                            capacity=160, chunk=64)
+    if diff:
+        raise AssertionError(
+            f"streamed closed-loop parity violated: {diff}")
+    cfg = api.make_config(policy, n_jobs=n_jobs, n_nodes=n_nodes,
+                          seed=seed)
+    cfg = dataclasses.replace(
+        cfg, workload=dataclasses.replace(cfg.workload, load=load))
+    out: Dict = {
+        "workload": {"kind": "stream_chunks+closed_loop",
+                     "n_nodes": n_nodes, "policy": policy, "seed": seed,
+                     "load": load},
+        "capacity": capacity, "parity": True,
+        "parity_window_jobs": parity_jobs,
+    }
+    for label, nj in (("quarter", n_jobs // 4), ("full", n_jobs)):
+        src = stream.JobSource(
+            workload.stream_chunks(cfg, nj, chunk=4096))
+        t0 = time.perf_counter()
+        res = stream.StreamEngine(cfg, src, capacity=capacity,
+                                  admission=True).run()
+        s = time.perf_counter() - t0
+        out[label] = {"n_jobs": nj, "seconds": s,
+                      "jobs_per_sec": nj / max(s, 1e-12),
+                      "rounds": res.rounds, "max_live": res.max_live,
+                      "capacity": res.capacity,
+                      "makespan_ticks": res.makespan,
+                      "fallback_count": res.fallback_count,
+                      "n_spilled": res.n_spilled,
+                      "spill_peak": res.spill_peak,
                       "max_rss_mb": _rss_mb()}
     return out
 
@@ -343,6 +416,9 @@ def check_parity_rows(out: dict) -> List[str]:
     if "parity" not in out.get("stream", {}):
         bad.append("missing: stream.parity (streamed-vs-monolithic "
                    "bit-parity window)")
+    if "parity" not in out.get("stream_closed_loop", {}):
+        bad.append("missing: stream_closed_loop.parity (streamed "
+                   "closed-loop admission bit-parity window)")
     suite = out.get("scenario_suite")
     if not suite:
         bad.append("missing: scenario_suite")
@@ -378,12 +454,14 @@ def check_speed_rows(out: dict) -> List[str]:
 
 
 def emit_json(path: str = "BENCH_sim_engine.json") -> dict:
-    # the stream suite runs FIRST: its max_rss_mb rows carry the
+    # the stream suites run FIRST: their max_rss_mb rows carry the
     # bounded-memory claim and ru_maxrss is a process-wide high-water
     # mark, so nothing may inflate the peak before them
     stream_rows = bench_stream()
+    stream_cl_rows = bench_stream_closed_loop()
     out = bench_tick_vs_event()
     out["stream"] = stream_rows
+    out["stream_closed_loop"] = stream_cl_rows
     out["scenario_suite"] = bench_scenario_suite()
     out["njobs_scaling"] = bench_njobs_scaling()
     out["score_backend"] = bench_score_backend()
@@ -458,9 +536,21 @@ def smoke(n_jobs: int = 64, seed: int = 0,
                                         chunk=48)
     if sdiff:
         raise SystemExit(f"smoke: stream-vs-monolithic diff in {sdiff}")
+    # one streamed closed-loop round (§4.2 at load 2.0): admit ticks
+    # AND scheduler outcome bit-exact with the monolithic
+    # closed_loop_submit_times + run_jit pipeline (rank policy — the
+    # score fallback fires at saturation and leaves the parity domain)
+    ccfg = api.make_config("lrtp", n_jobs=160, n_nodes=8, seed=seed)
+    ccfg = dataclasses.replace(
+        ccfg, workload=dataclasses.replace(ccfg.workload, load=2.0))
+    cdiff = stream.verify_closed_loop_parity(ccfg, n_jobs=160,
+                                             capacity=96, chunk=48)
+    if cdiff:
+        raise SystemExit(f"smoke: streamed closed-loop diff in {cdiff}")
     print(f"smoke ok: {n_jobs} jobs, fused-backend parity verified, "
           f"{len(events)} events trace-parity ok, "
-          f"util {ts.mean_utilization():.2f}, streamed parity ok"
+          f"util {ts.mean_utilization():.2f}, streamed parity ok, "
+          f"closed-loop parity ok"
           + (f", trace -> {trace_out}" if trace_out else ""))
 
 
@@ -547,6 +637,13 @@ def run_all() -> List[tuple]:
                  f"{sr['full']['jobs_per_sec']:.0f} jobs/s, "
                  f"{sr['full']['rounds']} rounds, capacity 1024, "
                  f"rss {sr['full']['max_rss_mb']:.0f}MB, parity ok"))
+
+    cl = bench_stream_closed_loop(n_jobs=8192, capacity=1024)
+    rows.append(("sim_stream_closed_8k", cl["full"]["seconds"] * 1e6,
+                 f"{cl['full']['jobs_per_sec']:.0f} jobs/s, load 2.0, "
+                 f"{cl['full']['rounds']} rounds, capacity 1024, "
+                 f"spilled {cl['full']['n_spilled']}, "
+                 f"rss {cl['full']['max_rss_mb']:.0f}MB, parity ok"))
 
     t0 = time.perf_counter()
     api.scenario_sweep(

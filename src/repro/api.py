@@ -216,7 +216,8 @@ def run_stream(scenario: str = DEFAULT_SCENARIO,
                seed: Optional[int] = None,
                mode: Optional[str] = None,
                trace: bool = False,
-               trace_capacity: Optional[int] = None) -> ExperimentResult:
+               trace_capacity: Optional[int] = None,
+               admission=None) -> ExperimentResult:
     """Replay a scenario through the streaming macro-round engine
     (``core/stream``, DESIGN.md §10) — bounded memory, arbitrary trace
     length, results bit-identical to ``engine="jax"`` on the same
@@ -227,10 +228,15 @@ def run_stream(scenario: str = DEFAULT_SCENARIO,
     one fall back to a chunked view of the built JobSet), or from an
     explicit ``source`` (a ``core.stream.JobSource``). ``capacity``
     bounds in-flight jobs — memory scales with it, not with the trace
-    (default ``stream.default_capacity(cfg)``). ``.raw`` holds the
+    (default ``stream.default_capacity(cfg)``). ``admission`` turns on
+    closed-loop arrivals (paper §4.2): the source's submit times are
+    re-stamped as admit ticks holding the FIFO-normalized backlog at
+    ``cfg.workload.load`` (``admission=True``) or at an explicit float
+    target — the streamed twin of the registry's closed-loop
+    scenarios. ``.raw`` holds the
     :class:`repro.core.stream.StreamResult` (per-job arrays, round
-    count, peak live jobs); ``.events`` the gid-remapped canonical
-    stream when traced.
+    count, peak live jobs, spill counters); ``.events`` the
+    gid-remapped canonical stream when traced.
     """
     from repro.core import stream
     if mode not in (None, "event", "tick"):
@@ -243,7 +249,8 @@ def run_stream(scenario: str = DEFAULT_SCENARIO,
         source = scenarios.get_source(scenario, cfg)
     eng = stream.StreamEngine(cfg, source, capacity=capacity,
                               time_mode=mode, trace=trace,
-                              trace_capacity=trace_capacity)
+                              trace_capacity=trace_capacity,
+                              admission=admission)
     res = eng.run()
     summary = res.summary()
     table = {k: {p: float(v) for p, v in summary[k].items()}

@@ -117,6 +117,32 @@ class SchedulerCore:
 
     # -- dynamic workloads (controller) -------------------------------------
 
+    def grow_to(self, n: int) -> None:
+        """Grow every per-job array to at least ``n`` slots in one step
+        (amortized O(1) per slot, vs :meth:`add_job`'s O(n) copy per
+        call). Slot-pool drivers (``core/stream/admission.py``) recycle
+        ids and grow by doubling; the new slots are inert — NOT_ARRIVED
+        and never queued, invisible to scheduling until a driver
+        initializes and enqueues them."""
+        cur = self.state.size
+        if n <= cur:
+            return
+        k = int(n) - cur
+
+        def pad(arr, fill):
+            ext = np.full((k,) + arr.shape[1:], fill, arr.dtype)
+            return np.concatenate([arr, ext])
+
+        self.demand = pad(self.demand, 0.0)
+        self.is_te = pad(self.is_te, False)
+        self.width = pad(self.width, 1)
+        self.state = pad(self.state, NOT_ARRIVED)
+        self.node = pad(self.node, -1)
+        self.preempt_count = pad(self.preempt_count, 0)
+        self.grace_left = pad(self.grace_left, 0)
+        self.victim_of = pad(self.victim_of, -1)
+        self.te_pending = pad(self.te_pending, 0)
+
     def add_job(self, demand, is_te: bool, width: int = 1) -> int:
         """Register one more job; returns its id."""
         j = self.demand.shape[0]

@@ -41,6 +41,48 @@ from repro.core.types import JobSet, PreemptionEvent, SimResult
 from repro.obs import schema as obs_schema
 
 
+def admission_fraction(demand: np.ndarray, n_nodes: np.ndarray,
+                       node_cap: np.ndarray,
+                       cluster_nodes: int) -> np.ndarray:
+    """Per-job FIFO-normalized load fraction (DESIGN.md §3): the mean
+    of the three cluster-normalized resources times the gang width.
+    One definition, shared by the monolithic closed-loop Simulator and
+    the streaming admission controller (``core/stream/admission.py``)
+    — both must accumulate bit-identical fractions for their admit
+    times to agree exactly. Row-wise, so chunked evaluation equals the
+    whole-jobset evaluation bit for bit."""
+    cluster_cap = node_cap * cluster_nodes
+    return (demand / cluster_cap[None, :]).mean(axis=1) * n_nodes
+
+
+class AdmissionGate:
+    """Closed-loop admission state (paper §4.2): a scalar backlog
+    accumulator over :func:`admission_fraction` values. ``admit`` /
+    ``release`` are the ONLY mutations, and both drivers (monolithic
+    and streamed) call them in the same global order — admits in job
+    index order, releases in finish-tick-then-index order — so the
+    float accumulation (and therefore every ``wants_next`` decision)
+    is bit-identical between them."""
+
+    def __init__(self, target: float):
+        self.target = float(target)
+        self.load = 0.0
+
+    @property
+    def active(self) -> bool:
+        return self.target > 0
+
+    def wants_next(self) -> bool:
+        """Is the backlog below target, i.e. is an admission due?"""
+        return self.load < self.target
+
+    def admit(self, frac) -> None:
+        self.load += frac
+
+    def release(self, frac) -> None:
+        self.load -= frac
+
+
 class Simulator:
     def __init__(self, cfg: SimConfig, jobs: JobSet,
                  admission_target: float = 0.0, trace: bool = False):
@@ -58,9 +100,9 @@ class Simulator:
         self.cfg = cfg
         self.jobs = jobs
         self.admission_target = admission_target
+        self.gate = AdmissionGate(admission_target)
         self.trace_events = [] if trace else None
         self.admit_time = np.full(jobs.n, -1, np.int64)
-        self._load = 0.0
         self.policy = policy_registry.make(cfg.policy, s=cfg.s)
         self.node_cap = np.asarray(cfg.cluster.node.as_tuple(), np.float64)
         self.n_nodes = cfg.cluster.n_nodes
@@ -95,9 +137,8 @@ class Simulator:
         order = np.argsort(jobs.submit, kind="stable")
         self.arrival_order = order
         self._next_arrival = 0
-        cluster_cap = self.node_cap * self.n_nodes
-        self.frac = (jobs.demand / cluster_cap[None, :]).mean(axis=1) \
-            * jobs.n_nodes
+        self.frac = admission_fraction(jobs.demand, jobs.n_nodes,
+                                       self.node_cap, self.n_nodes)
 
     # -- result bookkeeping (driver-side, via core hooks) --------------------
 
@@ -196,15 +237,15 @@ class Simulator:
         jobs = self.jobs
         core = self.core
         # arrivals
-        if self.admission_target > 0:
+        if self.gate.active:
             # closed-loop: admit next jobs while backlog < target
             while (self._next_arrival < jobs.n and
-                   self._load < self.admission_target):
+                   self.gate.wants_next()):
                 j = self._next_arrival
                 core.enqueue(j)
                 self._emit(t, obs_schema.SUBMIT, j)
                 self.admit_time[j] = t
-                self._load += self.frac[j]
+                self.gate.admit(self.frac[j])
                 self._next_arrival += 1
         else:
             while (self._next_arrival < jobs.n and
@@ -224,7 +265,7 @@ class Simulator:
                 j = int(j)
                 core.finish(j, t + 1)
                 self.finish[j] = t + 1
-                self._load -= self.frac[j]
+                self.gate.release(self.frac[j])
         core.tick_clocks()
 
     # -- event-driven time advancement (DESIGN.md §4) ------------------------
@@ -236,9 +277,9 @@ class Simulator:
         if core.schedule_would_act():
             return t
         nxt = None
-        if self.admission_target > 0:
+        if self.gate.active:
             if (self._next_arrival < self.jobs.n and
-                    self._load < self.admission_target):
+                    self.gate.wants_next()):
                 return t                      # admission due next tick
         elif self._next_arrival < self.jobs.n:
             nxt = int(self.jobs.submit[

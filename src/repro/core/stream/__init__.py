@@ -6,22 +6,32 @@ pool over ``sim_jax`` (``StreamEngine``), fed by chunked
 streaming trace readers, or any jobset via ``from_jobset``), with
 per-round event/result draining. Memory scales with ``capacity``
 (in-flight jobs), not trace length; results are bit-identical to the
-monolithic engine (``verify_prefix_parity``).
+monolithic engine (``verify_prefix_parity``). Closed-loop arrivals
+(paper §4.2, load 2.0) stream through the same pool via
+``ClosedLoopAdmission`` / ``StreamEngine(..., admission=True)``
+(``verify_closed_loop_parity``).
 
     from repro.core import stream, workload
     src = stream.JobSource(workload.stream_chunks(cfg, 100_000))
     res = stream.StreamEngine(cfg, src, capacity=512).run()
     res.summary()["BE"]["p95"], res.rounds, res.max_live
 """
-from repro.core.stream.engine import (DEFAULT_SLOTS_PER_NODE,
+from repro.core.stream.admission import (ClosedLoopAdmission,
+                                         closed_loop_source,
+                                         verify_admission_parity)
+from repro.core.stream.engine import (AKEY_GID_LIMIT,
+                                      DEFAULT_SLOTS_PER_NODE,
                                       StreamEngine, StreamResult,
                                       default_capacity,
+                                      verify_closed_loop_parity,
                                       verify_prefix_parity)
 from repro.core.stream.source import (JobSource, ScanStats, from_jobset,
                                       materialize, scan)
 
 __all__ = [
-    "DEFAULT_SLOTS_PER_NODE", "JobSource", "ScanStats", "StreamEngine",
-    "StreamResult", "default_capacity", "from_jobset", "materialize",
-    "scan", "verify_prefix_parity",
+    "AKEY_GID_LIMIT", "ClosedLoopAdmission", "DEFAULT_SLOTS_PER_NODE",
+    "JobSource", "ScanStats", "StreamEngine", "StreamResult",
+    "closed_loop_source", "default_capacity", "from_jobset",
+    "materialize", "scan", "verify_admission_parity",
+    "verify_closed_loop_parity", "verify_prefix_parity",
 ]

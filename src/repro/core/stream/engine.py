@@ -29,9 +29,19 @@ A slot is recyclable when its job is DONE and no in-grace victim
 still references it (``victim_of`` points at TE slots; vacates
 decrement ``te_pending`` through it, so a referenced slot must
 survive until the grace period resolves). When the pool is full and
-an unpacked arrival is overdue the engine raises loudly — a pool of
-``capacity`` slots provably cannot represent that backlog, and any
-silent fallback would break the parity contract.
+an unpacked arrival is overdue, the overdue jobs SPILL to an explicit
+host-side FIFO (:class:`_SpillQueue`, order preserved) and rounds
+shrink to one tick until slots free up — saturated load degrades
+gracefully instead of aborting. Spilling is NOT silent and NOT
+parity-preserving: a spilled job is packed later than it arrived, so
+the scheduler could not have considered it in between; ``n_spilled``
+is surfaced on the result and :func:`verify_prefix_parity` rejects
+spilled runs (DESIGN.md §10).
+
+Closed-loop arrivals (``admission=``): the source is wrapped in
+``admission.ClosedLoopAdmission``, which discards the stream's submit
+times and re-stamps closed-loop admit ticks — the paper's §4.2
+load-2.0 regime in bounded memory (:func:`verify_closed_loop_parity`).
 """
 from __future__ import annotations
 
@@ -44,7 +54,8 @@ import numpy as np
 
 from repro.configs.cluster import SimConfig
 from repro.core import sim_jax, workload
-from repro.core.stream.source import JobSource, materialize
+from repro.core.stream.source import _FIELDS, JobSource, materialize
+from repro.core.types import JobSet
 from repro.obs import ring as obs_ring
 from repro.obs import schema as obs_schema
 
@@ -53,6 +64,12 @@ from repro.obs import schema as obs_schema
 DEFAULT_SLOTS_PER_NODE = 32
 
 _MAX_TICKS = 1 << 22       # must match sim_jax's stall terminal
+
+# ``Jobs.akey`` carries the global sequence number as float32, whose
+# exact-integer range ends at 2^24: the next gid would round onto the
+# previous one, silently breaking queue-key / requeue / victim
+# tie-break global arrival order. Packing past this limit raises.
+AKEY_GID_LIMIT = 1 << 24
 
 # aux carries a TE job id (not a count) on these codes — remapped
 # slot->gid at drain time like the job column itself
@@ -125,6 +142,54 @@ def _pack(jobs: sim_jax.Jobs, st: sim_jax.State, slots: jax.Array,
     return jobs, st
 
 
+class _SpillQueue:
+    """Host-side FIFO for arrivals that are due while every slot is
+    occupied (module docstring): jobs move here from the source in
+    stream order and are packed back out spill-first, so the global
+    arrival order — and therefore the gid sequence — is preserved
+    exactly. ``n`` is the current depth, ``peak``/``total`` the
+    high-water mark and the lifetime spill count surfaced on
+    :class:`StreamResult`."""
+
+    def __init__(self):
+        self._chunks: List[JobSet] = []
+        self._off = 0
+        self.n = 0
+        self.peak = 0
+        self.total = 0
+
+    def push(self, js: JobSet) -> None:
+        self._chunks.append(js)
+        self.n += js.n
+        self.total += js.n
+        if self.n > self.peak:
+            self.peak = self.n
+
+    def peek_submit(self) -> Optional[int]:
+        if not self._chunks:
+            return None
+        return int(self._chunks[0].submit[self._off])
+
+    def take(self, k: int) -> Optional[JobSet]:
+        parts: List[tuple] = []
+        got = 0
+        while got < k and self._chunks:
+            js = self._chunks[0]
+            n = min(k - got, js.n - self._off)
+            parts.append((js, self._off, self._off + n))
+            self._off += n
+            got += n
+            if self._off == js.n:
+                self._chunks.pop(0)
+                self._off = 0
+        if got == 0:
+            return None
+        self.n -= got
+        return JobSet(**{
+            f: np.concatenate([getattr(js, f)[a:b] for js, a, b in parts])
+            for f in _FIELDS})
+
+
 def _np_masked_percentiles(vals, mask, ps) -> Dict[str, float]:
     """numpy twin of ``sim_jax.masked_percentiles`` (same NaN-safe
     empty-class semantics, same linear interpolation)."""
@@ -159,6 +224,12 @@ class StreamResult:
     last_vacate: np.ndarray = field(repr=False)
     last_resume: np.ndarray = field(repr=False)
     events: Optional[List] = field(repr=False, default=None)
+    # jobs that were due while the pool was full and waited in the
+    # host spill queue (lifetime count / high-water depth). Nonzero
+    # means the run left the bit-parity domain — the backlog outgrew
+    # the pool and packing was delayed (module docstring).
+    n_spilled: int = 0
+    spill_peak: int = 0
 
     def slowdown(self) -> np.ndarray:
         waiting = self.finish - self.submit - self.exec_total
@@ -177,6 +248,7 @@ class StreamResult:
             iv, self.last_resume >= 0, (50, 75, 95, 99))
         out["fallback_count"] = self.fallback_count
         out["trace_overflow"] = self.trace_overflow
+        out["n_spilled"] = self.n_spilled
         return out
 
 
@@ -188,6 +260,14 @@ class StreamEngine:
     sink, the corresponding stream is NOT accumulated — true
     O(capacity) memory end to end; without one, results (a few scalars
     per job) and traced events are collected into the result.
+
+    ``admission``: closed-loop arrival mode (paper §4.2). A float is
+    the FIFO-normalized backlog target; ``True`` uses
+    ``cfg.workload.load``. The source is wrapped in
+    ``admission.ClosedLoopAdmission`` — its submit times are discarded
+    and re-stamped as closed-loop admit ticks, bit-exact with the
+    monolithic ``workload.closed_loop_submit_times``. ``None``/``0``
+    keeps the open-loop path.
     """
 
     def __init__(self, cfg: SimConfig, source: JobSource,
@@ -196,8 +276,17 @@ class StreamEngine:
                  trace: bool = False,
                  trace_capacity: Optional[int] = None,
                  event_sink: Optional[Callable] = None,
-                 result_sink: Optional[Callable] = None):
+                 result_sink: Optional[Callable] = None,
+                 admission=None):
         self.cfg = cfg
+        self.admission: Optional[float] = None
+        if admission:
+            from repro.core.stream.admission import ClosedLoopAdmission
+            target = (cfg.workload.load if admission is True
+                      else float(admission))
+            self.admission = target
+            source = JobSource(
+                ClosedLoopAdmission(cfg, source, target=target))
         self.source = source
         self.capacity = int(capacity if capacity is not None
                             else default_capacity(cfg))
@@ -212,9 +301,44 @@ class StreamEngine:
 
     # -- host-side round phases --------------------------------------
 
+    def _reset(self) -> None:
+        """Fresh per-run host state (factored out of ``run`` so tests
+        can interpose — e.g. forging ``_n_seen`` to hit the akey
+        limit without packing 2^24 jobs)."""
+        self._slot_gid = np.full(self.capacity, -1, np.int64)
+        self._harvested = np.zeros(self.capacity, bool)
+        self._n_seen = 0
+        self._overflow = 0
+        self._events: List = []
+        self._batches: List[dict] = []
+        self._spill = _SpillQueue()
+
+    def _take_arrivals(self, k: int) -> Optional[JobSet]:
+        """Pull up to ``k`` jobs, spill queue first: spilled jobs
+        arrived before anything still in the source, so draining them
+        first keeps the gid sequence in global arrival order."""
+        parts: List[JobSet] = []
+        got = 0
+        js = self._spill.take(k)
+        if js is not None:
+            parts.append(js)
+            got = js.n
+        if got < k:
+            js = self.source.take(k - got)
+            if js is not None:
+                parts.append(js)
+        if not parts:
+            return None
+        if len(parts) == 1:
+            return parts[0]
+        return JobSet(**{
+            f: np.concatenate([getattr(js, f) for js in parts])
+            for f in _FIELDS})
+
     def _pack_round(self, jobs, st, state_h):
-        """Recycle free slots with the next arrivals; returns the
-        updated pool and the round boundary (next unpacked submit)."""
+        """Recycle free slots with the next arrivals (spill queue
+        first); returns the updated pool and the round boundary (next
+        unpacked submit)."""
         cap = self.capacity
         # a DONE TE slot referenced by an in-grace victim is NOT
         # recyclable: its vacate still decrements te_pending there
@@ -226,9 +350,16 @@ class StreamEngine:
         free = np.flatnonzero((state_h == sim_jax.DONE) & ~ref)
         n_packed = 0
         if free.size:
-            js = self.source.take(int(free.size))
+            js = self._take_arrivals(int(free.size))
             if js is not None:
                 n_packed = js.n
+                if self._n_seen + n_packed > AKEY_GID_LIMIT:
+                    raise RuntimeError(
+                        f"stream gid would pass {AKEY_GID_LIMIT} "
+                        f"(2^24), the float32 akey exact-integer "
+                        "limit: queue keys would collide and global "
+                        "arrival order would silently break. Split "
+                        "the replay at this boundary.")
                 slots = np.full(cap, cap, np.int32)    # cap = dropped
                 slots[:n_packed] = free[:n_packed]
                 gids = np.arange(self._n_seen,
@@ -248,15 +379,19 @@ class StreamEngine:
                 self._slot_gid[free[:n_packed]] = gids
                 self._harvested[free[:n_packed]] = False
                 self._n_seen += n_packed
-        nxt = self.source.peek_submit()
+        nxt = self._spill.peek_submit()
+        if nxt is None:
+            nxt = self.source.peek_submit()
         if (nxt is not None and nxt <= int(st.t)
                 and free.size - n_packed == 0):
-            raise RuntimeError(
-                f"stream pool starved: all {cap} slots hold unfinished "
-                f"jobs but job {self._n_seen} (submit t={nxt}) is "
-                f"already due at t={int(st.t)} — the in-flight backlog "
-                "exceeds the pool; raise capacity (--capacity / "
-                "StreamEngine(capacity=...))")
+            # saturated: arrivals are overdue and every slot is busy.
+            # Move the whole due prefix to the host spill queue (stream
+            # order preserved) and shrink the round to one tick so the
+            # next pack sees freshly freed slots as soon as possible.
+            moved = self.source.take_due(int(st.t))
+            if moved is not None:
+                self._spill.push(moved)
+            nxt = int(st.t) + 1
         return jobs, st, nxt
 
     def _pad(self, a, dtype):
@@ -318,12 +453,7 @@ class StreamEngine:
         st = sim_jax.init_state(
             jobs, n_nodes, cfg.cluster.node.as_tuple(), cfg.seed,
             trace_capacity=self.trace_capacity if self.trace else 0)
-        self._slot_gid = np.full(cap, -1, np.int64)
-        self._harvested = np.zeros(cap, bool)
-        self._n_seen = 0
-        self._overflow = 0
-        self._events: List = []
-        self._batches: List[dict] = []
+        self._reset()
         rounds, n_done, max_live = 0, 0, 0
 
         while True:
@@ -373,25 +503,30 @@ class StreamEngine:
             final_rng=np.asarray(jax.random.key_data(st.rng)),
             events=(self._events if self.trace
                     and self.event_sink is None else None),
+            n_spilled=self._spill.total, spill_peak=self._spill.peak,
             **cols)
 
 
-def verify_prefix_parity(cfg: SimConfig, n_jobs: int = 512,
-                         capacity: int = 160, chunk: int = 128,
-                         time_mode: Optional[str] = None) -> List[str]:
-    """The parity-window contract, executable: stream a synthetic
-    prefix through the macro-round engine AND run the identical
-    materialized jobset through the monolithic ``sim_jax`` engine;
-    return the names of any per-job/result fields that differ (empty
-    list == bit-exact parity). Raises if either run leaves the
-    deterministic domain (``fallback_count != 0``). Used by the bench
-    parity rows, the CI smoke and the stream test suite."""
+def _reject_spilled(res: StreamResult) -> None:
+    """Spilled jobs were packed later than they arrived, so the
+    scheduler could not have considered them in between — the run left
+    the bit-parity domain (module docstring). Checked BEFORE the
+    monolithic comparison run: a spilled saturated run often also
+    stalls or diverges monolithically."""
+    if res.n_spilled:
+        raise ValueError(
+            f"parity window does not cover spilled runs: "
+            f"{res.n_spilled} jobs waited in the host spill queue "
+            f"(peak depth {res.spill_peak}) because the pool was "
+            "full while they were due; raise capacity")
+
+
+def _diff_vs_monolithic(cfg: SimConfig, res: StreamResult, js: JobSet,
+                        time_mode: Optional[str]) -> List[str]:
+    """Run ``js`` through the monolithic ``sim_jax`` engine and return
+    the names of any per-job/result fields that differ from the
+    streamed result ``res`` (empty list == bit-exact parity)."""
     from repro.core import policy_registry
-    src = JobSource(workload.stream_chunks(cfg, n_jobs, chunk=chunk))
-    res = StreamEngine(cfg, src, capacity=capacity,
-                       time_mode=time_mode).run()
-    js = materialize(JobSource(
-        workload.stream_chunks(cfg, n_jobs, chunk=chunk)))
     jobs = sim_jax.jobs_from_jobset(js)
     st = sim_jax.run_jit(cfg, jobs, cfg.seed, time_mode=time_mode)
     # Score policies' random fallback draws from a pool-size-dependent
@@ -417,3 +552,47 @@ def verify_prefix_parity(cfg: SimConfig, n_jobs: int = 512,
             == np.asarray(jax.random.key_data(st.rng))).all():
         diff.append("rng")
     return diff
+
+
+def verify_prefix_parity(cfg: SimConfig, n_jobs: int = 512,
+                         capacity: int = 160, chunk: int = 128,
+                         time_mode: Optional[str] = None) -> List[str]:
+    """The parity-window contract, executable: stream a synthetic
+    prefix through the macro-round engine AND run the identical
+    materialized jobset through the monolithic ``sim_jax`` engine;
+    return the names of any per-job/result fields that differ (empty
+    list == bit-exact parity). Raises if either run leaves the
+    deterministic domain (``fallback_count != 0``) or the streamed run
+    spilled. Used by the bench parity rows, the CI smoke and the
+    stream test suite."""
+    src = JobSource(workload.stream_chunks(cfg, n_jobs, chunk=chunk))
+    res = StreamEngine(cfg, src, capacity=capacity,
+                       time_mode=time_mode).run()
+    _reject_spilled(res)
+    js = materialize(JobSource(
+        workload.stream_chunks(cfg, n_jobs, chunk=chunk)))
+    return _diff_vs_monolithic(cfg, res, js, time_mode)
+
+
+def verify_closed_loop_parity(cfg: SimConfig, n_jobs: int = 400,
+                              capacity: int = 160, chunk: int = 64,
+                              time_mode: Optional[str] = None
+                              ) -> List[str]:
+    """Closed-loop twin of :func:`verify_prefix_parity`: stream a
+    synthetic prefix through the engine with ``admission=True`` AND
+    run the monolithic pipeline (``closed_loop_submit_times`` to stamp
+    admit ticks, then ``sim_jax.run_jit``) on the same job data;
+    return the names of any differing fields. Checks the admit ticks
+    themselves (``"admit_time"``) on top of the scheduler outcome, so
+    an empty list proves the whole streamed closed-loop path —
+    admission controller AND macro-round engine — is bit-exact."""
+    src = JobSource(workload.stream_chunks(cfg, n_jobs, chunk=chunk))
+    res = StreamEngine(cfg, src, capacity=capacity, time_mode=time_mode,
+                       admission=True).run()
+    _reject_spilled(res)
+    data = materialize(JobSource(
+        workload.stream_chunks(cfg, n_jobs, chunk=chunk)))
+    data.submit = workload.closed_loop_submit_times(cfg, data)
+    diff = ([] if np.array_equal(res.submit, data.submit)
+            else ["admit_time"])
+    return diff + _diff_vs_monolithic(cfg, res, data, time_mode)

@@ -101,6 +101,32 @@ class JobSource:
 
         return JobSet(**{f: cat(f) for f in _FIELDS})
 
+    def take_due(self, t: int) -> Optional[JobSet]:
+        """Pull every job whose submit time is ``<= t`` (in stream
+        order) as one JobSet; None when no job is due. The engine's
+        spill path: arrivals already overdue that the slot pool cannot
+        hold move to an explicit host queue, preserving stream order
+        (DESIGN.md §10)."""
+        parts: List[tuple] = []
+        got = 0
+        while self._refill():
+            js, off = self._head, self._off
+            # chunks are submit-sorted, so the due prefix is a slice
+            n = int(np.searchsorted(js.submit[off:], t, side="right"))
+            if n == 0:
+                break
+            parts.append((js, off, off + n))
+            self._off = off + n
+            got += n
+            if self._off < js.n:
+                break                     # first not-yet-due job reached
+        if got == 0:
+            return None
+        self.n_taken += got
+        return JobSet(**{
+            f: np.concatenate([getattr(js, f)[a:b] for js, a, b in parts])
+            for f in _FIELDS})
+
 
 @dataclass
 class ScanStats:

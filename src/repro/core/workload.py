@@ -85,12 +85,12 @@ def generate(cfg: SimConfig, seed: int = None) -> JobSet:
     node_cap = np.asarray(cfg.cluster.node.as_tuple())
     js = JobSet(submit=np.zeros(n, np.int64), exec_total=exec_total,
                 demand=demand, is_te=is_te, gp=gp, n_nodes=n_nodes)
-    js.submit = _closed_loop_submit_times(cfg, js)
+    js.submit = closed_loop_submit_times(cfg, js)
     js.validate(node_cap)
     return js
 
 
-def _closed_loop_submit_times(cfg: SimConfig, js: JobSet) -> np.ndarray:
+def closed_loop_submit_times(cfg: SimConfig, js: JobSet) -> np.ndarray:
     """Paper §4.2: jobs are submitted "at such a rate that the cluster
     load ... would be kept at 2.0 if they were scheduled by FIFO".
 
@@ -100,14 +100,27 @@ def _closed_loop_submit_times(cfg: SimConfig, js: JobSet) -> np.ndarray:
     admit times become the open-loop submit times used by EVERY policy.
     (An open-loop Poisson rate at load>1 would grow the queue without
     bound, contradicting the paper's bounded slowdowns — see DESIGN §3.)
+    The streamed twin — same admit times, bit for bit, in bounded
+    memory — is ``core/stream/admission.py``.
     """
     from repro.core.simulator import Simulator
     import dataclasses
     fifo_cfg = dataclasses.replace(cfg, policy="fifo")
     sim = Simulator(fifo_cfg, js, admission_target=cfg.workload.load)
     sim.run()
-    assert (sim.admit_time >= 0).all()
+    bad = np.flatnonzero(sim.admit_time < 0)
+    if bad.size:
+        # a bare assert here is stripped under ``python -O``, silently
+        # corrupting every downstream submit ordering — fail loudly
+        raise ValueError(
+            f"closed-loop admission left job {int(bad[0])} with a "
+            f"negative admit time ({bad.size} of {js.n} jobs "
+            "unadmitted) — FIFO admission simulation ended early")
     return sim.admit_time.copy()
+
+
+# backward-compatible alias (pre-PR-9 private name)
+_closed_loop_submit_times = closed_loop_submit_times
 
 
 def generate_trace_proxy(cfg: SimConfig, seed: int = None) -> JobSet:
@@ -199,10 +212,13 @@ def stream_chunks(cfg: SimConfig, n_jobs: int = None, chunk: int = 1024,
     any chunk is reproducible without generating its prefix.
 
     Arrivals are open-loop (exponential gaps at the :func:`stream_rate`
-    rate, the §4.4 trace-proxy model): the paper's §4.2 closed-loop
-    admission needs a full FIFO simulation over the whole jobset and
-    cannot stream. Class/GP/width sampling matches :func:`generate`'s
-    samplers per chunk."""
+    rate, the §4.4 trace-proxy model). For the paper's §4.2 closed-loop
+    admission, wrap this stream in
+    ``core/stream/admission.ClosedLoopAdmission`` (which discards these
+    submit times and re-stamps admit ticks from its incremental FIFO
+    backlog simulation — bit-exact with
+    :func:`closed_loop_submit_times`). Class/GP/width sampling matches
+    :func:`generate`'s samplers per chunk."""
     wl = cfg.workload
     seed = cfg.seed if seed is None else seed
     n_total = int(wl.n_jobs if n_jobs is None else n_jobs)

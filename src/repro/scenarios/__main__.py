@@ -90,12 +90,17 @@ def cmd_run(args) -> None:
     if args.stream:
         r = api.run_stream(args.name, cfg.policy, cfg=cfg,
                            capacity=args.capacity, mode=args.mode,
-                           trace=bool(args.trace))
+                           trace=bool(args.trace),
+                           admission=(True if args.closed_loop else None))
         res = r.raw
-        print(f"{args.name}: {res.n_jobs} jobs streamed through "
+        arrivals = ("closed-loop "
+                    f"(load {cfg.workload.load:g}) " if args.closed_loop
+                    else "")
+        print(f"{args.name}: {res.n_jobs} jobs streamed {arrivals}through "
               f"{res.capacity} slots in {res.rounds} rounds "
-              f"(peak live {res.max_live}), policy={cfg.policy}, "
-              f"engine=stream, nodes={cfg.cluster.n_nodes}")
+              f"(peak live {res.max_live}, spilled {res.n_spilled}), "
+              f"policy={cfg.policy}, engine=stream, "
+              f"nodes={cfg.cluster.n_nodes}")
         print(metrics.format_table(
             {r.policy: r.table},
             f"slowdown percentiles (makespan {r.makespan} min)"))
@@ -216,6 +221,12 @@ def main(argv=None) -> None:
     p.add_argument("--capacity", type=int, default=None,
                    help="streaming slot-pool size (default "
                         "32 x nodes x max_preemptions)")
+    p.add_argument("--closed-loop", action="store_true",
+                   help="with --stream: re-stamp the source's submit "
+                        "times as closed-loop admit ticks holding the "
+                        "FIFO backlog at the workload load (paper "
+                        "§4.2; bit-exact with the monolithic "
+                        "closed-loop scenarios)")
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("sweep", help="ragged multi-scenario JAX sweep")

@@ -361,3 +361,35 @@ def stream_synthetic(cfg: SimConfig) -> JobSet:
     engines."""
     from repro.core.stream.source import materialize
     return materialize(_stream_synthetic_source(cfg))
+
+
+def _stream_closed_loop_source(cfg: SimConfig):
+    from repro.core.stream.admission import ClosedLoopAdmission
+    from repro.core.stream.source import JobSource
+    return JobSource(ClosedLoopAdmission(
+        cfg, JobSource(workload.stream_chunks(cfg))))
+
+
+@register_scenario(
+    "stream-closed-loop", kind=SYNTHETIC,
+    source=_stream_closed_loop_source,
+    knobs={"n_jobs": "total jobs (workload.n_jobs; streams O(backlog))",
+           "load": "FIFO-normalized backlog target (workload.load, "
+                   "2.0 = the paper's saturated regime)",
+           "chunk": "generator chunk size, jobs (1024)"})
+def stream_closed_loop(cfg: SimConfig) -> JobSet:
+    """The §4.2 closed-loop arrival regime in streamable form: the
+    chunked synthetic job data of ``stream-synthetic`` with its
+    open-loop submit times re-stamped as closed-loop admit ticks
+    (``stream.ClosedLoopAdmission``) holding the FIFO-normalized
+    backlog at ``workload.load``. Saturated loads (2.0) stream in
+    O(backlog + chunk) memory — the closed loop itself bounds the
+    backlog, so no fixed pool starves. This registry entry computes
+    the identical admit ticks monolithically
+    (``workload.closed_loop_submit_times``) for the non-streaming
+    engines; streamed and monolithic runs are bit-exact
+    (``stream.verify_closed_loop_parity``)."""
+    from repro.core.stream.source import JobSource, materialize
+    js = materialize(JobSource(workload.stream_chunks(cfg)))
+    js.submit = workload.closed_loop_submit_times(cfg, js)
+    return js

@@ -1,0 +1,26 @@
+"""Host-side units of the benchmark harness (benchmarks/).
+
+The bench package is importable because pytest runs from the repo
+root; skip cleanly anywhere it is not on sys.path.
+"""
+import pytest
+
+bench = pytest.importorskip("benchmarks.sim_engine_bench")
+
+
+def test_rss_divisor_platform_units():
+    """``ru_maxrss`` is kilobytes on Linux but BYTES on macOS — a
+    wrong divisor inflates or deflates every max_rss_mb bench row by
+    1024x, silently voiding the bounded-memory claim."""
+    assert bench._rss_divisor("darwin") == 1 << 20
+    assert bench._rss_divisor("linux") == 1 << 10
+    assert bench._rss_divisor("linux2") == 1 << 10
+    # default resolves the running platform to one of the two units
+    assert bench._rss_divisor() in (1 << 10, 1 << 20)
+
+
+def test_rss_mb_sane():
+    """A live python process peaks well above 10MB and (on a test box)
+    below a TB — catches unit slips in either direction."""
+    mb = bench._rss_mb()
+    assert 10.0 < mb < 1 << 20

@@ -245,6 +245,18 @@ class TestWorkload:
         assert np.array_equal(a.submit, b.submit)
         assert np.array_equal(a.demand, b.demand)
 
+    def test_unadmitted_job_raises_with_index(self, monkeypatch):
+        """If the FIFO admission sim ends early, closed_loop_submit_times
+        must raise a ValueError naming the first offending job — not a
+        bare assert (stripped under ``python -O``) or silent -1 submit
+        times corrupting every downstream ordering."""
+        from repro.core import simulator
+        monkeypatch.setattr(simulator.Simulator, "run",
+                            lambda self, *a, **k: None)
+        cfg = SimConfig(workload=WorkloadSpec(n_jobs=32))
+        with pytest.raises(ValueError, match=r"job 0"):
+            workload.generate(cfg)
+
     def test_te_fraction(self):
         cfg = SimConfig(workload=WorkloadSpec(n_jobs=4096, te_fraction=0.3))
         js = workload.generate(cfg)
