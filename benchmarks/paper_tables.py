@@ -1,9 +1,25 @@
 """Paper-table benchmarks: one function per table/figure of the paper.
 
+table1/table4/fig4/fig5/fig6/fig7 run through the sweep fabric
+(``repro.core.sweep_fabric``, DESIGN.md §11): for each policy, every
+(cell × workload × repeat) trial of a table is flattened into ONE
+trial table — s, P and seed ride as traced per-trial columns — so the
+whole table is a single compile and a single device dispatch, sharded
+across every visible device (``mesh_for_sweep``; plain vmap on one
+device, bit-identical either way). Pooling per cell happens on host
+from the per-job outputs. table5 stays on the reference engine as the
+cross-engine spot check.
+
+Resched-interval percentiles from the fabric are the JAX engine's
+last-gap statistic (one signal→resume gap per job — the same number
+``api.run_experiment(engine="jax")`` reports), where the reference
+engine pools every gap; preemption counts and slowdowns agree across
+engines for the deterministic policies.
+
 Scale: REPRO_BENCH_SCALE=small (default; 2^12 jobs × 2 workloads — CI
-friendly) or full (paper scale: 2^16 jobs × 8 workloads, RAND averaged
-over 4 repeats). All results land in experiments/repro/*.json and are
-summarized by EXPERIMENTS.md §Repro.
+friendly), full (paper scale: 2^16 jobs × 8 workloads, RAND averaged
+over 4 repeats) or tiny (2^9 jobs — smoke). All results land in
+experiments/repro/*.json and are summarized by EXPERIMENTS.md §Repro.
 """
 from __future__ import annotations
 
@@ -11,33 +27,59 @@ import dataclasses
 import json
 import os
 import time
-from typing import Dict, List
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.cluster import SimConfig, WorkloadSpec
-from repro.core import metrics, simulator, workload
+from repro.core import metrics, simulator, sweep_fabric, workload
+from repro.core.types import JobSet
 
 OUT_DIR = "experiments/repro"
 POLICIES = ("fifo", "lrtp", "rand", "fitgpp")
 
+# one trial of a table: (cell key, workload, s, P, sim seed)
+Trial = Tuple[str, JobSet, float, int, int]
+
 
 def _scale():
-    full = os.environ.get("REPRO_BENCH_SCALE", "small") == "full"
+    scale = os.environ.get("REPRO_BENCH_SCALE", "small")
     return {
-        "n_jobs": 2 ** 16 if full else 2 ** 12,
-        "n_workloads": 8 if full else 2,
-        "rand_repeats": 4 if full else 1,
+        "n_jobs": {"full": 2 ** 16, "tiny": 2 ** 9}.get(scale, 2 ** 12),
+        "n_workloads": 8 if scale == "full" else 2,
+        "rand_repeats": 4 if scale == "full" else 1,
     }
 
 
 def _run_policy(cfg: SimConfig, jobs_list, policy: str, repeats: int = 1):
+    """Reference-engine path (table5 cross-engine spot check)."""
     results = []
     for rep in range(repeats):
         for jobs in jobs_list:
             c = dataclasses.replace(cfg, policy=policy, seed=cfg.seed + rep)
             results.append(simulator.simulate(c, jobs))
     return metrics.pooled_tables(metrics.merge_results(results))
+
+
+def _fabric_cells(policy: str, trials: Sequence[Trial],
+                  cfg: SimConfig) -> Dict[str, Dict]:
+    """Every trial of one table, one policy, ONE fabric run.
+
+    s/P/seed are traced per-trial columns, so the full table compiles
+    once per policy and dispatches once — sharded over the local
+    device mesh when more than one device is visible. Returns the
+    per-cell pooled tables (the paper pools its workloads per cell).
+    """
+    c = dataclasses.replace(cfg, policy=policy)
+    table = sweep_fabric.build_table(
+        [t[1] for t in trials],
+        np.asarray([t[2] for t in trials], np.float32),
+        np.asarray([t[3] for t in trials], np.int32),
+        np.asarray([t[4] for t in trials], np.uint32))
+    res = sweep_fabric.run_table(c, table, out="per_job", donate=False)
+    return {key: sweep_fabric.pooled_tables(
+                res, [i for i, t in enumerate(trials) if t[0] == key])
+            for key in dict.fromkeys(t[0] for t in trials)}
 
 
 def _gen_workloads(cfg: SimConfig, n: int, trace: bool = False):
@@ -54,7 +96,9 @@ def table1_slowdowns() -> Dict:
     out = {}
     for pol in POLICIES:
         reps = sc["rand_repeats"] if pol == "rand" else 1
-        out[pol] = _run_policy(cfg, jobs, pol, reps)
+        trials = [("all", js, 4.0, 1, cfg.seed + rep)
+                  for rep in range(reps) for js in jobs]
+        out[pol] = _fabric_cells(pol, trials, cfg)["all"]
     return out
 
 
@@ -64,12 +108,17 @@ def table4_preemption_counts() -> Dict:
     cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"]),
                     s=4.0, max_preemptions=10 ** 9)
     jobs = _gen_workloads(cfg, sc["n_workloads"])
-    return {pol: _run_policy(cfg, jobs, pol)
+    trials = [("all", js, 4.0, 10 ** 9, cfg.seed) for js in jobs]
+    return {pol: _fabric_cells(pol, trials, cfg)["all"]
             for pol in ("lrtp", "rand", "fitgpp")}
 
 
 def table5_trace() -> Dict:
-    """Table 5: heavy-tailed trace PROXY (real PFN trace is private)."""
+    """Table 5: heavy-tailed trace PROXY (real PFN trace is private).
+
+    Stays on the reference engine — the one per-policy loop kept as a
+    cross-engine spot check against the fabric tables.
+    """
     sc = _scale()
     cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"], load=1.3),
                     s=4.0, max_preemptions=1)
@@ -78,58 +127,79 @@ def table5_trace() -> Dict:
 
 
 def fig4_s_sensitivity() -> Dict:
-    """Fig. 4: slowdowns vs s (GP relative weight)."""
+    """Fig. 4: slowdowns vs s (GP relative weight).
+
+    Workload generation is independent of s, so every s-cell shares
+    the same jobsets and the whole figure is one fabric run with a
+    traced s column.
+    """
     sc = _scale()
-    out = {}
-    for s in (0.0, 1.0, 2.0, 4.0, 8.0):
-        cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"]),
-                        s=s, max_preemptions=1)
-        jobs = _gen_workloads(cfg, sc["n_workloads"])
-        out[str(s)] = _run_policy(cfg, jobs, "fitgpp")
-    return out
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"]),
+                    s=4.0, max_preemptions=1)
+    jobs = _gen_workloads(cfg, sc["n_workloads"])
+    trials = [(str(s), js, s, 1, cfg.seed)
+              for s in (0.0, 1.0, 2.0, 4.0, 8.0) for js in jobs]
+    return _fabric_cells("fitgpp", trials, cfg)
 
 
 def fig5_p_sensitivity() -> Dict:
     """Fig. 5: slowdowns vs P (max preemptions per job)."""
     sc = _scale()
-    out = {}
-    for P in (1, 2, 4, 16, 10 ** 9):
-        cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"]),
-                        s=4.0, max_preemptions=P)
-        jobs = _gen_workloads(cfg, sc["n_workloads"])
-        out[str(P)] = _run_policy(cfg, jobs, "fitgpp")
-    return out
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"]),
+                    s=4.0, max_preemptions=1)
+    jobs = _gen_workloads(cfg, sc["n_workloads"])
+    trials = [(str(P), js, 4.0, P, cfg.seed)
+              for P in (1, 2, 4, 16, 10 ** 9) for js in jobs]
+    return _fabric_cells("fitgpp", trials, cfg)
 
 
 def fig6_te_proportion() -> Dict:
     """Fig. 6: 95th-pct slowdowns vs TE fraction of the workload."""
     sc = _scale()
-    out = {}
-    for frac in (0.1, 0.3, 0.5, 0.7):
-        wl = WorkloadSpec(n_jobs=sc["n_jobs"], te_fraction=frac)
-        cfg = SimConfig(workload=wl, s=4.0, max_preemptions=1)
-        jobs = _gen_workloads(cfg, sc["n_workloads"])
-        out[str(frac)] = {pol: _run_policy(cfg, jobs, pol)
-                          for pol in POLICIES}
-    return out
+    fracs = (0.1, 0.3, 0.5, 0.7)
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"]),
+                    s=4.0, max_preemptions=1)
+    jobs = {frac: _gen_workloads(
+                dataclasses.replace(cfg, workload=WorkloadSpec(
+                    n_jobs=sc["n_jobs"], te_fraction=frac)),
+                sc["n_workloads"])
+            for frac in fracs}
+    trials = [(str(frac), js, 4.0, 1, cfg.seed)
+              for frac in fracs for js in jobs[frac]]
+    per_pol = {pol: _fabric_cells(pol, trials, cfg) for pol in POLICIES}
+    return {str(frac): {pol: per_pol[pol][str(frac)] for pol in POLICIES}
+            for frac in fracs}
 
 
 def fig7_gp_scale() -> Dict:
-    """Fig. 7: 95th-pct slowdowns vs GP length scale, s in {4, 8}."""
+    """Fig. 7: 95th-pct slowdowns vs GP length scale, s in {4, 8}.
+
+    The fitgpp run carries the s=8 cells as extra trials of the same
+    table (traced s column), so the figure is still one fabric run
+    per policy.
+    """
     sc = _scale()
+    scales = (1.0, 2.0, 4.0, 8.0)
+    cfg = SimConfig(workload=WorkloadSpec(n_jobs=sc["n_jobs"]),
+                    s=4.0, max_preemptions=1)
+    jobs = {gp: _gen_workloads(
+                dataclasses.replace(cfg, workload=WorkloadSpec(
+                    n_jobs=sc["n_jobs"], gp_scale=gp)),
+                sc["n_workloads"])
+            for gp in scales}
+    per_pol = {}
+    for pol in POLICIES:
+        trials = [(str(gp), js, 4.0, 1, cfg.seed)
+                  for gp in scales for js in jobs[gp]]
+        if pol == "fitgpp":
+            trials += [(f"{gp}|s8", js, 8.0, 1, cfg.seed)
+                       for gp in scales for js in jobs[gp]]
+        per_pol[pol] = _fabric_cells(pol, trials, cfg)
     out = {}
-    for scale in (1.0, 2.0, 4.0, 8.0):
-        row = {}
-        wl = WorkloadSpec(n_jobs=sc["n_jobs"], gp_scale=scale)
-        for pol in POLICIES:
-            cfg = SimConfig(workload=wl, s=4.0, max_preemptions=1)
-            jobs = _gen_workloads(cfg, sc["n_workloads"])
-            row[pol] = _run_policy(cfg, jobs, pol)
-        for s in (8.0,):
-            cfg = SimConfig(workload=wl, s=s, max_preemptions=1)
-            jobs = _gen_workloads(cfg, sc["n_workloads"])
-            row[f"fitgpp_s{s:g}"] = _run_policy(cfg, jobs, "fitgpp")
-        out[str(scale)] = row
+    for gp in scales:
+        row = {pol: per_pol[pol][str(gp)] for pol in POLICIES}
+        row["fitgpp_s8"] = per_pol["fitgpp"][f"{gp}|s8"]
+        out[str(gp)] = row
     return out
 
 

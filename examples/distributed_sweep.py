@@ -1,18 +1,21 @@
-"""Fig. 4 sensitivity sweep on the JAX simulation engine.
+"""Fig. 4 sensitivity sweep on the device-parallel sweep fabric.
 
 Every (s, seed) trial is an independent pure-JAX simulation
-(lax.while_loop), so the sweep vmaps and — on a real mesh — shards over
-the ``data`` axis (core/sweep.py). On this CPU container it runs on the
-1-device local mesh; on a pod the same code spreads 256 trials across
-256 chips.
+(lax.while_loop), so the whole grid flattens into ONE trial table that
+the fabric ``shard_map``s over the local device mesh (DESIGN.md §11).
+On this CPU container that is the single-device vmap; under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (or on a real
+multi-chip host) the same call spreads the trials across every device,
+bit-identically.
 
 Run:  PYTHONPATH=src python examples/distributed_sweep.py
 """
+import jax
 import numpy as np
 
 from repro.configs.cluster import SimConfig, WorkloadSpec
 from repro.core import sweep
-from repro.launch.mesh import make_local_mesh
+from repro.launch.mesh import mesh_for_sweep
 
 
 def main():
@@ -20,10 +23,13 @@ def main():
                     policy="fitgpp", max_preemptions=1)
     s_vals = [0.0, 1.0, 2.0, 4.0, 8.0]
     seeds = [0, 1]
-    mesh = make_local_mesh()
+    n_trials = len(s_vals) * len(seeds)
+    mesh = mesh_for_sweep(n_trials)          # None => single-device vmap
+    n_dev = 1 if mesh is None else mesh.devices.size
     out = sweep.sensitivity_grid(cfg, 1024, s_vals, seeds, mesh=mesh)
 
-    print("Fig. 4 — FitGpp sensitivity to s (GP weight), gp_scale=2.0")
+    print(f"Fig. 4 — FitGpp sensitivity to s (GP weight), gp_scale=2.0 "
+          f"({n_trials} trials on {n_dev}/{len(jax.devices())} devices)")
     print(f"{'s':>5s} | {'TE p95':>8s} {'TE p99':>8s} | {'BE p50':>8s} "
           f"| {'interval p50':>12s}")
     for i, s in enumerate(s_vals):

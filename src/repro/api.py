@@ -22,9 +22,13 @@ produced. Both engines share the tick/event mode switch
 policies through their registered kernel on the JAX engine.
 
 Batched studies go through the same module: :func:`sensitivity_grid`
-and :func:`scenario_sweep` re-export the mesh-distributed vmapped
-sweeps (``core/sweep.py``). The scenarios CLI, the engine benchmark
-and the examples all sit on this facade. DESIGN.md §6.
+and :func:`scenario_sweep` re-export the classic sweep wrappers
+(``core/sweep.py``), and :func:`run_table` / :func:`build_table` /
+:func:`pooled_tables` expose the device-parallel sweep fabric
+underneath them (``core/sweep_fabric.py``, DESIGN.md §11) — trial
+tables ``shard_map``-ed over ``mesh_for_sweep``'s 1-D trial mesh,
+bit-exact with the single-device vmap. The scenarios CLI, the engine
+benchmark and the examples all sit on this facade. DESIGN.md §6.
 """
 from __future__ import annotations
 
@@ -38,17 +42,21 @@ from repro.core import metrics, sim_jax, simulator
 from repro.core.policy_registry import (all_policies, get_policy, make,
                                         policy_names, score_backend_names)
 from repro.core.sweep import run_sweep, scenario_sweep, sensitivity_grid
+from repro.core.sweep_fabric import (SweepResult, TrialTable, build_table,
+                                     pooled_tables, run_table)
 from repro.core.types import JobSet
+from repro.launch.mesh import mesh_for_sweep
 
 ENGINES = ("reference", "jax")
 DEFAULT_SCENARIO = "paper-synthetic"
 
 __all__ = [
-    "DEFAULT_SCENARIO", "ENGINES", "ExperimentResult", "all_policies",
-    "compare_policies", "get_policy", "make", "make_config",
-    "policy_names", "run_experiment", "run_stream", "run_sweep",
-    "scenario_names", "scenario_sweep", "score_backend_names",
-    "sensitivity_grid",
+    "DEFAULT_SCENARIO", "ENGINES", "ExperimentResult", "SweepResult",
+    "TrialTable", "all_policies", "build_table", "compare_policies",
+    "get_policy", "make", "make_config", "mesh_for_sweep",
+    "policy_names", "pooled_tables", "run_experiment", "run_stream",
+    "run_sweep", "run_table", "scenario_names", "scenario_sweep",
+    "score_backend_names", "sensitivity_grid",
 ]
 
 scenario_names = scenarios.scenario_names

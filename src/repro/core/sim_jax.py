@@ -1451,9 +1451,7 @@ def _run_loop(cfg: SimConfig, jobs: Jobs, st: State, max_ticks: int,
     return st
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "time_mode", "trace",
-                                             "trace_capacity"))
-def _run_jit_full(cfg: SimConfig, jobs: Jobs, seed, time_mode: str,
+def _run_jit_impl(cfg: SimConfig, jobs: Jobs, seed, time_mode: str,
                   trace: bool = False, trace_capacity: int = 0) -> State:
     st = init_state(jobs, cfg.cluster.n_nodes, cfg.cluster.node.as_tuple(),
                     seed, trace_capacity=trace_capacity if trace else 0)
@@ -1461,9 +1459,27 @@ def _run_jit_full(cfg: SimConfig, jobs: Jobs, seed, time_mode: str,
                      trace=trace)
 
 
+_JIT_STATICS = ("cfg", "time_mode", "trace", "trace_capacity")
+_run_jit_full = jax.jit(_run_jit_impl, static_argnames=_JIT_STATICS)
+# Same program with the Jobs buffers DONATED into the jit: the sweep
+# fabric's memory-flat entry. Safe by construction — init_state
+# force-copies ``exec_total`` (the one State field derived from a Jobs
+# array), so no live output aliases a donated input.
+_run_jit_donated = jax.jit(_run_jit_impl, static_argnames=_JIT_STATICS,
+                           donate_argnums=(1,))
+
+
+def donation_supported() -> bool:
+    """Whether the active backend implements input-output aliasing
+    (gpu/tpu). The CPU backend silently keeps its copies (XLA warns
+    and ignores the donation), so auto-donating callers — the sweep
+    fabric — skip it there."""
+    return jax.default_backend() in ("gpu", "tpu")
+
+
 def run_jit(cfg: SimConfig, jobs: Jobs, seed: int = 0,
             time_mode: str = None, trace: bool = False,
-            trace_capacity=None) -> State:
+            trace_capacity=None, donate: bool = False) -> State:
     """Jitted :func:`run`. The initial State is built INSIDE the jit
     (``seed`` is traced, so sweeping seeds reuses the compilation), so
     no State buffer ever crosses the jit boundary inward: every ~20
@@ -1472,12 +1488,19 @@ def run_jit(cfg: SimConfig, jobs: Jobs, seed: int = 0,
     State buffers end-to-end — the stronger form of the buffer
     donation this entry point used to do. ``trace``/``trace_capacity``
     are jit-static: toggling tracing recompiles (the traced program is
-    a different program), sweeping seeds does not."""
+    a different program), sweeping seeds does not.
+
+    ``donate=True`` additionally donates the ``jobs`` buffers into the
+    program (the caller's Jobs are CONSUMED; re-running them is an
+    error on backends that implement aliasing). Results are identical
+    either way — donation only changes buffer ownership. On CPU the
+    donation is a no-op (see :func:`donation_supported`)."""
     if not (isinstance(seed, jax.Array) and jnp.issubdtype(
             seed.dtype, jax.dtypes.prng_key)):
         seed = jnp.asarray(seed, jnp.int32)
     cap = resolve_trace_capacity(cfg, jobs, trace_capacity) if trace else 0
-    return _run_jit_full(cfg, jobs, seed, time_mode, trace, cap)
+    fn = _run_jit_donated if donate else _run_jit_full
+    return fn(cfg, jobs, seed, time_mode, trace, cap)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "time_mode", "trace"))

@@ -1,161 +1,72 @@
-"""Mesh-distributed simulation sweeps.
+"""Mesh-distributed simulation sweeps — thin wrappers over the
+device-parallel sweep fabric (``core/sweep_fabric.py``, DESIGN.md §11).
 
 The sensitivity studies (Figs. 4-7) are hundreds of independent
 simulations (policy × s × P × workload seed). Each one is a pure-JAX
 program (core/sim_jax.py, victim selection registry-dispatched per
 ``cfg.policy`` — any registered dual-backend policy sweeps with zero
-edits here), so a sweep is a vmapped batch that ``shard_map``s over
-the ``data`` axis of the production mesh — the scheduler study itself
-runs as a multi-pod data-parallel workload.
+edits here), so a sweep is a trial table that the fabric
+``shard_map``s over the local device mesh (``mesh_for_sweep``) —
+sentinel-padded for uneven grids, bit-identical to the single-device
+vmap, compiled once per config however many times the seeds change.
 
-Callers reach these through the ``repro.api`` facade
-(``api.sensitivity_grid`` / ``api.scenario_sweep`` / ``api.run_sweep``,
-DESIGN.md §6), alongside single-run ``api.run_experiment``.
+These wrappers keep the classic dict-of-arrays return shape; new code
+wanting per-job pooling or explicit meshes should use
+``sweep_fabric.run_table`` directly. Callers reach both through the
+``repro.api`` facade (``api.sensitivity_grid`` / ``api.scenario_sweep``
+/ ``api.run_sweep`` / ``api.run_table``, DESIGN.md §6).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs.cluster import SimConfig
-from repro.core import sim_jax, workload
-from repro.core.types import JobSet
+from repro.core import sweep_fabric, workload
+from repro.core.sweep_fabric import (_masked_frac, _masked_pct,  # noqa: F401
+                                     pad_jobs, stack_jobsets)
+from repro.core.sweep_fabric import _trial_percentiles as _trial_result  # noqa: F401,E501
 
 
-def pad_jobs(jobs: sim_jax.Jobs, n_max: int) -> sim_jax.Jobs:
-    """Pad a Jobs struct to ``n_max`` rows with sentinel jobs.
-
-    Sentinels carry zero demand, unit execution, ``width=1`` and
-    ``valid=False``; ``sim_jax.init_state`` births them DONE so they
-    never arrive, queue, run or appear as preemption candidates, and
-    every percentile in ``_trial_result`` masks them out (the
-    sentinel-padding contract, DESIGN.md §5). Real rows keep their
-    gang widths through the padding."""
-    pad = n_max - jobs.submit.shape[0]
-    if pad < 0:
-        raise ValueError(f"cannot pad {jobs.submit.shape[0]} jobs "
-                         f"down to {n_max}")
-    if pad == 0:
-        return jobs
-
-    def ext(x, fill):
-        tail = jnp.full((pad,) + x.shape[1:], fill, x.dtype)
-        return jnp.concatenate([x, tail])
-
-    return sim_jax.Jobs(
-        submit=ext(jobs.submit, 0), exec_total=ext(jobs.exec_total, 1),
-        demand=ext(jobs.demand, 0.0), is_te=ext(jobs.is_te, False),
-        gp=ext(jobs.gp, 0), width=ext(jobs.width, 1),
-        valid=ext(jobs.valid, False))
-
-
-def stack_jobsets(jobsets: Sequence[JobSet]) -> sim_jax.Jobs:
-    """Stack workloads over a leading trial axis.
-
-    Equal-``n`` jobsets stack directly (the original fast path). Ragged
-    collections — heterogeneous scenarios, trace replays — are padded to
-    the max ``n`` with masked sentinel jobs (``pad_jobs``), so one
-    vmapped/shard_mapped sweep can span them all. Gang widths
-    (``JobSet.n_nodes`` → ``Jobs.width``) ride through both paths;
-    sentinel rows stay width-1."""
-    js = [sim_jax.jobs_from_jobset(j) for j in jobsets]
-    n_max = max(j.submit.shape[0] for j in js)
-    if any(j.submit.shape[0] != n_max for j in js):
-        js = [pad_jobs(j, n_max) for j in js]
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *js)
-
-
-def _masked_pct(vals, mask, ps):
-    """Stacked percentiles of ``vals[mask]`` — explicit ``nan`` when
-    the mask selects nothing (a trial with zero valid TE or BE jobs
-    after sentinel padding): the trial then drops out of every
-    nan-aware pooled table instead of contributing garbage."""
-    v = jnp.where(mask, vals, jnp.nan)
-    some = mask.any()
-    return jnp.stack([jnp.where(some, jnp.nanpercentile(v, p), jnp.nan)
-                      for p in ps])
-
-
-def _masked_frac(mask, hit):
-    """Fraction of ``mask`` rows with ``hit`` set; nan for an empty
-    class (same NaN-safety contract as :func:`_masked_pct`)."""
-    frac = jnp.nanmean(jnp.where(mask, hit.astype(jnp.float32), jnp.nan))
-    return jnp.where(mask.any(), frac, jnp.nan)
-
-
-def _trial_result(cfg: SimConfig, jobs: sim_jax.Jobs, s, P_, seed,
-                  time_mode: Optional[str] = None):
-    st = sim_jax.run(cfg, jobs, seed=seed, s=s, P=P_, time_mode=time_mode)
-    sd = sim_jax.slowdown(jobs, st)
-    te = jobs.is_te & jobs.valid
-
-    iv = (st.last_resume - st.last_signal).astype(jnp.float32)
-    iv_mask = (st.last_resume >= 0) & jobs.valid
-    pc = st.preempt_count
-    be = ~jobs.is_te & jobs.valid
-    return {
-        "te_slowdown": _masked_pct(sd, te, (50, 95, 99)),
-        "be_slowdown": _masked_pct(sd, be, (50, 95, 99)),
-        "intervals": _masked_pct(iv, iv_mask, (50, 75, 95, 99)),
-        "preempted_frac": _masked_frac(be, pc > 0),
-        "preempt_1": _masked_frac(be, pc == 1),
-        "preempt_2": _masked_frac(be, pc == 2),
-        "preempt_3plus": _masked_frac(be, pc >= 3),
-        "makespan": st.t,
-    }
-
-
-def run_sweep(cfg: SimConfig, jobs: sim_jax.Jobs, s_vals, P_vals, seeds,
+def run_sweep(cfg: SimConfig, jobs, s_vals, P_vals, seeds,
               mesh: Optional[Mesh] = None,
               trial_axes: Sequence[str] = ("data",),
-              time_mode: Optional[str] = None) -> Dict[str, np.ndarray]:
+              time_mode: Optional[str] = None,
+              devices: Optional[int] = None) -> Dict[str, np.ndarray]:
     """Run T independent trials; trial t uses jobs[t], s_vals[t], ...
 
-    With ``mesh``, trials are sharded over ``trial_axes`` via device_put
-    of the batched inputs (pjit partitions the vmapped program); without,
-    they run locally. T must be a multiple of the mesh axis size.
-    ``time_mode`` (default ``cfg.time_mode``) selects tick-stepped vs
-    event-compressed advancement; the event jump is computed inside the
-    vmapped program, so each trial lane fast-forwards at its own pace
-    (ragged padding and heterogeneous horizons included) with results
-    bit-identical to tick mode.
+    A thin wrapper over ``sweep_fabric.run_table``: the trials shard
+    over ``mesh``'s data axis when given, else over
+    ``mesh_for_sweep(T, devices)`` (every local device by default —
+    single-device runs behave exactly as before; under a forced or
+    real multi-device runtime the same call scales out, sentinel-
+    padded when T doesn't divide the device count). ``time_mode``
+    (default ``cfg.time_mode``) selects tick-stepped vs
+    event-compressed advancement; results are bit-identical across
+    meshes and modes. The caller keeps ownership of ``jobs`` (no
+    donation through this wrapper). ``trial_axes`` is honored via the
+    mesh's data axis (``sharding.trial_axis``).
     """
-    s_vals = jnp.asarray(s_vals, jnp.float32)
-    P_vals = jnp.asarray(P_vals, jnp.int32)
-    seeds = jnp.asarray(seeds, jnp.uint32)
-
-    def one(jobs_t, s, P_, seed):
-        return _trial_result(cfg, jobs_t, s, P_, jax.random.key(seed),
-                             time_mode=time_mode)
-
-    batched = jax.vmap(one)
-    if mesh is not None:
-        spec = P(*trial_axes)
-        shard = NamedSharding(mesh, spec)
-        jobs = jax.tree.map(
-            lambda x: jax.device_put(x, NamedSharding(
-                mesh, P(*(trial_axes + (None,) * (x.ndim - 1))))), jobs)
-        s_vals = jax.device_put(s_vals, shard)
-        P_vals = jax.device_put(P_vals, shard)
-        seeds = jax.device_put(seeds, shard)
-        with mesh:
-            out = jax.jit(batched)(jobs, s_vals, P_vals, seeds)
-    else:
-        out = jax.jit(batched)(jobs, s_vals, P_vals, seeds)
-    return jax.tree.map(np.asarray, out)
+    table = sweep_fabric.table_from_stacked(jobs, s_vals, P_vals, seeds)
+    res = sweep_fabric.run_table(cfg, table, mesh=mesh, devices=devices,
+                                 time_mode=time_mode, donate=False)
+    return res.stats
 
 
 def sensitivity_grid(cfg: SimConfig, n_jobs: int, s_vals: Sequence[float],
                      seeds: Sequence[int],
                      mesh: Optional[Mesh] = None,
-                     time_mode: Optional[str] = None
+                     time_mode: Optional[str] = None,
+                     devices: Optional[int] = None
                      ) -> Dict[str, np.ndarray]:
-    """Fig. 4-style grid: all (s, seed) pairs on shared per-seed workloads.
+    """Fig. 4-style grid: all (s, seed) pairs on shared per-seed
+    workloads, flattened into ONE fabric table (the whole s-axis is
+    traced, so the grid compiles once per config).
 
     Returns arrays of shape (len(s_vals), len(seeds), ...).
     """
@@ -171,19 +82,21 @@ def sensitivity_grid(cfg: SimConfig, n_jobs: int, s_vals: Sequence[float],
     P_flat = np.full(ns * nt, base.max_preemptions, np.int32)
     seed_flat = np.tile(np.asarray(seeds, np.uint32), ns)
     out = run_sweep(base, rep, s_flat, P_flat, seed_flat, mesh=mesh,
-                    time_mode=time_mode)
+                    time_mode=time_mode, devices=devices)
     return jax.tree.map(lambda x: x.reshape((ns, nt) + x.shape[1:]), out)
 
 
 def scenario_sweep(cfg: SimConfig, names: Sequence[str],
                    seeds: Sequence[int],
                    mesh: Optional[Mesh] = None,
-                   time_mode: Optional[str] = None
+                   time_mode: Optional[str] = None,
+                   devices: Optional[int] = None
                    ) -> Dict[str, np.ndarray]:
     """Ragged multi-scenario grid: all (scenario, seed) trials in ONE
-    vmapped batch, even when the scenarios produce different job counts
+    fabric batch, even when the scenarios produce different job counts
     (sentinel padding, ``stack_jobsets``) or gang (multi-node) jobs —
-    widths ride through the padding (DESIGN.md §7).
+    widths ride through the padding (DESIGN.md §7). ``devices`` caps
+    the trial mesh (the CLI's ``sweep --devices``).
 
     Returns arrays of shape (len(names), len(seeds), ...).
     """
@@ -198,7 +111,7 @@ def scenario_sweep(cfg: SimConfig, names: Sequence[str],
     P_flat = np.full(nn * nt, cfg.max_preemptions, np.int32)
     seed_flat = np.tile(np.asarray(seeds, np.uint32), nn)
     out = run_sweep(cfg, stacked, s_flat, P_flat, seed_flat, mesh=mesh,
-                    time_mode=time_mode)
+                    time_mode=time_mode, devices=devices)
     return jax.tree.map(lambda x: x.reshape((nn, nt) + x.shape[1:]), out)
 
 

@@ -9,7 +9,7 @@
         [--stream [--capacity N]]
     PYTHONPATH=src python -m repro.scenarios sweep NAME [NAME ...]
         [--seeds 0,1] [--n-jobs 256] [--policy fitgpp]
-        [--mode event|tick]
+        [--mode event|tick] [--devices N] [--mesh auto|off]
 
 ``run`` replays one scenario through ``repro.api.run_experiment`` on
 either engine (any registered policy — the choices come from the
@@ -153,10 +153,17 @@ def cmd_run(args) -> None:
 
 
 def cmd_sweep(args) -> None:
+    import jax
     seeds = [int(s) for s in args.seeds.split(",")]
-    out = api.scenario_sweep(_cfg(args), args.names, seeds)
+    devices = 1 if args.mesh == "off" else args.devices
+    out = api.scenario_sweep(_cfg(args), args.names, seeds,
+                             devices=devices)
+    n_trials = len(args.names) * len(seeds)
+    mesh = api.mesh_for_sweep(n_trials, devices=devices)
+    n_dev = 1 if mesh is None else mesh.devices.size
     print(f"ragged sweep: {len(args.names)} scenarios x {len(seeds)} "
-          f"seeds, policy={args.policy} (seed-averaged)")
+          f"seeds, policy={args.policy} (seed-averaged), "
+          f"{n_dev}/{len(jax.devices())} devices")
     hdr = f"{'scenario':22s} | {'TE p50':>8s} {'TE p95':>8s} " \
           f"| {'BE p50':>8s} {'BE p95':>8s} | {'preempted':>9s}"
     print(hdr + "\n" + "-" * len(hdr))
@@ -236,6 +243,13 @@ def main(argv=None) -> None:
     p.add_argument("--mode", default="event", choices=("event", "tick"),
                    help="JAX-engine time advancement inside the vmapped "
                         "sweep (per-lane event jumps)")
+    p.add_argument("--devices", type=int, default=None,
+                   help="cap the sweep-fabric trial mesh at N devices "
+                        "(default: every local device; loud fallback "
+                        "when fewer are present)")
+    p.add_argument("--mesh", default="auto", choices=("auto", "off"),
+                   help="'off' forces the single-device vmap "
+                        "(bit-identical to the sharded run)")
     p.set_defaults(fn=cmd_sweep)
 
     args = ap.parse_args(argv)

@@ -1,6 +1,10 @@
 from repro.sharding.plans import (arch_plan, batch_sharding, cache_sharding,
                                   param_sharding, spec_from_logical,
                                   train_state_sharding)
+from repro.sharding.trials import (put_trial_sharded, trial_axis,
+                                   trial_sharding, trial_spec)
 
 __all__ = ["arch_plan", "param_sharding", "batch_sharding", "cache_sharding",
-           "train_state_sharding", "spec_from_logical"]
+           "train_state_sharding", "spec_from_logical",
+           "put_trial_sharded", "trial_axis", "trial_sharding",
+           "trial_spec"]

@@ -1,0 +1,38 @@
+"""Trial-axis sharding for the sweep fabric (DESIGN.md §11).
+
+The sweep fabric's batches are embarrassingly parallel over the
+leading TRIAL axis — stacked ``Jobs`` leaves, per-trial ``s``/``P``/
+``seed`` vectors and every per-trial summary. These helpers pin that
+convention down in one place: shard dimension 0 over the mesh's data
+axis, replicate everything else. Model-parallel layouts for the
+training stack live next door in ``sharding.plans``.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def trial_axis(mesh: Mesh) -> str:
+    """The mesh axis trials shard over: ``"data"`` when present (the
+    production meshes), else the mesh's first axis (the 1-D sweep
+    meshes from ``mesh_for_sweep``)."""
+    return "data" if "data" in mesh.axis_names else mesh.axis_names[0]
+
+
+def trial_spec(mesh: Mesh) -> PartitionSpec:
+    """PartitionSpec sharding the leading trial dimension only —
+    trailing (per-job) dimensions stay replicated within a shard."""
+    return PartitionSpec(trial_axis(mesh))
+
+
+def trial_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, trial_spec(mesh))
+
+
+def put_trial_sharded(mesh: Mesh, tree):
+    """``device_put`` every leaf of ``tree`` with its leading (trial)
+    axis sharded over the mesh — the explicit placement keeps jit from
+    first replicating the full table onto every device."""
+    shard = trial_sharding(mesh)
+    return jax.tree.map(lambda x: jax.device_put(x, shard), tree)
